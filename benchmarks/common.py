@@ -1,0 +1,247 @@
+"""Shared benchmark machinery for the per-table harnesses.
+
+Every benchmarks/table*.py reproduces one paper table at CPU-feasible scale:
+the paper's VGG-16/ResNet-18 on CIFAR become width-reduced versions of the
+exact same topologies on a deterministic synthetic "confidential" dataset
+(data/pipeline.ClassificationPipeline — prototype+noise classes, so accuracy
+behaves like a real task: the teacher trains to high accuracy, pruning hurts,
+masked retraining recovers).
+
+Scale knobs: REPRO_BENCH_FAST=1 shrinks iteration counts ~8x (CI smoke);
+REPRO_BENCH_SCALE=<float> scales iteration counts for deeper runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    PruneConfig,
+    PrivacyPreservingPruner,
+    admm_task_prune,
+    compression_rate,
+    cross_entropy,
+    greedy_prune,
+)
+from repro.core.retrain import retrain
+from repro.data import ClassificationPipeline, DataConfig
+from repro.models.cnn import resnet18, resnet50_basic, vgg16
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# scale control
+# ---------------------------------------------------------------------------
+
+def fast_mode() -> bool:
+    return os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+
+def scale() -> float:
+    s = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    return s * (0.125 if fast_mode() else 1.0)
+
+
+def scaled(n: int, lo: int = 2) -> int:
+    return max(lo, int(round(n * scale())))
+
+
+# ---------------------------------------------------------------------------
+# models + data at bench scale
+# ---------------------------------------------------------------------------
+
+IMAGE_HWC = (16, 16, 3)
+
+
+def bench_model(name: str, num_classes: int = 10):
+    """Width-reduced paper topologies (exact layer plans, smaller channels)."""
+    if name == "vgg16":
+        return vgg16(num_classes, width_mult=0.125, image_hwc=IMAGE_HWC)
+    if name == "resnet18":
+        return resnet18(num_classes, width_mult=0.125, image_hwc=IMAGE_HWC)
+    if name == "resnet50":
+        return resnet50_basic(num_classes, width_mult=0.125, image_hwc=IMAGE_HWC)
+    raise ValueError(name)
+
+
+def confidential_data(num_classes: int = 10, batch: int = 64,
+                      seed: int = 7) -> ClassificationPipeline:
+    return ClassificationPipeline(
+        DataConfig(kind="classification", num_classes=num_classes,
+                   global_batch=batch, image_hwc=IMAGE_HWC, seed=seed),
+        noise=0.35,
+    )
+
+
+def eval_accuracy(model, params, pipe: ClassificationPipeline,
+                  batches: int = 8) -> float:
+    apply = jax.jit(model.apply)
+    correct = total = 0
+    for i in range(batches):
+        x, y = pipe.batch_at(10_000_019 + i)     # held-out step indices
+        pred = jnp.argmax(apply(params, x), axis=-1)
+        correct += int(jnp.sum(pred == y))
+        total += int(y.shape[0])
+    return correct / max(total, 1)
+
+
+def train_teacher(model, pipe: ClassificationPipeline, steps: int,
+                  lr: float = 3e-3, seed: int = 0):
+    """The CLIENT trains the pre-trained model on her confidential data."""
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw(lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(p, s, batch):
+        x, y = batch
+
+        def loss_fn(q):
+            return cross_entropy(model.apply(q, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        updates, s = opt.update(grads, s, p)
+        p = jax.tree.map(lambda a, u: (a + u).astype(a.dtype), p, updates)
+        return p, s, loss
+
+    it = iter(pipe)
+    for _ in range(steps):
+        params, opt_state, _ = step_fn(params, opt_state, next(it))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# the three pruning methods under comparison (paper Tables I/V)
+# ---------------------------------------------------------------------------
+
+def prune_privacy_preserving(model, teacher_params, config: PruneConfig,
+                             seed: int = 1):
+    """The paper's method: ADMM on randomly generated synthetic data."""
+    pruner = PrivacyPreservingPruner(model, config)
+    return pruner.run(jax.random.PRNGKey(seed), teacher_params)
+
+
+def prune_admm_traditional(model, teacher_params, config: PruneConfig,
+                           pipe: ClassificationPipeline, seed: int = 1):
+    """ADMM† baseline: same machinery, REAL confidential data (no privacy)."""
+    return admm_task_prune(
+        jax.random.PRNGKey(seed), teacher_params, model.apply, iter(pipe),
+        config,
+    )
+
+
+def prune_greedy(model, teacher_params, config: PruneConfig):
+    """"Uniform" magnitude baseline (Table V): one-shot projection."""
+    del model
+    return greedy_prune(teacher_params, config)
+
+
+def masked_retrain(model, result, pipe: ClassificationPipeline, steps: int,
+                   lr: float = 3e-3):
+    """CLIENT-side retraining with the mask function (paper §III-B)."""
+    params, _hist = retrain(
+        jax.random.PRNGKey(2), result.params, result.masks,
+        model.apply, cross_entropy, adamw(lr), iter(pipe), steps,
+    )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# a full table row: method × scheme × compression rate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Row:
+    table: str
+    network: str
+    scheme: str
+    method: str
+    comp_rate: float
+    base_acc: float
+    prune_acc: float
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def acc_loss(self) -> float:
+        return self.base_acc - self.prune_acc
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["acc_loss"] = self.acc_loss
+        return d
+
+
+def run_method(
+    *,
+    table: str,
+    network: str,
+    model,
+    teacher_params,
+    base_acc: float,
+    pipe: ClassificationPipeline,
+    method: str,
+    config: PruneConfig,
+    retrain_steps: int,
+) -> Row:
+    t0 = time.perf_counter()
+    if method == "privacy_preserving":
+        result = prune_privacy_preserving(model, teacher_params, config)
+    elif method == "admm_traditional":
+        result = prune_admm_traditional(model, teacher_params, config, pipe)
+    elif method == "greedy":
+        result = prune_greedy(model, teacher_params, config)
+    else:
+        raise ValueError(method)
+    prune_secs = time.perf_counter() - t0
+
+    retrained = masked_retrain(model, result, pipe, retrain_steps)
+    acc = eval_accuracy(model, retrained, pipe)
+    rate = compression_rate(result.masks)
+    return Row(
+        table=table, network=network, scheme=config.scheme, method=method,
+        comp_rate=rate, base_acc=base_acc, prune_acc=acc,
+        extra={
+            "alpha": config.alpha,
+            "prune_seconds": round(prune_secs, 2),
+            "sec_per_iter": round(result.seconds_per_iter, 4),
+            "retrain_steps": retrain_steps,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "experiments", "bench")
+
+
+def emit(table: str, rows: List[Row] | List[Dict[str, Any]]) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    recs = [r.as_dict() if isinstance(r, Row) else r for r in rows]
+    path = os.path.join(OUT_DIR, f"{table}.json")
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=1)
+    if not recs:
+        return
+    cols = list(recs[0].keys())
+    cols = [c for c in cols if c != "extra"]
+    print("\n== " + table + " " + "=" * max(0, 66 - len(table)))
+    print(" | ".join(f"{c:>18s}" for c in cols))
+    for r in recs:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                cells.append(f"{v:>18.4f}")
+            else:
+                cells.append(f"{str(v):>18s}")
+        print(" | ".join(cells))

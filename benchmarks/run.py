@@ -1,0 +1,73 @@
+"""Benchmark harness entry point — one sub-benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run                 # all tables
+    PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+    REPRO_BENCH_FAST=1 PYTHONPATH=src python -m benchmarks.run   # CI smoke
+
+Artifacts land in experiments/bench/<table>.json; a combined summary is
+printed and written to experiments/bench/summary.json.
+
+Paper-table map (DESIGN.md §6):
+    table1  — CIFAR-10 4-scheme grid, ADMM† vs privacy-preserving
+    table2  — CIFAR-100-style pattern pruning @ 8/12/16x
+    table4  — problem (3) layer-wise vs problem (2) whole-model (+runtime)
+    table5  — greedy ("Uniform") vs ADMM on synthetic data
+    fig3    — sparse kernel acceleration (CPU measured + TPU roofline est.)
+    (table3 — ImageNet ResNet-18 — is covered by the scheme sweep of
+     table1/table2 at matching compression rates; no ImageNet on the box.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: table1,table2,table4,table5,fig3")
+    args = ap.parse_args()
+    want = None if args.only == "all" else set(args.only.split(","))
+
+    from benchmarks import (
+        common,
+        fig3_kernels,
+        table1_schemes,
+        table2_pattern,
+        table4_formulations,
+        table5_greedy,
+    )
+
+    suites = {
+        "table1": table1_schemes.run,
+        "table2": table2_pattern.run,
+        "table4": table4_formulations.run,
+        "table5": table5_greedy.run,
+        "fig3": fig3_kernels.run,
+    }
+
+    summary = {}
+    for name, fn in suites.items():
+        if want is not None and name not in want:
+            continue
+        print(f"\n### {name} " + "#" * (70 - len(name)))
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        summary[name] = {
+            "rows": len(rows),
+            "seconds": round(dt, 1),
+        }
+        print(f"### {name} done: {len(rows)} rows in {dt:.1f}s")
+
+    os.makedirs(common.OUT_DIR, exist_ok=True)
+    with open(os.path.join(common.OUT_DIR, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print("\nbenchmark summary:", json.dumps(summary))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Table I — CIFAR-10: all four schemes, ADMM† vs Privacy-Preserving.
+
+CPU-feasible reproduction: exact VGG-16 / ResNet-18 layer plans at reduced
+width on the deterministic synthetic "confidential" dataset. The claim under
+test is the paper's central one — privacy-preserving pruning (synthetic data
+only) matches traditional ADMM† (real data) in compression × accuracy.
+
+Scheme × rate grid mirrors the paper:
+  irregular 16×, column 6×, filter 4× (ResNet) / 2.3× (VGG), pattern 16×.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.core import DEFAULT_EXCLUDE, PruneConfig
+
+from benchmarks import common
+from benchmarks.common import Row, scaled
+
+EXCLUDE = tuple(DEFAULT_EXCLUDE) + (r".*head.*",)   # CONV comp-rate only
+
+
+def _config(scheme: str, rate: float) -> PruneConfig:
+    return PruneConfig(
+        scheme=scheme,
+        alpha=1.0 / rate,
+        exclude=EXCLUDE,
+        iterations=scaled(120, lo=8),
+        batch_size=32,
+        lr=1e-3,
+        rho_init=1e-4,
+        rho_every_iters=max(scaled(120, lo=8) // 3, 1),
+        rho_mult=10.0,
+        rho_max=1e-1,
+    )
+
+
+# ResNet-18 carries the paper's rates unchanged; the width-0.125 VGG has
+# ~1/64 the parameters of the paper's VGG-16, so its irregular/pattern rates
+# are halved (16->8x) to sit at the same relative redundancy point — same
+# convention as table2 (the mapping is recorded in EXPERIMENTS.md).
+GRID = {
+    "resnet18": [("irregular", 16.0), ("column", 6.0), ("filter", 4.0),
+                 ("pattern", 16.0)],
+    "vgg16": [("irregular", 8.0), ("column", 6.0), ("filter", 2.3),
+              ("pattern", 8.0)],
+}
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for network, grid in GRID.items():
+        model = common.bench_model(network)
+        pipe = common.confidential_data()
+        teacher = common.train_teacher(model, pipe, steps=scaled(400, lo=40))
+        base_acc = common.eval_accuracy(model, teacher, pipe)
+        for scheme, rate in grid:
+            for method in ("admm_traditional", "privacy_preserving"):
+                rows.append(common.run_method(
+                    table="table1", network=network, model=model,
+                    teacher_params=teacher, base_acc=base_acc, pipe=pipe,
+                    method=method, config=_config(scheme, rate),
+                    retrain_steps=scaled(1000, lo=60),
+                ))
+                r = rows[-1]
+                print(f"  table1 {network:>9s} {scheme:>9s} {method:>18s}: "
+                      f"rate={r.comp_rate:.1f}x base={r.base_acc:.3f} "
+                      f"pruned={r.prune_acc:.3f}")
+    common.emit("table1_schemes", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

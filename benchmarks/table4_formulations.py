@@ -1,0 +1,78 @@
+"""Paper Table IV — problem (3) layer-wise vs problem (2) whole-model.
+
+Irregular pruning of VGG-16 at 16×, batch 64, both formulations. Reports the
+paper's two findings:
+  1. the layer-wise formulation maintains accuracy better;
+  2. its per-iteration runtime is higher (≈4.9× on the paper's GPU — here we
+     report the measured CPU ratio) because each iteration solves problem (3)
+     once per CONV layer.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, compression_rate
+
+from benchmarks import common
+from benchmarks.common import scaled
+
+EXCLUDE = tuple(DEFAULT_EXCLUDE) + (r".*head.*",)
+
+
+def _config(layerwise: bool) -> PruneConfig:
+    # 8x on the width-0.125 VGG maps to the paper's 16x on full VGG-16
+    # (same rate mapping as table1/table2 — EXPERIMENTS.md explains)
+    return PruneConfig(
+        scheme="irregular",
+        alpha=1.0 / 8.0,
+        exclude=EXCLUDE,
+        iterations=scaled(120, lo=8),
+        batch_size=64,
+        lr=1e-3,
+        rho_every_iters=max(scaled(120, lo=8) // 3, 1),
+        layerwise=layerwise,
+    )
+
+
+def run() -> List[dict]:
+    model = common.bench_model("vgg16")
+    pipe = common.confidential_data()
+    teacher = common.train_teacher(model, pipe, steps=scaled(400, lo=40))
+    base_acc = common.eval_accuracy(model, teacher, pipe)
+
+    rows = []
+    secs = {}
+    for layerwise in (True, False):
+        cfg = _config(layerwise)
+        row = common.run_method(
+            table="table4", network="vgg16", model=model,
+            teacher_params=teacher, base_acc=base_acc, pipe=pipe,
+            method="privacy_preserving", config=cfg,
+            retrain_steps=scaled(1000, lo=60),
+        )
+        name = "problem3_layerwise" if layerwise else "problem2_whole_model"
+        secs[name] = row.extra["sec_per_iter"]
+        d = row.as_dict()
+        d["formulation"] = name
+        rows.append(d)
+        print(f"  table4 {name:>22s}: base={row.base_acc:.3f} "
+              f"pruned={row.prune_acc:.3f} "
+              f"sec/iter={row.extra['sec_per_iter']:.4f}")
+
+    ratio = secs["problem3_layerwise"] / max(secs["problem2_whole_model"], 1e-9)
+    print(f"  table4 per-iter runtime ratio (3)/(2) = {ratio:.2f}x "
+          f"(paper: 4.9x on GPU)")
+    rows.append({"table": "table4", "network": "vgg16",
+                 "scheme": "irregular", "method": "runtime_ratio",
+                 "comp_rate": 16.0, "base_acc": base_acc,
+                 "prune_acc": float("nan"), "acc_loss": float("nan"),
+                 "extra": {"ratio_3_over_2": round(ratio, 3)}})
+    common.emit("table4_formulations", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

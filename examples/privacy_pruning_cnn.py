@@ -1,0 +1,132 @@
+"""End-to-end driver: the paper's complete workflow, all four schemes.
+
+    PYTHONPATH=src python examples/privacy_pruning_cnn.py \
+        --network resnet18 --scheme pattern --rate 8 --iters 120
+
+Compares three pruning paths at the chosen (scheme, rate):
+    privacy-preserving ADMM  (the paper: synthetic data only)
+    traditional ADMM†        (baseline: needs the real dataset)
+    greedy one-shot          (baseline: "Uniform" in Table V)
+then masked-retrains each on the client's confidential data and prints a
+Table-I-style comparison row for each method.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import (
+    DEFAULT_EXCLUDE,
+    PruneConfig,
+    PrivacyPreservingPruner,
+    admm_task_prune,
+    compression_rate,
+    cross_entropy,
+    greedy_prune,
+)
+from repro.core.retrain import retrain
+from repro.data import ClassificationPipeline, DataConfig
+from repro.models.cnn import resnet18, vgg16
+from repro.optim import adamw
+
+
+def build(network: str):
+    if network == "vgg16":
+        return vgg16(10, width_mult=0.125, image_hwc=(16, 16, 3))
+    if network == "resnet18":
+        return resnet18(10, width_mult=0.125, image_hwc=(16, 16, 3))
+    raise SystemExit(f"unknown network {network}")
+
+
+def accuracy(model, params, pipe, batches=4):
+    import jax.numpy as jnp
+
+    apply = jax.jit(model.apply)
+    hits = total = 0
+    for i in range(batches):
+        x, y = pipe.batch_at(90_000 + i)
+        hits += int(jnp.sum(jnp.argmax(apply(params, x), -1) == y))
+        total += int(y.shape[0])
+    return hits / total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default="resnet18",
+                    choices=["resnet18", "vgg16"])
+    ap.add_argument("--scheme", default="pattern",
+                    choices=["irregular", "filter", "column", "pattern"])
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--iters", type=int, default=120)
+    ap.add_argument("--teacher-steps", type=int, default=400)
+    ap.add_argument("--retrain-steps", type=int, default=500)
+    args = ap.parse_args()
+
+    model = build(args.network)
+    pipe = ClassificationPipeline(
+        DataConfig(kind="classification", num_classes=10, global_batch=64,
+                   image_hwc=(16, 16, 3), seed=11))
+
+    # ---- client trains the teacher -----------------------------------------
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(3e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def train_step(p, s, batch):
+        x, y = batch
+        loss, grads = jax.value_and_grad(
+            lambda q: cross_entropy(model.apply(q, x), y))(p)
+        upd, s = opt.update(grads, s, p)
+        return jax.tree.map(lambda a, u: (a + u).astype(a.dtype), p, upd), s, loss
+
+    it = iter(pipe)
+    for _ in range(args.teacher_steps):
+        params, opt_state, _ = train_step(params, opt_state, next(it))
+    base = accuracy(model, params, pipe)
+    print(f"pre-trained {args.network}: accuracy {base:.3f}")
+
+    config = PruneConfig(
+        scheme=args.scheme, alpha=1.0 / args.rate,
+        exclude=tuple(DEFAULT_EXCLUDE) + (r".*head.*",),
+        iterations=args.iters, batch_size=32, lr=1e-3,
+        rho_every_iters=max(args.iters // 3, 1),
+    )
+
+    # ---- three pruning paths ------------------------------------------------
+    jobs = {}
+    t0 = time.perf_counter()
+    jobs["privacy_preserving"] = PrivacyPreservingPruner(model, config).run(
+        jax.random.PRNGKey(1), params)
+    print(f"privacy-preserving ADMM pruning: {time.perf_counter()-t0:.1f}s "
+          f"(synthetic data only — the client's dataset was never touched)")
+
+    t0 = time.perf_counter()
+    jobs["admm_traditional"] = admm_task_prune(
+        jax.random.PRNGKey(1), params, model.apply, iter(pipe), config)
+    print(f"traditional ADMM† pruning:       {time.perf_counter()-t0:.1f}s "
+          f"(required the real dataset)")
+
+    jobs["greedy_uniform"] = greedy_prune(params, config)
+    print("greedy one-shot pruning:         0.0s (magnitude only)")
+
+    # ---- client retrains each with its mask --------------------------------
+    hdr = (f"{'method':>20s} | {'rate':>6s} | {'base':>6s} | "
+           f"{'pruned':>6s} | {'loss':>6s}")
+    print("\n" + hdr + "\n" + "-" * len(hdr))
+    for name, result in jobs.items():
+        retrained, _ = retrain(
+            jax.random.PRNGKey(2), result.params, result.masks,
+            model.apply, cross_entropy, adamw(2e-3), iter(pipe),
+            steps=args.retrain_steps,
+        )
+        acc = accuracy(model, retrained, pipe)
+        print(f"{name:>20s} | {compression_rate(result.masks):>5.1f}x | "
+              f"{base:>6.3f} | {acc:>6.3f} | {base-acc:>+6.3f}")
+
+
+if __name__ == "__main__":
+    main()

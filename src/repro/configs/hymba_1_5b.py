@@ -1,0 +1,29 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in every layer
+[arXiv:2411.13676; hf].
+
+25 attention heads × 64 (GQA kv=5) in parallel with 25 mamba heads × 64
+(d_inner = 1600 = d_model), outputs mean-fused, then SwiGLU FFN. Attention
+is sliding-window (the paper keeps 3 global layers; we model all-SWA and
+note the deviation in DESIGN.md — long-context reach comes from the SSM
+path, which is why this arch runs long_500k)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    sliding_window=2048,
+    ssm_state=16,
+    mamba_heads=25,
+    mamba_head_dim=64,
+    conv_kernel=4,
+    ffn_type="swiglu",
+    remat="full",
+)

@@ -1,0 +1,109 @@
+"""Input-shape cells and ShapeDtypeStruct input_specs for the dry-run.
+
+The assignment's 4 shapes per arch:
+    train_4k      seq 4,096  × gb 256   → lowers train_step
+    prefill_32k   seq 32,768 × gb 32    → lowers prefill (encode for audio)
+    decode_32k    seq 32,768 × gb 128   → lowers serve_step (1 token, KV=32k)
+    long_500k     seq 524,288 × gb 1    → serve_step; SSM/SWA/hybrid only
+
+Skip rules (DESIGN.md §4): long_500k skipped for pure full-attention archs;
+decode shapes skipped for encoder-only archs. ``applicable_shapes`` encodes
+them; skipped cells are REPORTED (with reason) by the dry-run, not silently
+dropped.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import build_model
+from repro.models.layers import dtype_of
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if cfg.encoder_only and shape.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid") or cfg.sliding_window is not None
+        )
+        if not sub_quadratic:
+            return "pure full-attention arch; 500k decode needs sub-quadratic attention"
+    return None
+
+
+def applicable_shapes(cfg: ModelConfig):
+    return [s for s in SHAPES.values() if skip_reason(cfg, s) is None]
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    rules=None,
+) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns {"kind": train|prefill|decode, **arrays}. With ``rules``
+    (parallel.AxisRules) the structs carry NamedShardings for the dry-run.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.param_dtype)
+
+    def batch_sharding(ndim, batch_dim=0, shape=None):
+        if rules is None:
+            return None
+        logical = [None] * ndim
+        logical[batch_dim] = "batch"
+        from repro.parallel.sharding import logical_sharding
+
+        return logical_sharding(rules, logical, shape=shape)
+
+    if shape.kind == "train":
+        if cfg.input_kind == "tokens":
+            inputs = _sds((B, S), jnp.int32, batch_sharding(2, shape=(B, S)))
+        else:
+            inputs = _sds((B, S, cfg.d_model), dt,
+                          batch_sharding(3, shape=(B, S, cfg.d_model)))
+        labels = _sds((B, S), jnp.int32, batch_sharding(2, shape=(B, S)))
+        return {"kind": "train", "batch": {"inputs": inputs, "labels": labels}}
+
+    if shape.kind == "prefill":
+        if cfg.input_kind == "tokens":
+            inputs = _sds((B, S), jnp.int32, batch_sharding(2, shape=(B, S)))
+        else:
+            inputs = _sds((B, S, cfg.d_model), dt,
+                          batch_sharding(3, shape=(B, S, cfg.d_model)))
+        return {"kind": "prefill", "inputs": inputs, "seq_len": S}
+
+    # decode: one new token against a cache of S
+    model = build_model(cfg)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    if rules is not None:
+        from repro.parallel.sharding import logical_sharding
+
+        cache_axes = model.cache_logical_axes(cache_shapes)
+        cache = jax.tree.map(
+            lambda x, ax: _sds(
+                x.shape, x.dtype, logical_sharding(rules, ax, shape=x.shape)
+            ),
+            cache_shapes, cache_axes,
+        )
+    else:
+        cache = jax.tree.map(lambda x: _sds(x.shape, x.dtype), cache_shapes)
+    if cfg.input_kind == "tokens":
+        tokens = _sds((B, 1), jnp.int32, batch_sharding(2, shape=(B, 1)))
+    else:
+        tokens = _sds((B, 1, cfg.d_model), dt,
+                      batch_sharding(3, shape=(B, 1, cfg.d_model)))
+    return {"kind": "decode", "cache": cache, "tokens": tokens}

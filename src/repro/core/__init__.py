@@ -1,0 +1,50 @@
+"""The paper's primary contribution: privacy-preserving ADMM weight pruning.
+
+Public surface:
+  projections    — Euclidean projections onto every S_n (paper §IV-D)
+  schemes        — PruneConfig / LayerSpec / project_tree
+  admm           — generic ADMM engine (primal/proximal/dual, Eqn. 7)
+  distill        — problem (2) & (3) objectives
+  pruner         — PrivacyPreservingPruner (Algorithm 1)
+  masks          — mask function utilities
+  synthetic      — random synthetic data generators (§III-B)
+  greedy         — one-shot magnitude baseline (Table V)
+  admm_traditional — ADMM† with real data (Table I)
+  retrain        — client-side masked retraining
+"""
+
+from repro.core.admm import (
+    ADMMVars,
+    admm_init,
+    admm_iteration,
+    augmented_penalty,
+    dual_step,
+    primal_residual,
+    primal_step,
+    proximal_step,
+)
+from repro.core.admm_traditional import admm_task_prune, cross_entropy
+from repro.core.distill import frobenius_distance, layerwise_loss, whole_model_loss
+from repro.core.greedy import greedy_prune
+from repro.core.masks import (
+    apply_mask,
+    compression_rate,
+    mask_from_params,
+    mask_gradients,
+    sparsity,
+)
+from repro.core.lm_adapter import LMAdapter
+from repro.core.pruner import PruneResult, PrivacyPreservingPruner, rho_schedule
+from repro.core.schemes import (
+    DEFAULT_EXCLUDE,
+    LayerSpec,
+    PruneConfig,
+    build_specs,
+    project_tree,
+)
+from repro.core.synthetic import (
+    synthetic_batch_for,
+    synthetic_embeddings,
+    synthetic_images,
+    synthetic_tokens,
+)

@@ -1,0 +1,173 @@
+"""The ADMM engine (paper §IV-C, Algorithm 1).
+
+Generic over (a) the loss — layer-wise distillation (problem 3), whole-model
+distillation (problem 2), or a task loss for the traditional ADMM† baseline —
+and (b) the projection — any scheme from ``core.projections``.
+
+ADMM iteration k (Eqn. 7):
+  Primal    W^k  := argmin_W  loss(W) + ρ/2‖W − Z^{k-1} + U^{k-1}‖²   (SGD)
+  Proximal  Z^k  := Π_{S}(W^k + U^{k-1})                              (exact)
+  Dual      U^k  := U^{k-1} + W^k − Z^k
+
+All three steps are pure jittable functions over pytrees, so they shard
+transparently under pjit: the primal SGD step is data-parallel over the
+synthetic batch, and the proximal/dual steps are elementwise/top-k on the
+(possibly TP-sharded) weights.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ADMMVars(NamedTuple):
+    """Auxiliary (Z) and dual (U) variables, congruent with prunable params."""
+
+    z: Any
+    u: Any
+
+
+def admm_init(prunable: Any) -> ADMMVars:
+    """Z^0 ← W^0, U^0 ← 0 (Algorithm 1)."""
+    z = jax.tree.map(jnp.asarray, prunable)
+    u = jax.tree.map(jnp.zeros_like, prunable)
+    return ADMMVars(z=z, u=u)
+
+
+def augmented_penalty(prunable: Any, av: ADMMVars, rho, specs: Any = None) -> jnp.ndarray:
+    """ρ/2 · Σ ‖W − Z + U‖²_F — the differentiable ADMM regularizer.
+
+    If ``specs`` is given (pytree with None for unconstrained leaves, e.g.
+    biases — paper Eqn. 8 optimizes b_n but only constrains W_n), leaves with
+    spec None contribute zero penalty.
+    """
+
+    def leaf(w, z, u):
+        return jnp.sum(
+            jnp.square(w.astype(jnp.float32) - z.astype(jnp.float32)
+                       + u.astype(jnp.float32))
+        )
+
+    if specs is None:
+        sq = jax.tree.map(leaf, prunable, av.z, av.u)
+    else:
+        from repro.core.schemes import LayerSpec  # local: avoids import cycle
+
+        sq = jax.tree.map(
+            lambda spec, w, z, u: jnp.float32(0) if spec is None else leaf(w, z, u),
+            specs, prunable, av.z, av.u,
+            is_leaf=lambda x: x is None or isinstance(x, LayerSpec),
+        )
+    total = jax.tree.reduce(jnp.add, sq, jnp.float32(0))
+    return 0.5 * rho * total
+
+
+GRAD_CLIP = 5.0     # global-norm clip for the primal SGD step
+
+
+def primal_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    prunable: Any,
+    av: ADMMVars,
+    batch: Any,
+    *,
+    lr,
+    rho,
+    specs: Any = None,
+    grad_clip: float = GRAD_CLIP,
+) -> Tuple[Any, jnp.ndarray]:
+    """One SGD step on problem (8): loss + augmented penalty.
+
+    Gradients are global-norm clipped: the layer-wise reconstruction loss on
+    un-normalized CNN activations can produce gradients that scale with the
+    activations' magnitude squared, and a fixed-lr SGD step then diverges
+    (observed with the hard pattern constraint at 16× — see EXPERIMENTS.md
+    §Paper-validation). Clipping is inert for well-conditioned steps.
+
+    Returns (updated prunable params, scalar loss before the step).
+    """
+
+    def total_loss(w):
+        return loss_fn(w, batch) + augmented_penalty(w, av, rho, specs)
+
+    loss, grads = jax.value_and_grad(total_loss)(prunable)
+    gnorm = jnp.sqrt(
+        jax.tree.reduce(
+            jnp.add,
+            jax.tree.map(
+                lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads
+            ),
+            jnp.float32(0),
+        )
+    )
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    new = jax.tree.map(
+        lambda w, g: (w.astype(jnp.float32)
+                      - lr * scale * g.astype(jnp.float32)).astype(w.dtype),
+        prunable, grads,
+    )
+    return new, loss
+
+
+def proximal_step(project_fn: Callable[[Any], Any], prunable: Any,
+                  av: ADMMVars) -> ADMMVars:
+    """Z^k := Π_S(W^k + U^{k-1}) — exact Euclidean projection (Eqn. 11)."""
+    wu = jax.tree.map(lambda w, u: w + u.astype(w.dtype), prunable, av.u)
+    z = project_fn(wu)
+    return ADMMVars(z=z, u=av.u)
+
+
+def dual_step(prunable: Any, av: ADMMVars) -> ADMMVars:
+    """U^k := U^{k-1} + W^k − Z^k."""
+    u = jax.tree.map(
+        lambda u, w, z: (u.astype(jnp.float32) + w.astype(jnp.float32)
+                         - z.astype(jnp.float32)).astype(u.dtype),
+        av.u, prunable, av.z,
+    )
+    return ADMMVars(z=av.z, u=u)
+
+
+def admm_iteration(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    project_fn: Callable[[Any], Any],
+    prunable: Any,
+    av: ADMMVars,
+    batch: Any,
+    *,
+    lr,
+    rho,
+    primal_steps: int = 1,
+    specs: Any = None,
+) -> Tuple[Any, ADMMVars, jnp.ndarray]:
+    """One full ADMM iteration (primal×primal_steps → proximal → dual)."""
+    loss = jnp.float32(0)
+    for _ in range(primal_steps):
+        prunable, loss = primal_step(
+            loss_fn, prunable, av, batch, lr=lr, rho=rho, specs=specs
+        )
+    av = proximal_step(project_fn, prunable, av)
+    av = dual_step(prunable, av)
+    return prunable, av, loss
+
+
+def primal_residual(prunable: Any, av: ADMMVars) -> jnp.ndarray:
+    """‖W − Z‖_F / ‖W‖_F — the standard ADMM convergence diagnostic."""
+    num = jax.tree.reduce(
+        jnp.add,
+        jax.tree.map(
+            lambda w, z: jnp.sum(jnp.square(w.astype(jnp.float32)
+                                            - z.astype(jnp.float32))),
+            prunable, av.z,
+        ),
+        jnp.float32(0),
+    )
+    den = jax.tree.reduce(
+        jnp.add,
+        jax.tree.map(lambda w: jnp.sum(jnp.square(w.astype(jnp.float32))),
+                     prunable),
+        jnp.float32(0),
+    )
+    return jnp.sqrt(num / jnp.maximum(den, 1e-12))

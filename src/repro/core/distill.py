@@ -1,0 +1,65 @@
+"""Distillation objectives: problem (2) whole-model and problem (3) layer-wise.
+
+"Motivated by knowledge distillation, we hope to distill the knowledge of the
+pre-trained model into the pruned model by minimizing the difference between
+the outputs of the pre-trained model (teacher) and the pruned model (student),
+given the same synthetic data as inputs." (§IV-B)
+
+Both losses use SOFT outputs (scores, not argmax labels) per the paper, with
+the Frobenius norm. Losses are mean-per-sample so batch size / data-parallel
+sharding do not change the effective learning rate.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_dist(s: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    d = s.astype(jnp.float32) - t.astype(jnp.float32)
+    return jnp.sum(jnp.square(d)) / d.shape[0]
+
+
+def frobenius_distance(student_out: Any, teacher_out: Any) -> jnp.ndarray:
+    """‖F(X) − F′(X)‖²_F, averaged over the batch (leading) dimension.
+
+    Accepts pytrees (adapters whose layer state is e.g. {"x": ..., "res": ...}
+    — ResNet residual carries): distances are summed over array leaves; None
+    leaves are skipped.
+    """
+    if isinstance(student_out, jnp.ndarray):
+        return _leaf_dist(student_out, teacher_out)
+    dists = jax.tree.map(
+        lambda s, t: None if s is None else _leaf_dist(s, t),
+        student_out, teacher_out,
+        is_leaf=lambda x: x is None,
+    )
+    leaves = [l for l in jax.tree.leaves(dists) if l is not None]
+    return sum(leaves[1:], leaves[0]) if leaves else jnp.float32(0.0)
+
+
+def whole_model_loss(
+    apply_fn: Callable[[Any, Any], jnp.ndarray],
+    params: Any,
+    batch: Any,
+    teacher_out: jnp.ndarray,
+) -> jnp.ndarray:
+    """Problem (2): distance between final soft outputs."""
+    return frobenius_distance(apply_fn(params, batch), teacher_out)
+
+
+def layerwise_loss(
+    apply_layer: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    layer_params: Any,
+    student_in: jnp.ndarray,
+    teacher_out: jnp.ndarray,
+) -> jnp.ndarray:
+    """Problem (3): ‖σ(W_n F_{:n-1}(X) + b_n) − F′_{:n}(X)‖²_F for one layer.
+
+    ``student_in`` is the output of the (already partially pruned) student's
+    previous layer; ``teacher_out`` the pre-trained model's layer-n output.
+    """
+    return frobenius_distance(apply_layer(layer_params, student_in), teacher_out)

@@ -1,0 +1,83 @@
+"""SequentialAdapter over the unified LM — pruning as a first-class feature
+for every assigned architecture.
+
+The paper prunes CNN classifiers layer-by-layer; here each transformer block
+is one prunable stage f_n (its attention + FFN/MoE/mamba projections are the
+"computation-intensive CONV-analogous" GEMMs, DESIGN.md §4). Works directly
+on the scan-stacked parameter layout: ``layer_params`` slices the leading
+layer axis, ``with_layer_params`` writes it back, so the SAME pruner code
+drives CNNs (param lists) and LMs (stacked blocks).
+
+Synthetic data per the paper's spirit (§III-B): uniform random token ids —
+no prior knowledge of the client's corpus — or N(0,1) embeddings for
+stub-frontend archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.synthetic import synthetic_embeddings, synthetic_tokens
+from repro.models.transformer import LM
+
+
+@dataclasses.dataclass
+class LMAdapter:
+    """Layer-wise pruning view of an ``LM`` (non-ssm families).
+
+    xLSTM's grouped (mlstm, slstm) stacking has two nesting levels; its
+    projections are pruned with the whole-model formulation (problem 2)
+    instead — ``supports_layerwise`` reports which path applies.
+    """
+
+    model: LM
+    seq_len: int = 128
+
+    def __post_init__(self):
+        cfg = self.config
+        if cfg.family == "ssm":
+            raise ValueError(
+                "xLSTM group-stacked blocks: use whole-model pruning "
+                "(PruneConfig(layerwise=False)) with adapter.apply"
+            )
+        self.num_layers = cfg.num_layers
+
+    @property
+    def config(self) -> ModelConfig:
+        return self.model.config
+
+    # ---- SequentialAdapter protocol ----------------------------------------
+
+    def synthetic_batch(self, key: jax.Array, batch_size: int) -> jnp.ndarray:
+        cfg = self.config
+        if cfg.input_kind == "tokens":
+            return synthetic_tokens(key, batch_size, self.seq_len,
+                                    cfg.vocab_size)
+        return synthetic_embeddings(key, batch_size, self.seq_len, cfg.d_model)
+
+    def embed(self, params, batch):
+        return self.model.embed_inputs(params, batch)
+
+    def layer_params(self, params, n: int):
+        return jax.tree.map(lambda x: x[n], params["blocks"])
+
+    def with_layer_params(self, params, n: int, lp):
+        blocks = jax.tree.map(
+            lambda x, l: x.at[n].set(l.astype(x.dtype)), params["blocks"], lp
+        )
+        return {**params, "blocks": blocks}
+
+    def apply_layer(self, n: int, lp, x):
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        y, _aux, _kv = self.model._mixer_and_mlp(lp, x, positions)
+        return y
+
+    def apply(self, params, batch):
+        """Soft outputs (logits) for problem (2) / evaluation probes."""
+        h, _aux, _ = self.model.hidden_states(params, batch)
+        return self.model.lm_logits(params, h)

@@ -1,0 +1,54 @@
+"""Mask functions (paper §III-B).
+
+The output of the privacy-preserving pruning process is a pruned model AND a
+*mask function* that the client uses during retraining: it zeroes the
+gradients (and weights) of pruned positions so the discovered architecture is
+preserved while the confidential data boosts accuracy.
+
+Masks are pytrees of {0,1} arrays congruent with the (prunable subset of the)
+parameter pytree. They compose with any optimizer via ``optim.masked``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_from_params(params: Any, dtype=jnp.bfloat16) -> Any:
+    """Derive the mask pytree: 1 where a weight is nonzero, else 0."""
+    return jax.tree.map(lambda w: (w != 0).astype(dtype), params)
+
+
+def apply_mask(params: Any, masks: Optional[Any]) -> Any:
+    """Zero out pruned positions. ``masks`` may be None (no-op) or a pytree
+    with None leaves for unpruned params."""
+    if masks is None:
+        return params
+    return jax.tree.map(
+        lambda w, m: w if m is None else (w * m.astype(w.dtype)),
+        params,
+        masks,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def mask_gradients(grads: Any, masks: Optional[Any]) -> Any:
+    """The paper's mask function: sets gradients of pruned weights to zero."""
+    return apply_mask(grads, masks)
+
+
+def sparsity(masks: Any) -> float:
+    """Fraction of weights pruned (0 = dense)."""
+    leaves = [m for m in jax.tree.leaves(masks) if m is not None]
+    total = sum(m.size for m in leaves)
+    kept = sum(int(jnp.sum(m != 0)) for m in leaves)
+    return 1.0 - kept / max(total, 1)
+
+
+def compression_rate(masks: Any) -> float:
+    """Total weights / remaining weights (the paper's 'CONV Comp. Rate')."""
+    s = sparsity(masks)
+    return 1.0 / max(1.0 - s, 1e-12)

@@ -1,0 +1,291 @@
+"""Euclidean projections onto the sparsity constraint sets S_n (paper §IV-D).
+
+Every pruning scheme in the paper is defined by a constraint set ``S_n`` and
+the ADMM proximal step is the Euclidean projection ``Π_{S_n}(W + U)``
+(Eqn. 11). This module implements each projection as a pure, jittable JAX
+function. All of them:
+
+  * take the GEMM matrix view ``W ∈ R^{P×Q}`` (or the 4-D conv tensor
+    ``W ∈ R^{A×B×C×D}`` for kernel-level schemes),
+  * use STATIC keep-counts (computed from shapes + the remaining-weight ratio
+    ``alpha`` at trace time) so they lower to fixed top-k HLO,
+  * are sharding-preserving (elementwise masks over the input layout).
+
+Schemes (paper Eqns. 13–18):
+  irregular        keep the ⌊α·P·Q⌋ largest-magnitude entries
+  filter           keep the ⌊α·P⌋ rows with largest Frobenius norm
+  column           keep the ⌊α·Q⌋ columns with largest Frobenius norm
+  kernel-pattern   keep exactly 4 entries per 3×3 kernel (largest magnitudes,
+                   optionally restricted to a fixed pattern library for the
+                   hardware path — see ``kernel_pattern_library``)
+  connectivity     keep the ⌊2.25·α·A·B⌋ kernels with largest Frobenius norm
+
+Beyond-paper TPU generalization:
+  tile-pattern     within each (block_p × group_q) weight tile keep a shared
+                   keep-of-group_q lane pattern — the MXU-shaped analogue of
+                   4-entry SIMD kernel patterns (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _keep_count(total: int, alpha: float, minimum: int = 1) -> int:
+    """⌊alpha·total⌋ clamped to [minimum, total]. Static (trace-time)."""
+    k = int(np.floor(alpha * total))
+    return max(minimum, min(k, total))
+
+
+def _topk_mask_flat(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask keeping the k largest entries of a 1-D score vector.
+
+    Threshold-based so it lowers to sort+compare (cheap, layout-friendly)
+    rather than a scatter. Ties at the threshold may keep a few extra
+    entries; identical semantics to magnitude pruning in practice.
+    """
+    kth = jax.lax.top_k(scores, k)[0][-1]
+    return scores >= kth
+
+
+# ---------------------------------------------------------------------------
+# Irregular pruning (Eqn. 13)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def project_irregular(w: jnp.ndarray, *, alpha: float) -> jnp.ndarray:
+    """Keep the ⌊α·numel⌋ largest-magnitude entries of ``w``; zero the rest."""
+    flat = jnp.abs(w.reshape(-1))
+    k = _keep_count(flat.shape[0], alpha)
+    mask = _topk_mask_flat(flat, k).reshape(w.shape)
+    return jnp.where(mask, w, 0).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Filter pruning (Eqn. 14) — prune rows of the GEMM matrix
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def project_filter(w: jnp.ndarray, *, alpha: float) -> jnp.ndarray:
+    """Keep the ⌊α·P⌋ rows (filters) with the largest squared F-norm."""
+    if w.ndim != 2:
+        w2 = w.reshape(w.shape[0], -1)
+        return project_filter(w2, alpha=alpha).reshape(w.shape)
+    scores = jnp.sum(jnp.square(w.astype(jnp.float32)), axis=1)
+    k = _keep_count(w.shape[0], alpha)
+    mask = _topk_mask_flat(scores, k)
+    return jnp.where(mask[:, None], w, 0).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Column pruning (Eqn. 15) — prune columns of the GEMM matrix
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("alpha", "group"))
+def project_column(w: jnp.ndarray, *, alpha: float, group: int = 1) -> jnp.ndarray:
+    """Keep the ⌊α·Q/group⌋ column-groups with the largest squared F-norm.
+
+    ``group=1`` is the paper's column pruning. ``group>1`` prunes aligned
+    column blocks (TPU lane-groups) so the packed GEMM stays MXU-shaped.
+    """
+    if w.ndim != 2:
+        w2 = w.reshape(w.shape[0], -1)
+        return project_column(w2, alpha=alpha, group=group).reshape(w.shape)
+    P, Q = w.shape
+    if Q % group != 0:
+        raise ValueError(f"Q={Q} not divisible by group={group}")
+    g = Q // group
+    scores = jnp.sum(
+        jnp.square(w.astype(jnp.float32)).reshape(P, g, group), axis=(0, 2)
+    )
+    k = _keep_count(g, alpha)
+    mask = _topk_mask_flat(scores, k)
+    mask = jnp.repeat(mask, group)
+    return jnp.where(mask[None, :], w, 0).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel pattern pruning (Eqns. 16–17) — exactly 4 nonzeros per 3x3 kernel
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("keep",))
+def project_kernel_pattern(w4: jnp.ndarray, *, keep: int = 4) -> jnp.ndarray:
+    """Keep the ``keep`` largest-magnitude entries in each C×D kernel.
+
+    ``w4`` is the conv tensor (A, B, C, D). The paper fixes C=D=3, keep=4
+    (a 2.25× compression). The projection is exact: per-kernel top-4.
+    """
+    A, B, C, D = w4.shape
+    flat = jnp.abs(w4.astype(jnp.float32)).reshape(A, B, C * D)
+    kth = jax.lax.top_k(flat, keep)[0][..., -1]
+    mask = flat >= kth[..., None]
+    return jnp.where(mask.reshape(w4.shape), w4, 0).astype(w4.dtype)
+
+
+def canonical_patterns_3x3(num: int = 8) -> np.ndarray:
+    """A fixed library of 4-entry 3×3 patterns (center always kept).
+
+    The hardware path (filter-kernel-reorder) needs a SMALL library so that
+    filters can be grouped by pattern id. Following PCONV-style libraries we
+    keep the central weight plus 3 of its 4-neighbourhood/corner entries in
+    "elbow" shapes. Returns (num, 9) boolean masks.
+    """
+    # 3x3 index layout:  0 1 2 / 3 4 5 / 6 7 8   (4 = center)
+    candidates = [
+        (0, 1, 3, 4), (1, 2, 4, 5), (3, 4, 6, 7), (4, 5, 7, 8),  # corner elbows
+        (1, 3, 4, 5), (1, 4, 5, 7), (3, 4, 5, 7), (1, 3, 4, 7),  # cross elbows
+        (0, 2, 4, 6), (2, 4, 6, 8), (0, 4, 6, 8), (0, 2, 4, 8),  # diagonals
+    ]
+    pats = np.zeros((len(candidates), 9), dtype=bool)
+    for i, idx in enumerate(candidates):
+        pats[i, list(idx)] = True
+    return pats[:num]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _project_library_masks(w4: jnp.ndarray, patterns: jnp.ndarray):
+    A, B, C, D = w4.shape
+    sq = jnp.square(w4.astype(jnp.float32)).reshape(A, B, C * D)
+    # energy retained by each pattern: (A, B, num_patterns)
+    energy = jnp.einsum("abe,pe->abp", sq, patterns.astype(jnp.float32))
+    pat_id = jnp.argmax(energy, axis=-1)                      # (A, B)
+    mask = patterns[pat_id]                                   # (A, B, 9) bool
+    return mask.reshape(w4.shape), pat_id
+
+
+def project_kernel_pattern_library(
+    w4: jnp.ndarray, patterns: Optional[np.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project each 3×3 kernel onto the best pattern from a fixed library.
+
+    Returns ``(projected_w4, pattern_ids)``; the ids feed the Pallas
+    pattern-conv kernel's filter-kernel-reorder step. Choosing the library
+    pattern with maximum retained energy IS the Euclidean projection onto
+    the union-of-patterns constraint set.
+    """
+    if patterns is None:
+        patterns = canonical_patterns_3x3()
+    patterns = jnp.asarray(patterns)
+    mask, pat_id = _project_library_masks(w4, patterns)
+    return jnp.where(mask, w4, 0).astype(w4.dtype), pat_id
+
+
+# ---------------------------------------------------------------------------
+# Connectivity pruning (Eqn. 18) — prune whole kernels
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("alpha", "pattern_keep"))
+def project_connectivity(
+    w4: jnp.ndarray, *, alpha: float, pattern_keep: int = 4
+) -> jnp.ndarray:
+    """Keep the ⌊(CD/keep)·α·A·B⌋ kernels with largest F-norm; zero the rest.
+
+    The paper's factor 2.25 = 9/4 generalizes to C·D/pattern_keep: after
+    kernel-pattern pruning already removed (1 - keep/CD) of the weights,
+    connectivity pruning brings the TOTAL remaining ratio down to alpha.
+    """
+    A, B, C, D = w4.shape
+    scores = jnp.sum(
+        jnp.square(w4.astype(jnp.float32)).reshape(A, B, -1), axis=-1
+    ).reshape(-1)
+    factor = (C * D) / pattern_keep
+    k = _keep_count(A * B, min(1.0, factor * alpha))
+    mask = _topk_mask_flat(scores, k).reshape(A, B)
+    return jnp.where(mask[:, :, None, None], w4, 0).astype(w4.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: TPU tile-pattern pruning (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_p", "group_q", "keep"))
+def project_tile_pattern(
+    w: jnp.ndarray, *, block_p: int = 128, group_q: int = 8, keep: int = 4
+) -> jnp.ndarray:
+    """Shared keep-of-``group_q`` lane pattern per (block_p × group_q) tile.
+
+    The MXU analogue of 4-entry SIMD kernel patterns: within every tile of
+    ``block_p`` output rows × ``group_q`` contraction lanes, keep the same
+    ``keep`` lanes for all rows (chosen to maximize retained energy — the
+    Euclidean projection under the shared-pattern constraint). A packed GEMM
+    then gathers ``keep`` of every ``group_q`` activation rows once per
+    output block and runs dense on the MXU.
+    """
+    if w.ndim != 2:
+        w2 = w.reshape(w.shape[0], -1)
+        return project_tile_pattern(
+            w2, block_p=block_p, group_q=group_q, keep=keep
+        ).reshape(w.shape)
+    P, Q = w.shape
+    if P % block_p != 0 or Q % group_q != 0:
+        raise ValueError(
+            f"(P={P}, Q={Q}) not divisible by (block_p={block_p}, group_q={group_q})"
+        )
+    nb, ng = P // block_p, Q // group_q
+    sq = jnp.square(w.astype(jnp.float32))
+    # lane energy aggregated over the shared output block: (nb, ng, group_q)
+    energy = sq.reshape(nb, block_p, ng, group_q).sum(axis=1)
+    kth = jax.lax.top_k(energy, keep)[0][..., -1]
+    lane_mask = energy >= kth[..., None]                     # (nb, ng, group_q)
+    mask = jnp.broadcast_to(
+        lane_mask[:, None, :, :], (nb, block_p, ng, group_q)
+    ).reshape(P, Q)
+    return jnp.where(mask, w, 0).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scheme dispatch
+# ---------------------------------------------------------------------------
+
+def project(
+    w: jnp.ndarray,
+    scheme: str,
+    *,
+    alpha: float,
+    conv_shape: Optional[Tuple[int, int, int, int]] = None,
+    **kw,
+) -> jnp.ndarray:
+    """Project ``w`` onto S_n for ``scheme``.
+
+    ``conv_shape`` (A,B,C,D) reinterprets a GEMM matrix as a conv tensor for
+    the kernel-level schemes. ``pattern`` applies kernel-pattern + connectivity
+    sequentially, exactly as the paper (§IV-D-4).
+    """
+    if scheme == "irregular":
+        return project_irregular(w, alpha=alpha)
+    if scheme == "filter":
+        return project_filter(w, alpha=alpha)
+    if scheme == "column":
+        return project_column(w, alpha=alpha, **kw)
+    if scheme in ("pattern", "kernel_pattern", "connectivity"):
+        w4 = w.reshape(conv_shape) if conv_shape is not None else w
+        if w4.ndim != 4:
+            raise ValueError(f"scheme '{scheme}' needs a 4-D conv tensor")
+        keep = kw.pop("keep", 4)
+        if w4.shape[2] * w4.shape[3] <= keep:
+            # Kernel patterns are defined for 3×3 kernels only (paper
+            # §IV-D-4, C=D=3). 1×1 convs (ResNet projections) have no
+            # intra-kernel structure: connectivity pruning alone applies,
+            # at the full rate (no 2.25x kernel-pattern head start).
+            return project_connectivity(
+                w4, alpha=alpha, pattern_keep=w4.shape[2] * w4.shape[3]
+            ).reshape(w.shape)
+        if scheme == "kernel_pattern":
+            out = project_kernel_pattern(w4, keep=keep)
+        elif scheme == "connectivity":
+            out = project_connectivity(w4, alpha=alpha, pattern_keep=keep)
+        else:  # sequential composition, paper §IV-D-4
+            out = project_kernel_pattern(w4, keep=keep)
+            out = project_connectivity(out, alpha=alpha, pattern_keep=keep)
+        return out.reshape(w.shape)
+    if scheme == "tile_pattern":
+        return project_tile_pattern(w, **kw)
+    raise ValueError(f"unknown pruning scheme '{scheme}'")
+
+
+SCHEMES = ("irregular", "filter", "column", "pattern", "tile_pattern")

@@ -1,0 +1,72 @@
+"""Client-side masked retraining (paper §III-B, observation (iii)).
+
+"The retraining process is similar to the DNN training process except that it
+needs a mechanism to ensure the pruned weights are zeros and not updated
+during back propagation." — the mask function from the system designer sets
+gradients of pruned weights to zero.
+
+The client never shares data; this loop runs entirely on her side. It is a
+thin composition of the generic optimizers in ``repro.optim`` with
+``core.masks``: any optimizer, any parallelism — the mask guarantees the
+discovered architecture is preserved exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import apply_mask, mask_gradients
+
+
+def make_retrain_step(
+    apply_fn: Callable[[Any, Any], jnp.ndarray],
+    loss_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    optimizer,
+    masks: Any,
+):
+    """Build a jitted masked train step: grads → mask → optimizer → mask."""
+
+    def step(params, opt_state, batch):
+        x, y = batch
+
+        def objective(p):
+            return loss_fn(apply_fn(p, x), y)
+
+        loss, grads = jax.value_and_grad(objective)(params)
+        grads = mask_gradients(grads, masks)           # the mask function
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        params = apply_mask(params, masks)             # keep pruned weights 0
+        return params, opt_state, loss
+
+    return jax.jit(step)
+
+
+def retrain(
+    key: jax.Array,
+    params: Any,
+    masks: Any,
+    apply_fn: Callable[[Any, Any], jnp.ndarray],
+    loss_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    optimizer,
+    data_iter: Iterator,
+    steps: int,
+    eval_fn: Optional[Callable[[Any], float]] = None,
+    eval_every: int = 0,
+) -> Tuple[Any, Dict[str, List[float]]]:
+    """Run ``steps`` masked retraining steps; returns (params, history)."""
+    del key
+    params = apply_mask(params, masks)
+    opt_state = optimizer.init(params)
+    step = make_retrain_step(apply_fn, loss_fn, optimizer, masks)
+    history: Dict[str, List[float]] = {"loss": [], "eval": []}
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, loss = step(params, opt_state, batch)
+        history["loss"].append(float(loss))
+        if eval_fn is not None and eval_every and (i + 1) % eval_every == 0:
+            history["eval"].append(float(eval_fn(params)))
+    return params, history

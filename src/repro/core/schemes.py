@@ -1,0 +1,153 @@
+"""Per-layer pruning scheme configuration.
+
+The paper defines sparsity constraints per layer (``W_n ∈ S_n``). In a real
+framework the set of prunable tensors is selected by path pattern over the
+parameter pytree: conv/projection GEMMs are pruned, while biases, norms,
+embeddings and routers are excluded (the paper prunes CONV layers only;
+§IV-A "We mainly focus on the pruning of the computation-intensive
+convolutional (CONV) layers" — for LM archs the analogous
+computation-intensive GEMMs are the attention/FFN projections).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projections
+from repro.utils.tree import tree_map_with_path_str
+
+
+# Parameters whose path matches any of these are never pruned. The paper
+# prunes the computation-intensive CONV/GEMM projections only; biases,
+# norms, embeddings, routers and SSM recurrence internals stay dense.
+DEFAULT_EXCLUDE = (
+    r".*bias.*",
+    r".*norm.*",
+    r".*scale.*",
+    r".*embed.*",
+    r".*router.*",
+    r".*gate_logit.*",
+    r".*pos_emb.*",
+    r".*\bb\b.*",
+    r".*/b[qkv]",           # attention QKV biases (qwen2-style)
+    r".*conv.*",            # depthwise/causal convs (mamba, mlstm)
+    r".*a_log.*",           # SSM decay parameters
+    r".*dt_bias.*",
+    r".*d_skip.*",
+    r".*r_gates.*",         # sLSTM recurrent gates
+    r".*b_gates.*",
+    r".*b_if.*",
+    r".*out_norm.*",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Pruning spec for a single prunable tensor."""
+
+    scheme: str = "irregular"          # irregular|filter|column|pattern|tile_pattern
+    alpha: float = 0.25                # remaining-weight ratio (1/comp_rate)
+    conv_shape: Optional[Tuple[int, int, int, int]] = None  # for kernel schemes
+    column_group: int = 1              # >1: lane-group-aligned column pruning
+    tile_block_p: int = 128            # tile-pattern params (beyond-paper)
+    tile_group_q: int = 8
+    tile_keep: int = 4
+    pattern_keep: int = 4              # 4-of-9 kernel patterns
+
+    def project(self, w: jnp.ndarray) -> jnp.ndarray:
+        if self.scheme == "column":
+            return projections.project_column(
+                w, alpha=self.alpha, group=self.column_group
+            )
+        if self.scheme == "tile_pattern":
+            return projections.project_tile_pattern(
+                w,
+                block_p=self.tile_block_p,
+                group_q=self.tile_group_q,
+                keep=self.tile_keep,
+            )
+        return projections.project(
+            w,
+            self.scheme,
+            alpha=self.alpha,
+            conv_shape=self.conv_shape,
+            keep=self.pattern_keep,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    """Framework-level pruning configuration.
+
+    ``scheme``/``alpha`` are global defaults; ``overrides`` maps path regex →
+    LayerSpec kwargs; ``exclude`` path regexes are never pruned.
+    """
+
+    scheme: str = "irregular"
+    alpha: float = 0.25
+    exclude: Sequence[str] = DEFAULT_EXCLUDE
+    overrides: Dict[str, Dict[str, Any]] = dataclasses.field(default_factory=dict)
+    # ADMM hyper-parameters (paper §V-A)
+    rho_init: float = 1e-4
+    rho_max: float = 1e-1
+    rho_mult: float = 10.0
+    rho_every_iters: int = 110         # "+10x every 11 epochs", 1 epoch = 10 iters
+    lr: float = 1e-3
+    batch_size: int = 32
+    iterations: int = 300
+    primal_steps: int = 1
+    layerwise: bool = True             # problem (3) vs problem (2)
+
+    def spec_for(self, path: str, shape) -> Optional[LayerSpec]:
+        """Resolve the LayerSpec for a parameter path, or None if excluded."""
+        if len(shape) < 2:
+            return None            # scalars/vectors are never GEMM weights
+        for pat in self.exclude:
+            if re.fullmatch(pat, path):
+                return None
+        kw: Dict[str, Any] = dict(scheme=self.scheme, alpha=self.alpha)
+        for pat, ov in self.overrides.items():
+            if re.fullmatch(pat, path):
+                kw.update(ov)
+        # kernel schemes need a 4-D view; infer from the tensor itself
+        if kw["scheme"] in ("pattern", "kernel_pattern", "connectivity"):
+            if len(shape) == 4:
+                kw.setdefault("conv_shape", tuple(shape))
+            elif "conv_shape" not in kw:
+                # GEMM tensor with no conv interpretation: fall back to the
+                # TPU tile-pattern generalization (DESIGN.md §4).
+                kw["scheme"] = "tile_pattern"
+        return LayerSpec(**kw)
+
+
+def build_specs(params: Any, config: PruneConfig) -> Any:
+    """Pytree of LayerSpec | None congruent with ``params``."""
+    return tree_map_with_path_str(
+        lambda path, w: config.spec_for(path, w.shape), params
+    )
+
+
+def _project_leaf(spec: Optional[LayerSpec], w: jnp.ndarray) -> jnp.ndarray:
+    if spec is None:
+        return w
+    if spec.conv_shape is None and w.ndim > 2 and spec.scheme not in (
+        "pattern", "kernel_pattern", "connectivity",
+    ):
+        # Stacked (scan-over-layers) weights: vmap the projection per layer.
+        return jax.vmap(spec.project)(w)
+    return spec.project(w)
+
+
+def project_tree(params: Any, specs: Any) -> Any:
+    """Project every prunable leaf onto its S_n (spec==None → identity)."""
+    return jax.tree.map(
+        lambda spec, w: _project_leaf(spec, w),
+        specs,
+        params,
+        is_leaf=lambda x: x is None or isinstance(x, LayerSpec),
+    )

@@ -1,0 +1,56 @@
+"""Randomly generated synthetic data (paper §III-B).
+
+"The generation of the synthetic data does not rely on any prior knowledge
+about the client's confidential training dataset. [...] we simply set the
+value of each pixel of the synthetic images with a discrete Uniform
+distribution in the range of 0 to 255."
+
+We keep that exact generator for image models and extend the same
+no-prior-knowledge principle to the assigned LM / audio / VLM architectures:
+uniform token ids over the vocabulary, and N(0,1) embeddings for stubbed
+modality frontends (DESIGN.md §7.3).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def synthetic_images(
+    key: jax.Array,
+    batch: int,
+    hwc: Tuple[int, int, int] = (32, 32, 3),
+    normalize: bool = True,
+) -> jnp.ndarray:
+    """Discrete Uniform[0, 255] pixels, optionally scaled to [0, 1]."""
+    pix = jax.random.randint(key, (batch, *hwc), 0, 256, dtype=jnp.int32)
+    x = pix.astype(jnp.float32)
+    return x / 255.0 if normalize else x
+
+
+def synthetic_tokens(
+    key: jax.Array, batch: int, seq_len: int, vocab_size: int
+) -> jnp.ndarray:
+    """Uniform token ids — the LM analogue of uniform pixels."""
+    return jax.random.randint(key, (batch, seq_len), 0, vocab_size, dtype=jnp.int32)
+
+
+def synthetic_embeddings(
+    key: jax.Array, batch: int, seq_len: int, dim: int, dtype=jnp.float32
+) -> jnp.ndarray:
+    """N(0,1) embeddings for stubbed modality frontends (audio/VLM)."""
+    return jax.random.normal(key, (batch, seq_len, dim), dtype=dtype)
+
+
+def synthetic_batch_for(kind: str, key: jax.Array, **kw):
+    """Dispatch by input kind: 'image' | 'tokens' | 'embeddings'."""
+    if kind == "image":
+        return synthetic_images(key, **kw)
+    if kind == "tokens":
+        return synthetic_tokens(key, **kw)
+    if kind == "embeddings":
+        return synthetic_embeddings(key, **kw)
+    raise ValueError(f"unknown synthetic input kind '{kind}'")

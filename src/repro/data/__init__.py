@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    DataConfig,
+    TokenPipeline,
+    ClassificationPipeline,
+    make_pipeline_for,
+)

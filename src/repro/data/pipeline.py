@@ -1,0 +1,136 @@
+"""Data pipelines.
+
+Two roles in the paper's workflow:
+  * the SYSTEM DESIGNER only ever sees ``core.synthetic`` generators;
+  * the CLIENT owns a real dataset — here modeled as deterministic
+    seeded-synthetic "confidential" corpora (the box has no datasets), with
+    the same interface a real loader would have: sharded, resumable
+    (step-indexed), host-local.
+
+Determinism & fault tolerance: batches are a pure function of (seed, step),
+so a restart from checkpoint step K regenerates exactly the batch stream
+from K — no data-loader state to checkpoint beyond the step counter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    kind: str = "lm"                 # lm | classification | embeddings
+    seq_len: int = 1024
+    global_batch: int = 8
+    vocab_size: int = 32_000
+    d_model: int = 0                 # embeddings kind
+    num_classes: int = 10            # classification kind
+    image_hwc: Tuple[int, int, int] = (32, 32, 3)
+    seed: int = 1234
+
+
+class TokenPipeline:
+    """Deterministic LM token stream: batch(step) is pure in (seed, step).
+
+    A "real" corpus is simulated with a fixed PRNG stream plus a learnable
+    structure (token t+1 correlates with token t) so retraining on it is a
+    non-trivial task for tests/examples.
+    """
+
+    def __init__(self, config: DataConfig):
+        self.config = config
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.config
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k1, k2 = jax.random.split(key)
+        B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+        # Markov-ish stream: next = (cur * 31 + noise) % V — learnable structure
+        start = jax.random.randint(k1, (B, 1), 0, V)
+        noise = jax.random.randint(k2, (B, S), 0, max(V // 64, 2))
+        def stepf(cur, n):
+            nxt = (cur * 31 + n + 7) % V
+            return nxt, nxt
+        _, toks = jax.lax.scan(stepf, start[:, 0], noise.T)
+        tokens = jnp.concatenate([start, toks.T], axis=1)     # (B, S+1)
+        return {"inputs": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class EmbeddingPipeline:
+    """Deterministic (embeddings, labels) stream for stub-frontend archs."""
+
+    def __init__(self, config: DataConfig):
+        self.config = config
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        cfg = self.config
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k1, k2 = jax.random.split(key)
+        B, S = cfg.global_batch, cfg.seq_len
+        emb = jax.random.normal(k1, (B, S, cfg.d_model), jnp.float32)
+        labels = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+        return {"inputs": emb, "labels": labels}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class ClassificationPipeline:
+    """Deterministic labeled image stream (the client's "confidential" set).
+
+    Classes are separable: each class has a fixed prototype image; samples
+    are prototype + noise. This makes pruning-accuracy benchmarks meaningful
+    (a trained model reaches high accuracy; pruning hurts; retraining
+    recovers) while remaining fully synthetic/offline.
+    """
+
+    def __init__(self, config: DataConfig, noise: float = 0.35):
+        self.config = config
+        self.noise = noise
+        key = jax.random.PRNGKey(config.seed)
+        self.prototypes = jax.random.uniform(
+            key, (config.num_classes, *config.image_hwc), jnp.float32
+        )
+
+    def batch_at(self, step: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg = self.config
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 1), step)
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (cfg.global_batch,), 0, cfg.num_classes)
+        x = self.prototypes[y] + self.noise * jax.random.normal(
+            k2, (cfg.global_batch, *cfg.image_hwc)
+        )
+        return jnp.clip(x, 0.0, 1.0), y
+
+    def eval_batch(self, n: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.batch_at(10_000_019)  # held-out step index
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_pipeline_for(kind: str, config: DataConfig):
+    if kind == "lm":
+        return TokenPipeline(config)
+    if kind == "embeddings":
+        return EmbeddingPipeline(config)
+    if kind == "classification":
+        return ClassificationPipeline(config)
+    raise ValueError(f"unknown pipeline kind '{kind}'")

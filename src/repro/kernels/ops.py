@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this box is CPU-only; interpret mode
+executes the kernel body in Python for correctness validation) and False on
+real TPU backends.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import column_gemm as _cg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import pattern_conv as _pc
+from repro.kernels import pattern_gemm as _pg
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- tile-pattern sparse GEMM -------------------------------------------------
+
+def pack_tile_pattern(w, **kw):
+    return _pg.pack_tile_pattern(w, **kw)
+
+
+def tile_pattern_matmul(x, w_packed, lane_idx, *, interpret=None, **kw):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pg.pattern_gemm(x, w_packed, lane_idx, interpret=interpret, **kw)
+
+
+# -- column-pruned GEMM -------------------------------------------------------
+
+def pack_columns(w, **kw):
+    return _cg.pack_columns(w, **kw)
+
+
+def column_matmul(x, w_packed, kept_idx, *, interpret=None, **kw):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _cg.column_gemm(x, w_packed, kept_idx, interpret=interpret, **kw)
+
+
+# -- flash attention ----------------------------------------------------------
+
+def flash_attention(q, k, v, *, interpret=None, **kw):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, interpret=interpret, **kw)
+
+
+# -- pattern conv ---------------------------------------------------------------
+
+def assign_channel_patterns(w4, patterns=None):
+    return _pc.assign_channel_patterns(w4, patterns)
+
+
+def pack_pattern_conv(w4, pat_ids, patterns=None):
+    return _pc.pack_pattern_conv(w4, pat_ids, patterns)
+
+
+def pattern_conv(x, w_packed, taps, *, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pc.pattern_conv(x, w_packed, taps, interpret=interpret)

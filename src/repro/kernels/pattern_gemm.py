@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: tile-pattern sparse GEMM (DESIGN.md §2).
+
+The TPU adaptation of the paper's pattern-based pruning + compiler stack for
+GEMM-shaped weights. The weight matrix W (Q=in, P=out) is tile-pattern
+pruned (``core.projections.project_tile_pattern``): within every
+(group_q=8 input lanes × block_p=128 output cols) tile, the same
+``keep=4`` lanes are nonzero for all 128 output cols.
+
+Mapping of the paper's three compiler optimizations:
+  * compressed weight storage (CWS) — only the kept lanes are stored:
+    ``w_packed`` is dense (Q·keep/group_q, P); zeros never touch HBM.
+  * load redundancy elimination (LRE) — the x tile is loaded HBM→VMEM once
+    per output tile; the per-group lane gather happens inside VMEM, so each
+    input element is read from HBM exactly once per output block.
+  * filter kernel reorder (FKR) — the pattern is SHARED across the 128
+    output cols of a tile (the projection enforces this), which is the
+    reorder/grouping that makes the packed matmul dense on the MXU.
+
+Kernel compute: per grid cell (i, j):
+    xg = gather(x[i·bm:(i+1)·bm, :], lanes[j])      # (bm, Q·keep/group_q)
+    out[i, j] = xg @ w_packed[:, j·128:(j+1)·128]   # dense MXU matmul
+
+FLOPs and HBM weight bytes both drop by group_q/keep (2× at 4-of-8).
+
+Mosaic note: the in-kernel gather is along the contraction (lane) axis of a
+VMEM-resident tile with a static-shaped index vector — this lowers to a
+dynamic-gather on sublanes; validated here with interpret=True (CPU box).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def pack_tile_pattern(
+    w: jnp.ndarray, *, block_p: int = 128, group_q: int = 8, keep: int = 4
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack a tile-pattern-pruned W (Q, P) → (w_packed, lane_idx).
+
+    Returns:
+      w_packed: (Q·keep/group_q, P) — kept lanes, dense (CWS)
+      lane_idx: (P/block_p, Q·keep/group_q) int32 — source row of each packed
+                row, per output block (the FKR grouping table)
+    """
+    Q, P = w.shape
+    if Q % group_q or P % block_p:
+        raise ValueError(f"(Q={Q}, P={P}) not tiled by ({group_q}, {block_p})")
+    ng, nb = Q // group_q, P // block_p
+    wf = np.asarray(w, np.float32)
+    energy = (wf ** 2).reshape(ng, group_q, nb, block_p).sum(axis=3)  # (ng,g,nb)
+    w_packed = np.zeros((ng * keep, P), wf.dtype)
+    lane_idx = np.zeros((nb, ng * keep), np.int32)
+    for j in range(nb):
+        for g in range(ng):
+            lanes = np.sort(np.argsort(-energy[g, :, j])[:keep])
+            rows = g * group_q + lanes
+            lane_idx[j, g * keep:(g + 1) * keep] = rows
+            w_packed[g * keep:(g + 1) * keep, j * block_p:(j + 1) * block_p] = (
+                wf[rows, j * block_p:(j + 1) * block_p]
+            )
+    return (jnp.asarray(w_packed, w.dtype), jnp.asarray(lane_idx))
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, *, f32_dot: bool = False):
+    """One (bm × block_p) output tile: VMEM lane gather + dense MXU matmul.
+
+    ``f32_dot`` upcasts inputs for interpret mode — the CPU backend's DotThunk
+    lacks BF16×BF16→F32; on TPU the MXU takes bf16 inputs with f32 accum via
+    ``preferred_element_type`` (do NOT upcast there: f32 MXU is 8× slower).
+    """
+    lanes = idx_ref[0]                       # (Kp,) packed-lane source rows
+    xg = x_ref[...][:, lanes]                # (bm, Kp) — gather inside VMEM
+    w = w_ref[...]
+    if f32_dot:
+        xg, w = xg.astype(jnp.float32), w.astype(jnp.float32)
+    o_ref[...] = jnp.dot(
+        xg, w, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_p", "interpret")
+)
+def pattern_gemm(
+    x: jnp.ndarray,               # (M, Q)
+    w_packed: jnp.ndarray,        # (Kp, P), Kp = Q·keep/group_q
+    lane_idx: jnp.ndarray,        # (P/block_p, Kp)
+    *,
+    block_m: int = 128,
+    block_p: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ W for tile-pattern sparse W, via the packed representation."""
+    M, Q = x.shape
+    Kp, P = w_packed.shape
+    nb = P // block_p
+    if lane_idx.shape != (nb, Kp):
+        raise ValueError(f"lane_idx {lane_idx.shape} != {(nb, Kp)}")
+    if M % block_m:
+        raise ValueError(f"M={M} % block_m={block_m}")
+
+    needs_f32 = interpret and x.dtype == jnp.bfloat16
+    return pl.pallas_call(
+        functools.partial(_kernel, f32_dot=needs_f32),
+        out_shape=jax.ShapeDtypeStruct((M, P), x.dtype),
+        grid=(M // block_m, nb),
+        in_specs=[
+            pl.BlockSpec((1, Kp), lambda i, j: (j, 0)),       # lane table
+            pl.BlockSpec((block_m, Q), lambda i, j: (i, 0)),  # x row-tile
+            pl.BlockSpec((Kp, block_p), lambda i, j: (0, j)), # packed weights
+        ],
+        out_specs=pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(lane_idx, x, w_packed)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_gemm(x: jnp.ndarray, w_dense: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ W with the (pruned, still-dense) weight matrix (Q, P)."""
+    return jnp.dot(x.astype(jnp.float32),
+                   w_dense.astype(jnp.float32)).astype(x.dtype)
+
+
+def ref_pattern_gemm(x: jnp.ndarray, w_pruned_dense: jnp.ndarray) -> jnp.ndarray:
+    return ref_gemm(x, w_pruned_dense)
+
+
+def ref_column_gemm(x: jnp.ndarray, w_pruned_dense: jnp.ndarray) -> jnp.ndarray:
+    return ref_gemm(x, w_pruned_dense)
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """Dense-softmax attention oracle for the flash kernel (GQA-aware)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+    kf = jnp.repeat(k, G, axis=2)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        ok &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_conv3x3(x: jnp.ndarray, w4_pruned: jnp.ndarray) -> jnp.ndarray:
+    """Dense conv with the (pattern-pruned, still-dense) (A, C, 3, 3) weights."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w4_pruned.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    ).astype(x.dtype)
+
+
+def mask_channel_patterns(w4: jnp.ndarray, pat_ids: np.ndarray,
+                          patterns: np.ndarray) -> jnp.ndarray:
+    """Zero w4 (A, C, 3, 3) outside each channel's library pattern."""
+    mask = patterns[pat_ids].reshape(1, w4.shape[1], 3, 3)    # (1, C, 3, 3)
+    return jnp.where(jnp.asarray(mask), w4, 0)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+Lowers + compiles every (architecture × input shape) cell on the production
+meshes — 16×16 (single pod, 256 chips) and 2×16×16 (two pods, 512 chips) —
+and records memory_analysis / cost_analysis / collective bytes for the
+roofline (deliverable g). The two XLA_FLAGS lines above MUST precede any
+jax import: jax locks the device count on first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single --masked
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES
+from repro.configs.shapes import input_specs, skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import make_train_step, train_state_specs
+from repro.models import build_model
+from repro.optim import adamw
+from repro.parallel.sharding import axis_rules, default_rules, param_shardings
+from repro.roofline.hlo_costs import analyze_hlo
+
+
+def lower_cell(cfg, shape, mesh, *, masked: bool = False,
+               grad_compression: bool = False):
+    """Lower + compile one (arch, shape, mesh) cell. Returns result dict."""
+    rules = default_rules(mesh)
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape, rules=rules)
+
+    with axis_rules(rules):
+        if specs["kind"] == "train":
+            optimizer = adamw(1e-4, weight_decay=0.0)
+            state_shapes, state_shardings = train_state_specs(
+                model, optimizer, rules, grad_compression=grad_compression)
+            state_in = jax.tree.map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+                state_shapes, state_shardings,
+            )
+            if masked:
+                # the paper's masked-retraining variant: mask pytree shaped
+                # (and sharded) like params, threaded as a step argument
+                masks_in = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        x.shape, jnp.bfloat16, sharding=x.sharding),
+                    state_in["params"],
+                )
+
+                def fn(state, batch, masks):
+                    step = make_train_step(model, optimizer, masks=masks,
+                                           grad_compression=grad_compression)
+                    return step(state, batch)
+
+                lowered = jax.jit(fn).lower(state_in, specs["batch"], masks_in)
+            else:
+                step = make_train_step(model, optimizer, masks=None,
+                                       grad_compression=grad_compression)
+                lowered = jax.jit(step).lower(state_in, specs["batch"])
+
+        elif specs["kind"] == "prefill":
+            p_axes = model.param_logical_axes()
+            p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            p_shard = param_shardings(rules, p_axes, shape_tree=p_shapes)
+            params_in = jax.tree.map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+                p_shapes, p_shard,
+            )
+            S = specs["seq_len"]
+            if cfg.encoder_only:
+                def fn(params, inputs):
+                    h, _, _ = model.hidden_states(params, inputs)
+                    return model.lm_logits(params, h)
+
+                lowered = jax.jit(fn).lower(params_in, specs["inputs"])
+            else:
+                def fn(params, inputs):
+                    return model.prefill(params, inputs, S)
+
+                lowered = jax.jit(fn).lower(params_in, specs["inputs"])
+
+        else:  # decode
+            p_axes = model.param_logical_axes()
+            p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            p_shard = param_shardings(rules, p_axes, shape_tree=p_shapes)
+            params_in = jax.tree.map(
+                lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+                p_shapes, p_shard,
+            )
+
+            def fn(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            lowered = jax.jit(fn).lower(params_in, specs["cache"],
+                                        specs["tokens"])
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    corrected = analyze_hlo(compiled.as_text())   # trip-count-aware (roofline)
+    coll = dict(corrected.collective_bytes)
+    coll["total"] = corrected.collective_total
+    return {
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        # xla_* are raw cost_analysis numbers (loop bodies counted ONCE —
+        # see roofline/hlo_costs.py); flops/bytes are trip-count corrected
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "flops": corrected.flops,
+        "bytes_accessed": corrected.bytes,
+        "collectives": coll,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--masked", action="store_true",
+                    help="include the pruning-mask train variant")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                reason = skip_reason(cfg, shape)
+                if reason is not None:
+                    print(f"SKIP {tag}: {reason}")
+                    rec = {"status": "skipped", "reason": reason}
+                    n_skip += 1
+                else:
+                    t0 = time.time()
+                    try:
+                        rec = lower_cell(cfg, shape, mesh)
+                        rec["status"] = "ok"
+                        rec["compile_seconds"] = time.time() - t0
+                        print(f"OK   {tag}: "
+                              f"flops={rec['flops']:.3e} "
+                              f"bytes={rec['bytes_accessed']:.3e} "
+                              f"coll={rec['collectives']['total']:.3e} "
+                              f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB "
+                              f"({rec['compile_seconds']:.0f}s)")
+                        n_ok += 1
+                    except Exception as e:  # noqa: BLE001
+                        rec = {"status": "failed", "error": str(e),
+                               "traceback": traceback.format_exc()}
+                        print(f"FAIL {tag}: {e}")
+                        n_fail += 1
+                rec["arch"] = arch
+                rec["shape"] = shape_name
+                rec["mesh"] = mesh_name
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

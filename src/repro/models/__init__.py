@@ -1,0 +1,3 @@
+from repro.models.model import build_model
+from repro.models.transformer import LM
+from repro.models.cnn import VGG, ResNet, resnet18, resnet50_basic, vgg16

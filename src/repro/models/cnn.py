@@ -1,0 +1,248 @@
+"""CNN classifiers (VGG-16 / ResNet-18/50 style) — the paper's own archs.
+
+Used for the faithful reproduction path (Tables I/II/V benchmarks): these
+models implement the ``SequentialAdapter`` protocol consumed by
+``core.pruner.PrivacyPreservingPruner`` — each CONV stage is one layer f_n
+whose output the layer-wise distillation (problem 3) matches.
+
+Configurable width/depth so tests and benchmarks can run scaled-down
+variants on CPU while keeping the exact VGG/ResNet topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.synthetic import synthetic_images
+
+
+def conv_init(key, out_ch: int, in_ch: int, kh: int = 3, kw: int = 3,
+              dtype=jnp.float32):
+    fan_in = in_ch * kh * kw
+    w = jax.random.truncated_normal(key, -2, 2, (out_ch, in_ch, kh, kw),
+                                    jnp.float32) * np.sqrt(2.0 / fan_in)
+    return w.astype(dtype)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """x: (B, H, W, C); w: (O, I, kh, kw) — the paper's (A,B,C,D) layout."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+
+
+@dataclasses.dataclass
+class VGG:
+    """VGG-style plain CNN. ``plan``: list of (out_channels | 'M' maxpool)."""
+
+    plan: Sequence
+    num_classes: int = 10
+    image_hwc: Tuple[int, int, int] = (32, 32, 3)
+
+    # VGG-16 conv plan (13 conv layers; the paper prunes the 12 CONV layers
+    # after the first — N=12 in Table IV)
+    VGG16_PLAN = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                  512, 512, 512, "M", 512, 512, 512, "M")
+
+    def __post_init__(self):
+        self.conv_channels = [c for c in self.plan if c != "M"]
+        self.num_layers = len(self.conv_channels)
+
+    # ---- init ----
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        keys = jax.random.split(key, self.num_layers + 1)
+        layers = []
+        in_ch = self.image_hwc[2]
+        for i, ch in enumerate(self.conv_channels):
+            layers.append({"w": conv_init(keys[i], ch, in_ch),
+                           "bias": jnp.zeros((ch,), jnp.float32)})
+            in_ch = ch
+        # final feature map is (H/2^p, W/2^p, last_ch); pooling stops at 1
+        # (small-image variants skip pools that would zero the spatial dims)
+        h, w = self.image_hwc[0], self.image_hwc[1]
+        for c in self.plan:
+            if c == "M":
+                h = h // 2 if h >= 2 else h
+                w = w // 2 if w >= 2 else w
+        feat = h * w * in_ch
+        head = {"w": (jax.random.normal(keys[-1], (self.num_classes, feat))
+                      * np.sqrt(1.0 / feat)).astype(jnp.float32),
+                "bias": jnp.zeros((self.num_classes,), jnp.float32)}
+        return {"layers": layers, "head": head}
+
+    # ---- SequentialAdapter protocol ----
+    def synthetic_batch(self, key: jax.Array, batch_size: int) -> jnp.ndarray:
+        return synthetic_images(key, batch_size, self.image_hwc)
+
+    def embed(self, params, batch):
+        return batch
+
+    def layer_params(self, params, n: int):
+        return params["layers"][n]
+
+    def with_layer_params(self, params, n: int, lp):
+        layers = list(params["layers"])
+        layers[n] = lp
+        return {**params, "layers": layers}
+
+    def apply_layer(self, n: int, lp, x):
+        """conv → relu (→ maxpool where the plan says so)."""
+        y = conv2d(x, lp["w"]) + lp["bias"]
+        y = jax.nn.relu(y)
+        # apply any pools that follow this conv in the plan (skip once the
+        # spatial dims have shrunk to 1 — small-image variants)
+        conv_seen = -1
+        for j, c in enumerate(self.plan):
+            if c != "M":
+                conv_seen += 1
+            elif conv_seen == n and y.shape[1] >= 2 and y.shape[2] >= 2:
+                y = jax.lax.reduce_window(
+                    y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+        return y
+
+    def features(self, params, x):
+        for n in range(self.num_layers):
+            x = self.apply_layer(n, params["layers"][n], x)
+        return x.reshape(x.shape[0], -1)
+
+    def apply(self, params, x):
+        f = self.features(params, x)
+        return f @ params["head"]["w"].T + params["head"]["bias"]
+
+
+def vgg16(num_classes: int = 10, width_mult: float = 1.0,
+          image_hwc=(32, 32, 3)) -> VGG:
+    plan = tuple(
+        c if c == "M" else max(8, int(c * width_mult)) for c in VGG.VGG16_PLAN
+    )
+    return VGG(plan=plan, num_classes=num_classes, image_hwc=image_hwc)
+
+
+@dataclasses.dataclass
+class ResNet:
+    """ResNet-18/50-style CNN with basic blocks (CIFAR stem).
+
+    Exposed to the pruner as a sequence of CONV stages: each basic block
+    contributes its two convs as separate prunable layers; the residual add
+    happens inside ``apply_layer`` of the second conv, matching how the paper
+    treats each CONV layer as one f_n.
+    """
+
+    stage_channels: Sequence[int] = (64, 128, 256, 512)
+    blocks_per_stage: Sequence[int] = (2, 2, 2, 2)     # resnet-18
+    num_classes: int = 10
+    image_hwc: Tuple[int, int, int] = (32, 32, 3)
+
+    def __post_init__(self):
+        # layer plan: stem conv + per-block (conv1, conv2 [+ proj])
+        self.layer_plan: List[dict] = [
+            {"kind": "stem", "out": self.stage_channels[0], "stride": 1}
+        ]
+        in_ch = self.stage_channels[0]
+        for s, (ch, nb) in enumerate(
+            zip(self.stage_channels, self.blocks_per_stage)
+        ):
+            for b in range(nb):
+                stride = 2 if (b == 0 and s > 0) else 1
+                self.layer_plan.append(
+                    {"kind": "conv1", "out": ch, "in": in_ch, "stride": stride}
+                )
+                self.layer_plan.append(
+                    {"kind": "conv2", "out": ch, "in": ch, "stride": 1,
+                     "proj": in_ch != ch or stride != 1,
+                     "block_in": in_ch}     # residual projection input width
+                )
+                in_ch = ch
+        self.num_layers = len(self.layer_plan)
+        self.final_ch = in_ch
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        keys = jax.random.split(key, self.num_layers + 1)
+        layers = []
+        in_ch = self.image_hwc[2]
+        for i, spec in enumerate(self.layer_plan):
+            lp: Dict[str, Any] = {}
+            cin = in_ch if spec["kind"] == "stem" else spec["in"]
+            lp["w"] = conv_init(keys[i], spec["out"], cin)
+            lp["bias"] = jnp.zeros((spec["out"],), jnp.float32)
+            if spec.get("proj"):
+                lp["w_proj"] = conv_init(
+                    jax.random.fold_in(keys[i], 7), spec["out"],
+                    spec["block_in"], 1, 1)
+            layers.append(lp)
+            in_ch = spec["out"]
+        head = {
+            "w": (jax.random.normal(keys[-1], (self.num_classes, self.final_ch))
+                  * np.sqrt(1.0 / self.final_ch)).astype(jnp.float32),
+            "bias": jnp.zeros((self.num_classes,), jnp.float32),
+        }
+        return {"layers": layers, "head": head}
+
+    # ---- SequentialAdapter protocol ----
+    def synthetic_batch(self, key: jax.Array, batch_size: int) -> jnp.ndarray:
+        return synthetic_images(key, batch_size, self.image_hwc)
+
+    def embed(self, params, batch):
+        # carry (activation, residual-input) through the layer sequence
+        return {"x": batch, "res": None}
+
+    def layer_params(self, params, n: int):
+        return params["layers"][n]
+
+    def with_layer_params(self, params, n: int, lp):
+        layers = list(params["layers"])
+        layers[n] = lp
+        return {**params, "layers": layers}
+
+    def apply_layer(self, n: int, lp, state):
+        spec = self.layer_plan[n]
+        x = state["x"]
+        if spec["kind"] == "stem":
+            y = jax.nn.relu(conv2d(x, lp["w"], 1) + lp["bias"])
+            return {"x": y, "res": None}
+        if spec["kind"] == "conv1":
+            y = jax.nn.relu(conv2d(x, lp["w"], spec["stride"]) + lp["bias"])
+            return {"x": y, "res": x}
+        # conv2: add residual (projected if needed)
+        y = conv2d(x, lp["w"], 1) + lp["bias"]
+        res = state["res"]
+        if spec.get("proj"):
+            stride = self.layer_plan[n - 1]["stride"]
+            res = conv2d(res, lp["w_proj"], stride)
+        y = jax.nn.relu(y + res)
+        return {"x": y, "res": None}
+
+    def features(self, params, x):
+        state = self.embed(params, x)
+        for n in range(self.num_layers):
+            state = self.apply_layer(n, params["layers"][n], state)
+        f = jnp.mean(state["x"], axis=(1, 2))       # global average pool
+        return f
+
+    def apply(self, params, x):
+        f = self.features(params, x)
+        return f @ params["head"]["w"].T + params["head"]["bias"]
+
+
+def resnet18(num_classes: int = 10, width_mult: float = 1.0,
+             image_hwc=(32, 32, 3)) -> ResNet:
+    chans = tuple(max(8, int(c * width_mult)) for c in (64, 128, 256, 512))
+    return ResNet(stage_channels=chans, blocks_per_stage=(2, 2, 2, 2),
+                  num_classes=num_classes, image_hwc=image_hwc)
+
+
+def resnet50_basic(num_classes: int = 10, width_mult: float = 0.25,
+                   image_hwc=(32, 32, 3)) -> ResNet:
+    """ResNet-50-depth variant with basic blocks (3,4,6,3) — used scaled-down."""
+    chans = tuple(max(8, int(c * width_mult)) for c in (64, 128, 256, 512))
+    return ResNet(stage_channels=chans, blocks_per_stage=(3, 4, 6, 3),
+                  num_classes=num_classes, image_hwc=image_hwc)

@@ -1,0 +1,12 @@
+"""Model construction entry point: config → LM (or CNN)."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import LM
+
+
+def build_model(config: ModelConfig) -> LM:
+    if config.family not in ("dense", "vlm", "moe", "audio", "ssm", "hybrid"):
+        raise ValueError(f"unknown family '{config.family}'")
+    return LM(config)

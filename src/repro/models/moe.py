@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k experts.
+
+Covers both assigned MoE archs:
+  * qwen2-moe-a2.7b   — 4 shared + 60 routed, top-4
+  * deepseek-moe-16b  — 2 shared + 64 routed, top-6 (fine-grained experts)
+
+Dispatch is GShard/MaxText-style capacity-based einsum dispatch with TOKEN
+GROUPING: tokens are split into groups of ``group_size`` and capacity is
+enforced per group, so the dispatch/combine tensors are (G, tg, E, Cg)
+instead of (T, E, C) — bounded activation memory at any sequence length.
+Compute stays proportional to top_k·tokens·capacity_factor, NOT to the
+number of experts, so the roofline's MODEL_FLOPS/HLO_FLOPs ratio stays
+honest.
+
+Expert weights carry an explicit leading expert dim (E, D, F); the sharding
+rules put TP inside each expert (F on the 'model' axis), which divides evenly
+for both archs (1408 % 16 == 0) and avoids uneven-expert-count EP
+(60 % 16 != 0). The combine tensor is accumulated per selected-expert slot
+(top_k ≤ 6 unrolled) to avoid a 4-D (t,k,E,C) one-hot intermediate.
+
+Returns a Switch-style load-balancing auxiliary loss alongside the output.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, ffn_apply, ffn_init
+
+
+def moe_init(key, d_model: int, num_experts: int, num_shared: int,
+             expert_d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    e = num_experts
+
+    def stack_init(k, d_in, d_out):
+        kk = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk[i], d_in, d_out, dtype) for i in range(e)])
+
+    params = {
+        "router": dense_init(ks[0], d_model, e, jnp.float32),  # fp32 router
+        "experts": {
+            "w_gate": stack_init(ks[1], d_model, expert_d_ff),
+            "w_up": stack_init(ks[2], d_model, expert_d_ff),
+            "w_down": stack_init(ks[3], expert_d_ff, d_model),
+        },
+    }
+    if num_shared:
+        params["shared"] = ffn_init(
+            ks[4], d_model, num_shared * expert_d_ff, "swiglu", dtype
+        )
+    return params
+
+
+def _group_capacity(group_size: int, num_experts: int, top_k: int,
+                    factor: float) -> int:
+    cap = int(factor * group_size * top_k / num_experts)
+    return max(8, ((cap + 7) // 8) * 8)   # MXU-friendly multiple of 8
+
+
+def _moe_groups(
+    params: dict,
+    xt: jnp.ndarray,                # (G, tg, D) — one group per row
+    *,
+    top_k: int,
+    capacity_factor: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Grouped capacity dispatch for a batch of groups. Returns (y, aux)."""
+    G, tg, D = xt.shape
+    E = params["router"].shape[1]
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, tg, E)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (G, tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    C = _group_capacity(tg, E, top_k, capacity_factor)
+
+    # Position of each (token, k) assignment inside its expert's buffer,
+    # counted over the flattened (token-major, then k) order within a group.
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)         # (G, tg, k, E)
+    flat_sel = sel.reshape(G, tg * top_k, E)
+    pos = (jnp.cumsum(flat_sel, axis=1) - flat_sel).reshape(G, tg, top_k, E)
+    pos = jnp.sum(pos * sel, axis=-1)                          # (G, tg, k)
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # combine[g,t,e,c] = Σ_k gate·1[expert=e]·1[slot=c]; accumulated per k
+    combine = jnp.zeros((G, tg, E, C), xt.dtype)
+    for j in range(top_k):
+        oe = jax.nn.one_hot(gate_idx[..., j], E, dtype=xt.dtype)         # (G,tg,E)
+        oc = jax.nn.one_hot(
+            jnp.where(keep[..., j], pos[..., j], C), C + 1, dtype=xt.dtype
+        )[..., :-1]                                                      # (G,tg,C)
+        contrib = jnp.einsum("gte,gtc->gtec", oe, oc)
+        combine = combine + contrib * gate_vals[..., j, None, None].astype(xt.dtype)
+    dispatch = (combine != 0).astype(xt.dtype)                 # (G, tg, E, C)
+
+    # route tokens to expert buffers; run expert FFNs batched over (E, G·C)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)            # (G, E, C, D)
+
+    w = params["experts"]
+    gate = jnp.einsum("gecd,edf->gecf", xe, w["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xe, w["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(xe.dtype) * up
+    ye = jnp.einsum("gecf,efd->gecd", h, w["w_down"])          # (G, E, C, D)
+
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)              # (G, tg, D)
+
+    if "shared" in params:
+        y = y + ffn_apply(params["shared"], xt, "swiglu")
+
+    # Switch-style auxiliary load-balancing loss
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    fe = jnp.mean(jnp.sum(sel.astype(jnp.float32), axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * fe)
+    return y, aux
+
+
+def moe_apply(
+    params: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+    scan_tokens: int = 8192,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,D), aux load-balancing loss scalar).
+
+    Groups are (batch row × seq chunk of ``group_size``). When the local
+    token count exceeds ``scan_tokens`` the sequence-chunk axis is SCANNED
+    with a rematerialized body, so the (G, tg, E, C) dispatch/combine and
+    (G, E, C, D) expert-buffer tensors never exceed
+    ~scan_tokens·top_k·capacity_factor·D elements — bounded activation
+    memory at any sequence length (the k·cf× expansion of capacity MoE is
+    otherwise the memory bottleneck of both assigned MoE archs).
+    """
+    B, S, D = x.shape
+    tg = min(group_size, S)
+    if S % tg != 0:
+        raise ValueError(f"S={S} not divisible by group_size {tg}")
+    n_steps = S // tg
+    xs = x.reshape(B, n_steps, tg, D)
+
+    # how many seq-chunks per scan step (≥1), bounded by scan_tokens
+    per_step_tokens = B * tg
+    chunks_per_step = max(1, scan_tokens // max(per_step_tokens, 1))
+    if n_steps <= chunks_per_step:
+        y, aux = _moe_groups(
+            params, x.reshape(B * n_steps, tg, D),
+            top_k=top_k, capacity_factor=capacity_factor,
+        )
+        return y.reshape(B, S, D), aux
+
+    if n_steps % chunks_per_step != 0:
+        chunks_per_step = 1
+    n_outer = n_steps // chunks_per_step
+    xs = jnp.moveaxis(
+        xs.reshape(B, n_outer, chunks_per_step, tg, D), 1, 0
+    )                                                          # (n_outer, B, cps, tg, D)
+
+    @jax.checkpoint
+    def body(aux_sum, x_step):
+        Bc = x_step.shape[0]
+        y, aux = _moe_groups(
+            params, x_step.reshape(Bc * chunks_per_step, tg, D),
+            top_k=top_k, capacity_factor=capacity_factor,
+        )
+        return aux_sum + aux, y.reshape(Bc, chunks_per_step, tg, D)
+
+    aux, ys = jax.lax.scan(body, jnp.float32(0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y, aux / n_outer

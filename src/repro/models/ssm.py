@@ -1,0 +1,455 @@
+"""Recurrent sequence-mixing cells: mLSTM + sLSTM (xLSTM) and Mamba (hymba).
+
+All three expose a *parallel/chunked* training path and a *single-step*
+decode path with an explicit recurrent state, so the same module backs
+``train_4k`` and ``long_500k`` (O(1)-state decode — these are the archs the
+assignment runs at 500k context).
+
+mLSTM (arXiv:2405.04517): matrix-memory LSTM with exponential gating.
+Training uses the chunkwise-parallel form — intra-chunk attention-like
+scores with cumulative gate decay + inter-chunk recurrent state (C, n, m)
+carried by a scan — the stabilized formulation (max-state m) from the paper's
+appendix. Decode is the plain stabilized recurrence.
+
+sLSTM: scalar-memory LSTM with recurrent gate contributions (block-diagonal
+R per head). Inherently sequential → lax.scan over time.
+
+Mamba: selective SSM (diag A, input-dependent B, C, Δ) with causal depthwise
+conv; training path scans over time carrying (B, d_inner, N) state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by mLSTM and Mamba paths)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D), w: (K, D) depthwise causal conv along S.
+
+    Convention: ``w[K-1]`` multiplies the CURRENT timestep (matches
+    ``causal_conv1d_step``'s window layout [oldest, ..., current]).
+    """
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4): unrolled adds fuse into one kernel
+        out = out + xp[:, k : k + x.shape[1], :] * w[k][None, None, :]
+    return out
+
+
+def causal_conv1d_step(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                       w: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step. x_t: (B, D); conv_state: (B, K-1, D)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,D)
+    out = jnp.einsum("bkd,kd->bd", window, w)
+    return out, window[:, -(K - 1):, :] if K > 1 else conv_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, head_dim: int,
+               conv_kernel: int, dtype) -> dict:
+    """mLSTM block params: up-proj (×2), conv, q/k/v, gates, down-proj."""
+    ks = jax.random.split(key, 8)
+    d_inner = num_heads * head_dim
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * d_inner, dtype),   # (xm | z)
+        "conv_w": (jax.random.normal(ks[1], (conv_kernel, d_inner), jnp.float32)
+                   * 0.1).astype(dtype),
+        "wq": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[3], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[4], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[5], d_inner, 2 * num_heads, dtype),  # i,f logits
+        "b_if": jnp.concatenate(
+            [jnp.zeros((num_heads,), jnp.float32),
+             jnp.linspace(3.0, 6.0, num_heads, dtype=jnp.float32)]  # f bias>0
+        ).astype(dtype),
+        "w_down": dense_init(ks[6], d_inner, d_model, dtype),
+        "out_norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _mlstm_qkvif(params: dict, x: jnp.ndarray, num_heads: int):
+    """Shared projection path for both chunked and step forms."""
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    d_inner = up.shape[-1] // 2
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    return xm, z
+
+
+def mlstm_state_init(batch: int, num_heads: int, head_dim: int,
+                     conv_kernel: int, d_inner: int):
+    return {
+        "C": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, conv_kernel - 1, d_inner), jnp.float32),
+    }
+
+
+def mlstm_apply(params: dict, x: jnp.ndarray, *, num_heads: int,
+                chunk: int = 256, return_state: bool = False):
+    """Chunkwise-parallel mLSTM over a full sequence. x: (B, S, D).
+
+    With ``return_state`` also returns the final recurrent state
+    {C, n, m, conv} for subsequent decoding (prefill path).
+    """
+    B, S, D = x.shape
+    xm, z = _mlstm_qkvif(params, x, num_heads)
+    d_inner = xm.shape[-1]
+    hd = d_inner // num_heads
+
+    xc = causal_conv1d(xm, params["conv_w"].astype(jnp.float32).astype(xm.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xm.dtype)
+
+    q = jnp.einsum("bsd,de->bse", xc, params["wq"]).reshape(B, S, num_heads, hd)
+    k = jnp.einsum("bsd,de->bse", xc, params["wk"]).reshape(B, S, num_heads, hd)
+    v = jnp.einsum("bsd,de->bse", xm, params["wv"]).reshape(B, S, num_heads, hd)
+    if_log = (jnp.einsum("bsd,dh->bsh", xc, params["w_if"])
+              + params["b_if"][None, None, :]).astype(jnp.float32)
+    a = if_log[..., :num_heads]                                # log input gate
+    f = jax.nn.log_sigmoid(if_log[..., num_heads:])            # log forget gate
+
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        raise ValueError(f"S={S} % chunk={chunk} != 0")
+    nc = S // chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    # reshape to (B, nc, c, H, ...) then scan over chunks
+    qc = q.reshape(B, nc, chunk, num_heads, hd)
+    kc = k.reshape(B, nc, chunk, num_heads, hd)
+    vc = v.reshape(B, nc, chunk, num_heads, hd)
+    ac = a.reshape(B, nc, chunk, num_heads)
+    fc = f.reshape(B, nc, chunk, num_heads)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))             # s <= t
+
+    @jax.checkpoint
+    def body(carry, xs):
+        C, n, m = carry                                        # (B,H,hd,hd)...
+        qi, ki, vi, ai, fi = xs                                # (B,c,H,...)
+        b = jnp.cumsum(fi, axis=1)                             # (B,c,H) Σ log f
+        btot = b[:, -1, :]                                     # (B,H)
+
+        # stabilizers
+        m_inter = b + m[:, None, :]                            # (B,c,H)
+        s_intra = ai - b                                       # a_s - b_s
+        m_intra = b + jax.lax.cummax(s_intra, axis=1)
+        m_t = jnp.maximum(m_inter, m_intra)                    # (B,c,H)
+
+        # intra-chunk weights: exp(b_t - b_s + a_s - m_t) for s<=t
+        dmat = (b[:, :, None, :] - b[:, None, :, :]
+                + ai[:, None, :, :] - m_t[:, :, None, :])      # (B,t,s,H)
+        wmat = jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki,
+                            preferred_element_type=jnp.float32) * scale
+        pw = scores * wmat                                     # (B,t,s,H)
+        h_intra = jnp.einsum("btsh,bshd->bthd", pw.astype(vi.dtype), vi,
+                             preferred_element_type=jnp.float32)
+        n_intra = jnp.einsum("btsh->bth", pw)                  # Σ_s pw  ... (B,t,H)
+
+        # inter-chunk (state) contribution: q_t · C · exp(b_t + m_prev - m_t)
+        inter_scale = jnp.exp(b + m[:, None, :] - m_t)         # (B,c,H)
+        qs = qi.astype(jnp.float32) * scale
+        h_inter = jnp.einsum("bthd,bhde->bthe", qs, C) * inter_scale[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qs, n) * inter_scale
+
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), jnp.exp(-m_t))
+        h = (h_intra + h_inter) / denom[..., None]             # (B,c,H,hd)
+
+        # state update to end of chunk
+        m_next = jnp.maximum(m + btot,
+                             jnp.max(ai + btot[:, None, :] - b, axis=1))
+        decay = jnp.exp(m + btot - m_next)                     # (B,H)
+        kw = jnp.exp(ai + btot[:, None, :] - b - m_next[:, None, :])  # (B,c,H)
+        kf = ki.astype(jnp.float32) * kw[..., None]
+        C_next = C * decay[..., None, None] + jnp.einsum(
+            "bchd,bche->bhde", kf, vi.astype(jnp.float32))
+        n_next = n * decay[..., None] + jnp.sum(kf, axis=1)
+        return (C_next, n_next, m_next), h
+
+    C0 = jnp.zeros((B, num_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, num_heads, hd), jnp.float32)
+    m0 = jnp.full((B, num_heads), 0.0, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, ac, fc))
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), xs)    # (nc,B,c,H,hd)
+
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_inner).astype(x.dtype)
+    # per-channel output norm + z-gate + down projection
+    hn = h * params["out_norm_scale"][None, None, :].astype(h.dtype)
+    out = hn * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsd,de->bse", out, params["w_down"])
+    if not return_state:
+        return out
+    K = params["conv_w"].shape[0]
+    state = {"C": Cf, "n": nf, "m": mf,
+             "conv": xm[:, -(K - 1):, :].astype(jnp.float32)}
+    return out, state
+
+
+def mlstm_step(params: dict, x_t: jnp.ndarray, state: dict, *,
+               num_heads: int) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. x_t: (B, D) → (out (B, D), new state)."""
+    B, D = x_t.shape
+    xm, z = _mlstm_qkvif(params, x_t, num_heads)
+    d_inner = xm.shape[-1]
+    hd = d_inner // num_heads
+
+    conv_out, conv_state = causal_conv1d_step(
+        xm, state["conv"].astype(xm.dtype), params["conv_w"]
+    )
+    xc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xm.dtype)
+
+    q = jnp.einsum("bd,de->be", xc, params["wq"]).reshape(B, num_heads, hd)
+    k = jnp.einsum("bd,de->be", xc, params["wk"]).reshape(B, num_heads, hd)
+    v = jnp.einsum("bd,de->be", xm, params["wv"]).reshape(B, num_heads, hd)
+    if_log = (jnp.einsum("bd,dh->bh", xc, params["w_if"])
+              + params["b_if"][None, :]).astype(jnp.float32)
+    a = if_log[:, :num_heads]
+    f = jax.nn.log_sigmoid(if_log[:, num_heads:])
+
+    C, n, m = state["C"], state["n"], state["m"]
+    m_next = jnp.maximum(f + m, a)                              # (B,H)
+    decay = jnp.exp(f + m - m_next)
+    iw = jnp.exp(a - m_next)
+    kf = k.astype(jnp.float32)
+    C = C * decay[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    )
+    n = n * decay[..., None] + iw[..., None] * kf
+
+    scale = 1.0 / np.sqrt(hd)
+    qs = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), jnp.exp(-m_next))
+    h = (num / den[..., None]).reshape(B, d_inner).astype(x_t.dtype)
+
+    hn = h * params["out_norm_scale"][None, :].astype(h.dtype)
+    out = hn * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bd,de->be", out, params["w_down"])
+    return out, {"C": C, "n": n, "m": m_next, "conv": conv_state.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    hd = d_model // num_heads
+    return {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, dtype),   # i,f,z,o
+        # recurrent weights: block-diagonal per head (H, hd, 4*hd)
+        "r_gates": (jax.random.normal(ks[1], (num_heads, hd, 4 * hd), jnp.float32)
+                    / np.sqrt(hd)).astype(dtype),
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d_model,), jnp.float32),
+            jnp.full((d_model,), 3.0, jnp.float32),   # forget bias
+            jnp.zeros((2 * d_model,), jnp.float32),
+        ]).astype(dtype),
+        "w_out": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def slstm_state_init(batch: int, d_model: int):
+    z = lambda: jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z(), "h": z(), "n": z(), "m": jnp.full((batch, d_model), -1e30,
+                                                        jnp.float32)}
+
+
+def _slstm_cell_pre(params: dict, wx_t: jnp.ndarray, st: dict, num_heads: int):
+    """One sLSTM step given the PRE-COMPUTED input contribution.
+
+    ``wx_t = x_t @ W_gates + b`` (B, 4D) fp32 — hoisting that GEMM out of
+    the time scan is the key memory/bandwidth optimization: only the truly
+    recurrent term (h_{t-1} · R) stays inside the sequential loop.
+    """
+    B = wx_t.shape[0]
+    D = wx_t.shape[1] // 4
+    hd = D // num_heads
+    hprev = st["h"].reshape(B, num_heads, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hprev,
+                     params["r_gates"].astype(jnp.float32)).reshape(B, 4 * D)
+    gates = wx_t + rec
+    i_log, f_log, z_in, o_in = jnp.split(gates, 4, axis=-1)
+    f_log = jax.nn.log_sigmoid(f_log)
+
+    m_new = jnp.maximum(f_log + st["m"], i_log)
+    i_g = jnp.exp(i_log - m_new)
+    f_g = jnp.exp(f_log + st["m"] - m_new)
+    c = f_g * st["c"] + i_g * jnp.tanh(z_in)
+    n = f_g * st["n"] + i_g
+    h = jax.nn.sigmoid(o_in) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "h": h, "n": n, "m": m_new}, h
+
+
+def _slstm_cell(params: dict, x_t: jnp.ndarray, st: dict, num_heads: int):
+    """One sLSTM step from raw input (decode path)."""
+    wx = (x_t @ params["w_gates"].astype(jnp.float32)
+          + params["b_gates"].astype(jnp.float32))
+    return _slstm_cell_pre(params, wx, st, num_heads)
+
+
+def slstm_apply(params: dict, x: jnp.ndarray, *, num_heads: int,
+                chunk: int = 256, return_state: bool = False):
+    """Sequential sLSTM over (B, S, D); returns (B, S, D).
+
+    Two-level time scan: the input GEMM runs once in parallel over S; the
+    recurrence scans CHUNKS of ``chunk`` steps with a rematerialized chunk
+    body, so backward stores only O(S/chunk) states instead of O(S).
+    """
+    B, S, D = x.shape
+    wx = (jnp.einsum("bsd,df->bsf", x.astype(jnp.float32),
+                     params["w_gates"].astype(jnp.float32))
+          + params["b_gates"].astype(jnp.float32))              # (B, S, 4D)
+    st0 = slstm_state_init(B, D)
+
+    c = min(chunk, S)
+    nc = S // c
+    wxc = jnp.moveaxis(wx.reshape(B, nc, c, 4 * D), (1, 2), (0, 1))  # (nc,c,B,4D)
+
+    @jax.checkpoint
+    def chunk_fn(st, wx_chunk):
+        def step(st, wx_t):
+            st, h = _slstm_cell_pre(params, wx_t, st, num_heads)
+            return st, h
+
+        return jax.lax.scan(step, st, wx_chunk)
+
+    stf, hs = jax.lax.scan(chunk_fn, st0, wxc)                   # (nc,c,B,D)
+    h = jnp.moveaxis(hs.reshape(S, B, D), 0, 1).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, params["w_out"])
+    return (out, stf) if return_state else out
+
+
+def slstm_step(params: dict, x_t: jnp.ndarray, state: dict, *,
+               num_heads: int) -> Tuple[jnp.ndarray, dict]:
+    st, h = _slstm_cell(params, x_t.astype(jnp.float32), state, num_heads)
+    out = jnp.einsum("bd,de->be", h.astype(x_t.dtype), params["w_out"])
+    return out, st
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — hymba's parallel SSM heads
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, d_inner: int, ssm_state: int,
+               conv_kernel: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    N = ssm_state
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner, dtype),      # x | z
+        "conv_w": (jax.random.normal(ks[1], (conv_kernel, d_inner), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_bcdt": dense_init(ks[2], d_inner, 2 * N + 1, dtype),      # B, C, Δ
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_inner, 1)
+        )),                                                           # (d_inner,N)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "dt_bias": jnp.full((1,), -4.0, jnp.float32),
+        "w_out": dense_init(ks[3], d_inner, d_model, dtype),
+    }
+
+
+def mamba_state_init(batch: int, d_inner: int, ssm_state: int, conv_kernel: int):
+    return {
+        "h": jnp.zeros((batch, d_inner, ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_kernel - 1, d_inner), jnp.float32),
+    }
+
+
+def _mamba_scan_inputs(params: dict, xi: jnp.ndarray):
+    """Common projections. xi: (..., d_inner) post-conv activations."""
+    bcdt = jnp.einsum("...d,dn->...n", xi, params["w_bcdt"]).astype(jnp.float32)
+    N = params["a_log"].shape[1]
+    B_t, C_t, dt = bcdt[..., :N], bcdt[..., N:2 * N], bcdt[..., -1:]
+    dt = jax.nn.softplus(dt + params["dt_bias"])               # (..., 1)
+    return B_t, C_t, dt
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, *, chunk: int = 256,
+                return_state: bool = False):
+    """Selective SSM over (B, S, D) via chunked time scan; returns (B, S, D).
+
+    Projections/conv run in parallel over S; the recurrence scans chunks
+    with a rematerialized body (backward stores O(S/chunk) states).
+    """
+    B, S, D = x.shape
+    up = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    d_inner = up.shape[-1] // 2
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    xc = causal_conv1d(xin, params["conv_w"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    B_t, C_t, dt = _mamba_scan_inputs(params, xc)              # (B,S,N),(B,S,1)
+    A = -jnp.exp(params["a_log"])                              # (d_inner, N)
+
+    def body(h, xs):
+        xct, Bt, Ct, dtt = xs                                  # (B,d),(B,N),(B,N),(B,1)
+        dA = jnp.exp(dtt[..., None] * A[None])                 # (B,d,N)
+        dBx = (dtt * xct.astype(jnp.float32))[..., None] * Bt[:, None, :]
+        h = h * dA + dBx                                       # (B,d,N)
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    c = min(chunk, S)
+    nc = S // c
+
+    def to_chunks(t):
+        # (B, S, F) → (nc, c, B, F)
+        return jnp.moveaxis(
+            t.reshape(B, nc, c, t.shape[-1]), (1, 2), (0, 1))
+
+    @jax.checkpoint
+    def chunk_fn(h, xs_chunk):
+        return jax.lax.scan(body, h, xs_chunk)
+
+    h0 = jnp.zeros((B, d_inner, params["a_log"].shape[1]), jnp.float32)
+    xs = tuple(to_chunks(t) for t in (xc, B_t, C_t, dt))
+    hf, ys = jax.lax.scan(chunk_fn, h0, xs)                    # (nc,c,B,d_inner)
+    y = jnp.moveaxis(ys.reshape(S, B, d_inner), 0, 1)
+    y = y + xc.astype(jnp.float32) * params["d_skip"][None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"])
+    if not return_state:
+        return out
+    K = params["conv_w"].shape[0]
+    state = {"h": hf, "conv": xin[:, -(K - 1):, :].astype(jnp.float32)}
+    return out, state
+
+
+def mamba_step(params: dict, x_t: jnp.ndarray, state: dict
+               ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode. x_t: (B, D)."""
+    up = jnp.einsum("bd,df->bf", x_t, params["w_in"])
+    d_inner = up.shape[-1] // 2
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    conv_out, conv_state = causal_conv1d_step(
+        xin, state["conv"].astype(xin.dtype), params["conv_w"]
+    )
+    xc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x_t.dtype)
+
+    B_t, C_t, dt = _mamba_scan_inputs(params, xc)              # (B,N),(B,N),(B,1)
+    A = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt[..., None] * A[None])                      # (B,d,N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B_t[:, None, :]
+    h = state["h"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    y = y + xc.astype(jnp.float32) * params["d_skip"][None, :]
+    y = y.astype(x_t.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)
+    out = jnp.einsum("bd,de->be", y, params["w_out"])
+    return out, {"h": h, "conv": conv_state.astype(jnp.float32)}

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import Optimizer, adamw, momentum, sgd
+from repro.optim.masked import masked
+from repro.optim.schedules import (
+    constant,
+    cosine_decay,
+    paper_rho_schedule,
+    warmup_cosine,
+)
+from repro.optim.grad_compression import (
+    compress_int8,
+    decompress_int8,
+    ErrorFeedbackState,
+    error_feedback_init,
+    error_feedback_compress,
+)

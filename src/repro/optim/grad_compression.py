@@ -1,0 +1,61 @@
+"""Gradient compression for the slow cross-pod data-parallel axis.
+
+At 512+ chips the pod-level all-reduce crosses DCI/optical links that are an
+order of magnitude slower than intra-pod ICI. We provide int8 quantization
+with per-tensor scale and error feedback (residual accumulation), the
+standard trick for convergence-neutral 4× gradient traffic reduction.
+
+Usage in a train step (see launch/train.py): compress → all-reduce the int8
+payload over the 'pod' axis → decompress → optimizer. Inside jit the
+quantize/dequantize lowers to elementwise ops around the collective, so XLA
+overlaps them with the reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree of fp32 residuals
+
+
+def error_feedback_init(params: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def error_feedback_compress(
+    grads: Any, ef: ErrorFeedbackState
+) -> Tuple[Any, Any, ErrorFeedbackState]:
+    """Quantize (grads + residual); carry the quantization error forward.
+
+    Returns (q_tree, scale_tree, new_state). The caller all-reduces q (and
+    averages scales) across the pod axis, then calls ``decompress_int8``.
+    """
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, ef.residual
+    )
+    qs = jax.tree.map(compress_int8, corrected)
+    q_tree = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    new_resid = jax.tree.map(
+        lambda c, q, s: c - decompress_int8(q, s), corrected, q_tree, s_tree
+    )
+    return q_tree, s_tree, ErrorFeedbackState(residual=new_resid)

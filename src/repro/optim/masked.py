@@ -1,0 +1,29 @@
+"""Masked-optimizer wrapper — the client-side half of the paper's contract.
+
+Wraps any ``Optimizer`` so that (a) incoming gradients are masked (the
+paper's "mask function sets corresponding gradients as zeros for pruned
+weights") and (b) outgoing updates are masked, guaranteeing that pruned
+positions remain EXACTLY zero regardless of momentum/Adam state leakage or
+weight decay. This is what makes pruning a first-class feature of the
+training stack: ``masked(adamw(...), masks)`` drops into any train step.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.masks import apply_mask, mask_gradients
+from repro.optim.optimizers import Optimizer
+
+
+def masked(inner: Optimizer, masks: Any) -> Optimizer:
+    def init(params):
+        return inner.init(apply_mask(params, masks))
+
+    def update(grads, state, params=None):
+        grads = mask_gradients(grads, masks)
+        updates, state = inner.update(grads, state, params)
+        updates = apply_mask(updates, masks)
+        return updates, state
+
+    return Optimizer(init, update)

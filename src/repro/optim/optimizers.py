@@ -1,0 +1,125 @@
+"""Optimizers, built in-framework (no optax on the box).
+
+Small optax-style API: ``init(params) -> state``, ``update(grads, state,
+params) -> (updates, state)`` where ``updates`` are ADDED to params. All state
+is a pytree congruent with params, so it checkpoints and shards like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.float32(lr)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        del params
+        return SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        lrt = _lr_at(lr, state.step)
+        updates = jax.tree.map(lambda g: -lrt * g.astype(jnp.float32), grads)
+        return updates, SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jnp.ndarray
+    velocity: Any
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        lrt = _lr_at(lr, state.step)
+        vel = jax.tree.map(
+            lambda v, g: beta * v + g.astype(jnp.float32), state.velocity, grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda v, g: -lrt * (beta * v + g.astype(jnp.float32)), vel, grads
+            )
+        else:
+            upd = jax.tree.map(lambda v: -lrt * v, vel)
+        return upd, MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with fp32 moments (bf16-safe for large-scale training)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lrt = _lr_at(lr, state.step)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lrt * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                u = u - lrt * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)

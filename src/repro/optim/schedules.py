@@ -1,0 +1,47 @@
+"""Learning-rate and penalty schedules."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.float32(value)
+
+
+def cosine_decay(peak: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(peak) * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return sched
+
+
+def paper_rho_schedule(rho_init: float = 1e-4, rho_max: float = 1e-1,
+                       mult: float = 10.0, every_iters: int = 110):
+    """Paper §V-A: ρ starts at 1e-4, ×10 every 11 epochs (110 iters), cap 1e-1."""
+
+    def sched(it: int) -> float:
+        steps = it // every_iters
+        # guard the exponent: mult**steps overflows float for huge ``it``
+        if steps * math.log(max(mult, 1 + 1e-12)) > math.log(rho_max / rho_init):
+            return float(rho_max)
+        return float(min(rho_init * mult**steps, rho_max))
+
+    return sched

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_sharding,
+    param_shardings,
+    batch_spec,
+)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Models annotate tensors with LOGICAL axis names ("batch", "embed", "mlp",
+"heads", "kv", "vocab", "experts", "layers", ...). A set of AxisRules maps
+logical names to mesh axes. The same model code then runs on the single-pod
+(data, model) mesh, the multi-pod (pod, data, model) mesh, or un-meshed CPU
+tests (where ``constrain`` is a no-op).
+
+Parameter-sharding policy (DESIGN.md §5):
+  * output-feature dims ("heads", "mlp", "vocab", "expert_mlp") → "model" (TP)
+  * input-feature dim "embed" → "data" (FSDP / ZeRO-3 style) when divisible
+  * "batch" → ("pod", "data") — pod is just more data parallelism
+  * "layers" (scan stack) / "experts" → replicated (experts use internal TP)
+  * long-context decode KV "kvseq" → "data" (sequence parallelism: batch=1
+    cells shard the cache over the batch axis instead)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name → mesh axis (or tuple of mesh axes)."""
+
+    rules: Tuple[Tuple[str, Any], ...]
+    mesh: Optional[Mesh] = None
+
+    def lookup(self, name: Optional[str]):
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def _axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[name]
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tuple of logical axis names (None = replicated).
+
+        A mesh axis may be consumed at most once; later duplicates degrade to
+        replicated (GSPMD would reject duplicate axes in one spec). With
+        ``shape``, any dim not divisible by its mesh-axis extent degrades to
+        replicated too (e.g. batch=1 long-context decode, kv_heads < TP).
+        """
+        used = set()
+        out = []
+        for i, name in enumerate(logical):
+            ax = self.lookup(name)
+            if ax is None:
+                out.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            free = tuple(a for a in axes if a not in used)
+            if shape is not None and free:
+                ext = 1
+                for a in free:
+                    ext *= self._axis_size(a)
+                while free and shape[i] % ext != 0:
+                    free = free[:-1]
+                    ext = 1
+                    for a in free:
+                        ext *= self._axis_size(a)
+            if not free:
+                out.append(None)
+                continue
+            used.update(free)
+            out.append(free if len(free) > 1 else free[0])
+        return P(*out)
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True) -> AxisRules:
+    """Production rules for the (pod,)data,model meshes."""
+    batch_axes: Any = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    rules = [
+        ("batch", batch_axes),
+        ("heads", "model"),
+        ("kv_heads", "model"),
+        ("kv_dim", "model"),    # fallback when kv_heads < TP degree
+        ("mlp", "model"),
+        ("vocab", "model"),
+        ("expert_mlp", "model"),
+        ("kvseq", "data"),      # sequence-sharded KV cache (long-context decode)
+        ("act_seq", "model"),   # Megatron-SP: residual stream S-sharded on TP
+        ("act_model", "model"), # SSM residual stream: feature dim on TP
+        ("head_dim", "model"),  # fallback when heads % TP != 0
+        # attention batch sharding over ALL axes (incl. model) — used when
+        # heads don't divide the TP degree: each device owns whole heads for
+        # a batch slice, so attention runs collective-free internally.
+        ("attn_batch", (("pod", "data", "model")
+                        if "pod" in mesh.axis_names else ("data", "model"))),
+        ("embed", "data" if fsdp else None),
+    ]
+    return AxisRules(rules=tuple(rules), mesh=mesh)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint if rules are active; else no-op.
+
+    Models call this on activations at the few points where GSPMD needs a
+    hint (post-projection, post-block); everywhere else propagation wins.
+    Shape-aware: non-divisible dims degrade to replicated.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec)
+    )
+
+
+def logical_sharding(rules: AxisRules, logical: Sequence[Optional[str]],
+                     shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(rules.mesh, rules.spec(logical, shape))
+
+
+def batch_spec(rules: AxisRules, ndim: int, *, batch_dim: int = 0) -> NamedSharding:
+    """Sharding for a data tensor: batch dim sharded, rest replicated."""
+    logical: list = [None] * ndim
+    logical[batch_dim] = "batch"
+    return logical_sharding(rules, logical)
+
+
+def param_shardings(rules: AxisRules, logical_tree: Any,
+                    shape_tree: Any = None) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    With ``shape_tree`` (congruent pytree of ShapeDtypeStructs/arrays) the
+    specs are shape-aware: non-divisible dims (e.g. granite's 49155 vocab on
+    a 16-way model axis) degrade to replicated instead of erroring.
+    """
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        n is None or isinstance(n, str) for n in x
+    )
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda names: logical_sharding(rules, names), logical_tree,
+            is_leaf=is_axes,
+        )
+    return jax.tree.map(
+        lambda names, x: logical_sharding(rules, names, shape=x.shape),
+        logical_tree, shape_tree,
+        is_leaf=is_axes,
+    )

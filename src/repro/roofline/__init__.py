@@ -1,0 +1,10 @@
+from repro.roofline.hlo_costs import Costs, analyze_hlo, parse_hlo
+from repro.roofline.hw import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    model_flops_infer,
+    model_flops_train,
+    roofline_terms,
+)

@@ -1,0 +1,81 @@
+"""TPU v5e hardware constants (the assignment's target chip) + roofline terms.
+
+    compute term    = FLOPs / (chips × peak FLOP/s)
+    memory term     = bytes / (chips × HBM bw)
+    collective term = collective bytes / (chips × ICI link bw)
+
+All terms are SECONDS for one step of the lowered program; the dominant term
+is the roofline-predicted step time, and useful-FLOPs/dominant-term/peak is
+the roofline fraction ("MFU-bound").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per chip per direction)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline-predicted step time = the dominant term (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.step_s,
+        }
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    *,
+    per_device: bool = True,
+    chips: int = 1,
+) -> RooflineTerms:
+    """Three roofline terms in seconds.
+
+    ``per_device=True`` (our HLO numbers are post-SPMD per-device programs):
+    the per-chip denominators apply directly and ``chips`` is ignored.
+    """
+    div = 1 if per_device else max(chips, 1)
+    return RooflineTerms(
+        compute_s=flops / (div * PEAK_FLOPS_BF16),
+        memory_s=bytes_accessed / (div * HBM_BW),
+        collective_s=collective_bytes / (div * ICI_BW),
+    )
+
+
+def model_flops_train(n_params: int, n_tokens: int) -> float:
+    """6·N·D — the standard useful-FLOPs estimate for one training step."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_infer(n_params: int, n_tokens: int) -> float:
+    """2·N·D — forward-only useful FLOPs."""
+    return 2.0 * n_params * n_tokens

@@ -1,0 +1,127 @@
+"""Roofline report generator (deliverable g).
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and derives,
+per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          [per-device program]
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / ICI_link_bw
+    dominant        = argmax of the three
+    MODEL_FLOPS     = 6·N·D (train) or 2·N·D (inference), N = active params
+    useful ratio    = MODEL_FLOPS / (HLO_FLOPs × devices)
+    roofline frac   = useful compute time / roofline step time
+
+Usage:
+    PYTHONPATH=src python -m repro.roofline.report \
+        --dryrun experiments/dryrun --mesh 16x16 --format md
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline.hw import (
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    model_flops_infer,
+    model_flops_train,
+    roofline_terms,
+)
+
+MESH_DEVICES = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return model_flops_train(n, tokens)
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return model_flops_infer(n, tokens)
+    # decode: one new token per sequence
+    return model_flops_infer(n, shape.global_batch)
+
+
+def load_cells(dryrun_dir: str, mesh: str) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            cells.append(rec)
+            continue
+        terms = roofline_terms(
+            rec["flops"], rec["bytes_accessed"], rec["collectives"]["total"]
+        )
+        mf = model_flops_for(rec["arch"], rec["shape"])
+        devices = MESH_DEVICES[mesh]
+        useful = mf / max(rec["flops"] * devices, 1e-9)
+        # roofline fraction: time the USEFUL flops would take at peak vs the
+        # roofline-predicted step time of the compiled program
+        useful_time = (mf / devices) / PEAK_FLOPS_BF16
+        frac = useful_time / max(terms.step_s, 1e-12)
+        rec.update(terms.as_dict())
+        rec["model_flops"] = mf
+        rec["useful_flop_ratio"] = useful
+        rec["roofline_fraction"] = frac
+        cells.append(rec)
+    return cells
+
+
+def render_md(cells: List[Dict], mesh: str) -> str:
+    lines = [
+        f"### Roofline — mesh {mesh} ({MESH_DEVICES.get(mesh, '?')} chips, "
+        "per-device terms, TPU v5e: 197 TF/s bf16 · 819 GB/s HBM · "
+        "~50 GB/s/link ICI)",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in cells:
+        if rec.get("status") != "ok":
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                f"SKIP: {rec.get('reason', rec.get('error', '?'))[:48]} | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {rec['compute_s']:.3e} | {rec['memory_s']:.3e} "
+            f"| {rec['collective_s']:.3e} | **{rec['dominant']}** "
+            f"| {rec['useful_flop_ratio']:.2f} "
+            f"| {rec['roofline_fraction']:.2%} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--format", default="md", choices=["md", "json"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = load_cells(args.dryrun, args.mesh)
+    if args.format == "json":
+        text = json.dumps(cells, indent=1)
+    else:
+        text = render_md(cells, args.mesh)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

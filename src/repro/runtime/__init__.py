@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import FaultTolerantLoop, StepResult
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import ElasticPlan, replan_mesh

@@ -1,0 +1,54 @@
+"""Straggler detection.
+
+In a synchronous-SPMD program a straggling host delays every step (the
+collectives act as a barrier). Detection is therefore a *time-series*
+problem on the step watermark: we keep a robust running estimate (median +
+MAD) of step time and flag steps exceeding ``threshold`` deviations.
+Mitigation on a real fleet: report the slow host to the scheduler and
+trigger the elastic replan (runtime/elastic.py) to swap in a hot spare —
+here the hook is a callback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    seconds: float
+    median: float
+    deviation: float
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 50, threshold: float = 3.0,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.events: List[StragglerEvent] = []
+
+    @staticmethod
+    def _median(xs: List[float]) -> float:
+        s = sorted(xs)
+        n = len(s)
+        return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+    def record(self, step: int, seconds: float) -> Optional[StragglerEvent]:
+        if len(self.window) >= 8:
+            med = self._median(list(self.window))
+            mad = self._median([abs(x - med) for x in self.window]) or 1e-9
+            dev = (seconds - med) / (1.4826 * mad)
+            if dev > self.threshold:
+                ev = StragglerEvent(step, seconds, med, dev)
+                self.events.append(ev)
+                if self.on_straggler:
+                    self.on_straggler(ev)
+                self.window.append(seconds)
+                return ev
+        self.window.append(seconds)
+        return None

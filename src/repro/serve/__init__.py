@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, Request, Result
+from repro.serve.sampler import greedy_sample, temperature_sample

@@ -1,0 +1,20 @@
+"""Token samplers for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_sample(logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    """logits: (B, 1, V) → (B, 1) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, key: jax.Array,
+                       temperature: float = 1.0) -> jnp.ndarray:
+    scaled = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    B = logits.shape[0]
+    flat = scaled.reshape(B, -1)
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks[:, None].astype(jnp.int32)

@@ -1,0 +1,7 @@
+from repro.utils.registry import Registry
+from repro.utils.tree import (
+    tree_map_with_path_str,
+    tree_size,
+    tree_nonzero,
+    tree_allclose,
+)

@@ -1,0 +1,42 @@
+"""Tiny string->object registry used for schemes, archs, optimizers."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable
+
+
+class Registry:
+    """A named registry mapping string keys to factories/objects."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Any] = {}
+
+    def register(self, name: str, obj: Any = None) -> Callable:
+        """Register ``obj`` under ``name``. Usable as a decorator."""
+        if obj is not None:
+            if name in self._entries:
+                raise KeyError(f"{self.kind} '{name}' already registered")
+            self._entries[name] = obj
+            return obj
+
+        def deco(fn):
+            self.register(name, fn)
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._entries[name]
+        except KeyError:
+            known = ", ".join(sorted(self._entries))
+            raise KeyError(
+                f"unknown {self.kind} '{name}'; known: [{known}]"
+            ) from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self) -> Iterable[str]:
+        return sorted(self._entries)

@@ -1,0 +1,57 @@
+"""Pytree helpers shared across the framework."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """``jax.tree.map`` where ``fn`` receives a '/'-joined string path."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), leaf), tree
+    )
+
+
+def tree_paths(tree: Any):
+    """List of '/'-joined string paths for every leaf."""
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return [_path_str(path) for path, _ in leaves]
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of scalar elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_nonzero(tree: Any) -> int:
+    """Total number of nonzero elements across all leaves."""
+    return int(sum(int(jnp.count_nonzero(x)) for x in jax.tree.leaves(tree)))
+
+
+def tree_allclose(a: Any, b: Any, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single host CPU device (the dry-run manages its own
+# XLA_FLAGS device-count override in a separate process — see
+# launch/dryrun.py; do NOT set it here).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,109 @@
+"""Per-assigned-architecture smoke tests (assignment deliverable f).
+
+Each arch instantiates a REDUCED config of the same family (tiny dims, few
+experts, small vocab) and runs one forward + one train step on CPU,
+asserting output shapes and no NaNs. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.configs.base import SHAPES
+from repro.configs.shapes import applicable_shapes, input_specs, skip_reason
+from repro.launch.train import init_state, make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_and_train_step(arch, rng):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(rng)
+
+    if cfg.input_kind == "tokens":
+        inputs = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(rng, (B, S, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    h, _, _ = model.hidden_states(params, inputs)
+    assert h.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+    opt = adamw(1e-3)
+    state = init_state(model, opt, rng)
+    step = jax.jit(make_train_step(model, opt))
+    state, metrics = step(state, {"inputs": inputs, "labels": labels})
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_full_config_exact_assignment_numbers(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 0, 151936),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 0, 102400),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch.endswith("moe-a2.7b"):
+        assert (cfg.num_experts, cfg.moe_top_k, cfg.expert_d_ff) == (60, 4, 1408)
+        assert cfg.num_shared_experts == 4
+    if arch == "deepseek-moe-16b":
+        assert (cfg.num_experts, cfg.moe_top_k, cfg.expert_d_ff) == (64, 6, 1408)
+        assert cfg.num_shared_experts == 2
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16
+
+
+def test_skip_rules():
+    """Assignment shape-skip rules are encoded exactly."""
+    skips = {
+        a: [s.name for s in SHAPES.values()
+            if skip_reason(get_config(a), s) is not None]
+        for a in ARCHS
+    }
+    assert skips["qwen2-1.5b"] == ["long_500k"]
+    assert skips["granite-3-2b"] == ["long_500k"]
+    assert skips["phi4-mini-3.8b"] == ["long_500k"]
+    assert skips["pixtral-12b"] == ["long_500k"]
+    assert skips["qwen2-moe-a2.7b"] == ["long_500k"]
+    assert skips["deepseek-moe-16b"] == ["long_500k"]
+    assert skips["h2o-danube-1.8b"] == []        # SWA → runs long_500k
+    assert skips["xlstm-1.3b"] == []             # SSM → runs long_500k
+    assert skips["hymba-1.5b"] == []             # hybrid → runs long_500k
+    assert skips["hubert-xlarge"] == ["decode_32k", "long_500k"]  # encoder
+    total_run = sum(4 - len(v) for v in skips.values())
+    assert total_run == 32 and sum(len(v) for v in skips.values()) == 8
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_input_specs_structs(arch):
+    """input_specs returns ShapeDtypeStructs for every applicable cell."""
+    cfg = get_config(arch)
+    for shape in applicable_shapes(cfg):
+        specs = input_specs(cfg, shape)
+        leaves = jax.tree.leaves(specs)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) or
+                   isinstance(l, (int, str)) for l in leaves)
+        if shape.kind == "train":
+            assert specs["batch"]["inputs"].shape[0] == shape.global_batch
+        if shape.kind == "decode":
+            assert specs["tokens"].shape[0] == shape.global_batch

@@ -1,0 +1,109 @@
+"""Attention equivalences: q-chunk scan vs pairs-scan vs dense softmax.
+
+The §Perf rewrite (EXPERIMENTS.md iters 1/2/5) must be numerically
+invisible: all three formulations and the custom-VJP gradients agree for
+every (shape, GQA grouping, causal/window mask) combination.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.models.attention import (
+    blockwise_attention,
+    blockwise_attention_pairs,
+    cache_insert,
+    decode_attention,
+)
+
+
+def _qkv(seed, B, S, H, KV, hd):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd), jnp.float32),
+            jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32),
+            jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_chunks=st.integers(2, 4),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    windowed=st.booleans(),
+)
+def test_property_formulations_agree(seed, s_chunks, kv, g, causal, windowed):
+    chunk = 64
+    S = s_chunks * chunk
+    H = kv * g
+    window = 96 if windowed else None
+    q, k, v = _qkv(seed, 1, S, H, kv, 32)
+    a = blockwise_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    b = blockwise_attention_pairs(q, k, v, causal=causal, window=window,
+                                  chunk=chunk)
+    c = ref.ref_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), causal=st.booleans())
+def test_property_custom_vjp_gradients(seed, causal):
+    q, k, v = _qkv(seed, 1, 256, 4, 2, 32)
+    t = jax.random.normal(jax.random.PRNGKey(seed + 1), q.shape)
+
+    def loss_new(q, k, v):
+        return jnp.sum(blockwise_attention(q, k, v, causal=causal,
+                                           window=None, chunk=64) * t)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(blockwise_attention_pairs(q, k, v, causal=causal,
+                                                 window=None, chunk=64) * t)
+
+    g1 = jax.grad(loss_new, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-9
+        np.testing.assert_allclose(np.asarray(a) / scale,
+                                   np.asarray(b) / scale,
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestDecodeConsistency:
+    def test_decode_matches_full_attention_last_position(self):
+        """decode_attention(cache of S-1, 1 new token) == row S-1 of the
+        full causal attention."""
+        B, S, H, KV, hd = 2, 64, 4, 2, 16
+        q, k, v = _qkv(11, B, S, H, KV, hd)
+        full = ref.ref_attention(q, k, v, causal=True)
+
+        slot_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        out = decode_attention(
+            q[:, -1:, :, :], k, v, slot_pos,
+            q_pos=jnp.full((B,), S - 1, jnp.int32),
+        )
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, -1]),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_ring_cache_insert(self):
+        B, C, KV, hd = 1, 8, 2, 4
+        kc = jnp.zeros((B, C, KV, hd))
+        vc = jnp.zeros((B, C, KV, hd))
+        sp = jnp.full((B, C), -1, jnp.int32)
+        for pos in range(12):  # wraps past C
+            kn = jnp.full((B, 1, KV, hd), float(pos))
+            kc, vc, sp = cache_insert(kc, vc, sp, kn, kn,
+                                      jnp.full((B,), pos, jnp.int32),
+                                      ring=True)
+        # the last C positions live in the ring at slot pos % C
+        for pos in range(4, 12):
+            np.testing.assert_allclose(np.asarray(kc[0, pos % C, 0, 0]),
+                                       float(pos))
+            assert int(sp[0, pos % C]) == pos

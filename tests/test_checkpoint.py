@@ -1,0 +1,68 @@
+"""Checkpointing: atomic commits, rotation, resume, reshard-on-restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+@pytest.fixture
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, tree, extra={"step": 7})
+    out = restore_pytree(d, tree)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert out["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_atomic_no_partial_visible(tmp_path, tree):
+    """A crashed save never leaves a manifest-bearing directory behind."""
+    root = str(tmp_path)
+    mgr = CheckpointManager(root, keep=2)
+    mgr.save(1, tree)
+    # simulate a crash: a stale tmp dir exists but is ignored
+    os.makedirs(os.path.join(root, "tmp.ckpt.dead"), exist_ok=True)
+    assert mgr.latest_step() == 1
+    assert mgr.steps() == [1]
+
+
+def test_rotation_and_latest(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, tree, extra={"step": s})
+    assert mgr.steps() == [30, 40]
+    assert mgr.latest_step() == 40
+    assert mgr.extra()["step"] == 40
+
+
+def test_restore_template_mismatch_raises(tmp_path, tree):
+    d = str(tmp_path / "c")
+    save_pytree(d, tree)
+    bad = {"params": {"w": tree["params"]["w"]}}
+    with pytest.raises(ValueError):
+        restore_pytree(d, bad)
+
+
+def test_restore_with_target_shardings(tmp_path, tree):
+    """Elastic reshard path: restore device_puts onto provided shardings
+    (single-device here; the mechanism is mesh-agnostic)."""
+    d = str(tmp_path / "c2")
+    save_pytree(d, tree)
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev),
+                             tree)
+    out = restore_pytree(d, tree, shardings=shardings)
+    assert out["params"]["w"].devices() == {dev}

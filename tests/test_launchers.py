@@ -1,0 +1,50 @@
+"""CLI launcher smoke tests: prune → masked-retrain → serve round-trip."""
+
+import sys
+
+import pytest
+
+
+def _run(module_main, argv):
+    old = sys.argv
+    sys.argv = argv
+    try:
+        module_main()
+    finally:
+        sys.argv = old
+
+
+@pytest.fixture(scope="module")
+def pruned_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("pruned"))
+    from repro.launch.prune import main
+
+    _run(main, ["prune", "--arch", "qwen2-1.5b", "--reduced",
+                "--scheme", "irregular", "--rate", "2", "--iters", "2",
+                "--batch", "4", "--seq", "32", "--out", out])
+    return out
+
+
+def test_prune_outputs(pruned_dir):
+    import os
+
+    assert os.path.exists(pruned_dir + "/pruned/manifest.json")
+    assert os.path.exists(pruned_dir + "/masks/manifest.json")
+
+
+def test_masked_train_from_mask_ckpt(pruned_dir, tmp_path):
+    from repro.launch.train import main
+
+    _run(main, ["train", "--arch", "qwen2-1.5b", "--reduced",
+                "--steps", "2", "--batch", "2", "--seq", "32",
+                "--masks", pruned_dir + "/masks",
+                "--ckpt-dir", str(tmp_path / "ckpt")])
+
+
+def test_serve_from_pruned_ckpt(pruned_dir):
+    from repro.launch.serve import main
+
+    _run(main, ["serve", "--arch", "qwen2-1.5b", "--reduced",
+                "--ckpt", pruned_dir + "/pruned", "--requests", "2",
+                "--batch", "2", "--prompt-len", "4", "--max-new", "2",
+                "--max-seq", "64"])

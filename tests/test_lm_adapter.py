@@ -1,0 +1,87 @@
+"""LMAdapter: the paper's pruning as a first-class feature on the LM archs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core import (
+    LMAdapter,
+    PruneConfig,
+    PrivacyPreservingPruner,
+    compression_rate,
+)
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = reduced_config("qwen2-1.5b", num_layers=2, d_model=64, d_ff=128,
+                         vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _cfg(**kw):
+    base = dict(scheme="irregular", alpha=0.5, iterations=3, batch_size=4,
+                lr=1e-3, rho_init=1e-3, rho_every_iters=2)
+    base.update(kw)
+    return PruneConfig(**base)
+
+
+class TestLMAdapter:
+    def test_layer_roundtrip(self, lm):
+        model, params = lm
+        ad = LMAdapter(model, seq_len=16)
+        lp = ad.layer_params(params, 1)
+        # write back modified layer params and read them again
+        lp2 = jax.tree.map(lambda x: x + 1.0, lp)
+        params2 = ad.with_layer_params(params, 1, lp2)
+        lp3 = ad.layer_params(params2, 1)
+        for a, b in zip(jax.tree.leaves(lp2), jax.tree.leaves(lp3)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32), rtol=1e-2)
+        # layer 0 untouched
+        lp0 = ad.layer_params(params2, 0)
+        for a, b in zip(jax.tree.leaves(ad.layer_params(params, 0)),
+                        jax.tree.leaves(lp0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_apply_layer_matches_full_forward(self, lm):
+        model, params = lm
+        ad = LMAdapter(model, seq_len=16)
+        batch = ad.synthetic_batch(jax.random.PRNGKey(1), 2)
+        x = ad.embed(params, batch)
+        for n in range(ad.num_layers):
+            x = ad.apply_layer(n, ad.layer_params(params, n), x)
+        from repro.models.layers import rmsnorm
+
+        h_manual = rmsnorm(params["final_norm"], x, model.config.norm_eps)
+        h_full, _, _ = model.hidden_states(params, batch)
+        np.testing.assert_allclose(np.asarray(h_manual, np.float32),
+                                   np.asarray(h_full, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_prune_lm_layerwise(self, lm):
+        model, params = lm
+        ad = LMAdapter(model, seq_len=16)
+        res = PrivacyPreservingPruner(ad, _cfg()).run(
+            jax.random.PRNGKey(2), params)
+        assert compression_rate(res.masks) == pytest.approx(2.0, rel=0.1)
+        # attention/mlp weights pruned, embed and norms untouched
+        masks = res.masks
+        assert masks["embed"] is None
+        assert masks["final_norm"]["scale"] is None
+        w_mask = np.asarray(masks["blocks"]["attn"]["wq"], np.float32)
+        assert 0.4 < w_mask.mean() < 0.6
+        # pruned weights exactly zero
+        w = np.asarray(res.params["blocks"]["attn"]["wq"])
+        assert (w[w_mask == 0] == 0).all()
+
+    def test_ssm_rejected_for_layerwise(self):
+        cfg = reduced_config("xlstm-1.3b")
+        model = build_model(cfg)
+        with pytest.raises(ValueError):
+            LMAdapter(model)

@@ -1,0 +1,149 @@
+"""Unit + property tests for the S_n projections (paper §IV-D)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as pj
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestIrregular:
+    def test_keep_count(self):
+        w = _rand(0, (16, 36))
+        for alpha in (1 / 16, 0.25, 0.5):
+            out = pj.project_irregular(w, alpha=alpha)
+            assert int(jnp.count_nonzero(out)) == int(alpha * w.size)
+
+    def test_keeps_largest_magnitudes(self):
+        w = _rand(1, (8, 8))
+        out = pj.project_irregular(w, alpha=0.25)
+        kept = np.abs(np.asarray(w))[np.asarray(out) != 0]
+        dropped = np.abs(np.asarray(w))[np.asarray(out) == 0]
+        assert kept.min() >= dropped.max()
+
+    def test_kept_values_unchanged(self):
+        w = _rand(2, (8, 8))
+        out = np.asarray(pj.project_irregular(w, alpha=0.5))
+        nz = out != 0
+        np.testing.assert_array_equal(out[nz], np.asarray(w)[nz])
+
+
+class TestFilterColumn:
+    def test_filter_rows(self):
+        w = _rand(3, (16, 9))
+        out = pj.project_filter(w, alpha=0.25)
+        rows = np.asarray(jnp.any(out != 0, axis=1))
+        assert rows.sum() == 4
+        # surviving rows are those with the largest norms
+        norms = np.linalg.norm(np.asarray(w), axis=1)
+        assert set(np.nonzero(rows)[0]) == set(np.argsort(-norms)[:4])
+
+    def test_column(self):
+        w = _rand(4, (16, 12))
+        out = pj.project_column(w, alpha=0.5)
+        cols = np.asarray(jnp.any(out != 0, axis=0))
+        assert cols.sum() == 6
+
+    def test_column_grouped(self):
+        w = _rand(5, (8, 16))
+        out = pj.project_column(w, alpha=0.5, group=4)
+        cols = np.asarray(jnp.any(out != 0, axis=0)).reshape(4, 4)
+        # group-aligned: each group entirely alive or dead
+        per_group = cols.any(axis=1)
+        assert all(cols[i].all() == per_group[i] for i in range(4))
+        assert per_group.sum() == 2
+
+
+class TestKernelPattern:
+    def test_exactly_four_per_kernel(self):
+        w4 = _rand(6, (8, 4, 3, 3))
+        out = pj.project_kernel_pattern(w4)
+        per = np.asarray(jnp.sum(out.reshape(8, 4, 9) != 0, axis=-1))
+        assert (per == 4).all()
+
+    def test_library_patterns(self):
+        pats = pj.canonical_patterns_3x3()
+        assert pats.shape == (8, 9)
+        assert (pats.sum(axis=1) == 4).all()
+        assert pats[:, 4].all()  # center always kept
+        w4 = _rand(7, (8, 4, 3, 3))
+        out, pid = pj.project_kernel_pattern_library(w4)
+        per = np.asarray(jnp.sum((out != 0).reshape(8, 4, 9), axis=-1))
+        assert (per == 4).all()
+        # each kernel's mask matches its assigned library pattern
+        masks = (np.asarray(out) != 0).reshape(8, 4, 9)
+        assert (masks == pats[np.asarray(pid)]).all()
+
+    def test_connectivity(self):
+        w4 = _rand(8, (8, 8, 3, 3))
+        out = pj.project_connectivity(w4, alpha=1 / 9)  # 2.25·(1/9)=0.25
+        alive = np.asarray(jnp.any(out.reshape(8, 8, 9) != 0, axis=-1))
+        assert alive.sum() == 16  # 0.25 · 64
+
+    def test_pattern_composition_rate(self):
+        """kernel-pattern + connectivity hits the target total ratio."""
+        w4 = _rand(9, (16, 8, 3, 3))
+        out = pj.project(w4.reshape(16, 72), "pattern", alpha=1 / 9,
+                         conv_shape=(16, 8, 3, 3))
+        frac = float(jnp.mean(out != 0))
+        assert abs(frac - 1 / 9) < 0.01
+
+
+class TestTilePattern:
+    def test_structure(self):
+        w = _rand(10, (256, 64))
+        out = pj.project_tile_pattern(w, block_p=128, group_q=8, keep=4)
+        assert float(jnp.mean(out != 0)) == pytest.approx(0.5)
+        m = (np.asarray(out) != 0).reshape(2, 128, 8, 8)
+        # shared lane pattern across each 128-row block
+        assert (m == m[:, :1]).all()
+        assert (m[:, 0].sum(axis=-1) == 4).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(2, 12), q=st.integers(2, 12),
+    alpha=st.floats(0.1, 0.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_property_idempotent_and_nonexpansive(p, q, alpha, seed):
+    """Π is idempotent and Π(w) is the closest point of S_n to w
+    (so ‖Π(w)−w‖ ≤ ‖w‖ since 0 ∈ S_n), for every scheme."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (p, q), jnp.float32)
+    for scheme in ("irregular", "filter", "column"):
+        out = pj.project(w, scheme, alpha=alpha)
+        out2 = pj.project(out, scheme, alpha=alpha)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                                   rtol=0, atol=0)
+        d_proj = float(jnp.linalg.norm(out - w))
+        d_zero = float(jnp.linalg.norm(w))
+        assert d_proj <= d_zero + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(a=st.integers(1, 6), b=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_property_kernel_pattern_idempotent(a, b, seed):
+    w4 = jax.random.normal(jax.random.PRNGKey(seed), (a, b, 3, 3))
+    out = pj.project_kernel_pattern(w4)
+    out2 = pj.project_kernel_pattern(out)
+    per = np.asarray(jnp.sum(out.reshape(a, b, 9) != 0, axis=-1))
+    assert (per <= 4).all()          # ties may keep extra zeros as zeros
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.05, 0.95))
+def test_property_masked_energy_maximal_filter(seed, alpha):
+    """Filter projection retains the max-energy row subset (optimality)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (12, 7))
+    out = pj.project_filter(w, alpha=alpha)
+    k = max(1, int(np.floor(alpha * 12)))
+    norms = np.sort(np.linalg.norm(np.asarray(w), axis=1))[::-1]
+    kept_energy = float(jnp.sum(jnp.square(out)))
+    best_energy = float((norms[:k] ** 2).sum())
+    assert kept_energy == pytest.approx(best_energy, rel=1e-5)

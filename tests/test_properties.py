@@ -1,0 +1,151 @@
+"""Hypothesis property tests for the framework's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import admm
+from repro.core.masks import apply_mask, compression_rate, mask_gradients, sparsity
+from repro.core.projections import project_tile_pattern
+from repro.core.schemes import LayerSpec, PruneConfig, build_specs, project_tree
+from repro.optim import adamw, momentum, sgd
+
+
+def _tree(seed, shape=(12, 16)):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {
+        "layers": [{"w": jax.random.normal(k1, shape), "bias": jnp.zeros(shape[0])}],
+        "head": {"w": jax.random.normal(k2, (4, shape[0])),
+                 "bias": jnp.zeros(4)},
+    }
+
+
+class TestMaskInvariants:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.1, 0.9))
+    def test_sparsity_matches_alpha(self, seed, alpha):
+        params = _tree(seed)
+        cfg = PruneConfig(scheme="irregular", alpha=alpha)
+        specs = build_specs(params, cfg)
+        pruned = project_tree(params, specs)
+        masks = jax.tree.map(
+            lambda s, w: None if s is None else (w != 0).astype(jnp.float32),
+            specs, pruned,
+            is_leaf=lambda x: x is None or isinstance(x, LayerSpec),
+        )
+        s = sparsity(masks)
+        # each prunable tensor keeps ⌊α·n⌋ — aggregate within 10% of target
+        assert abs((1 - s) - alpha) < 0.1
+        assert compression_rate(masks) > 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_apply_mask_idempotent(self, seed):
+        params = _tree(seed)
+        cfg = PruneConfig(scheme="irregular", alpha=0.25)
+        specs = build_specs(params, cfg)
+        pruned = project_tree(params, specs)
+        masks = jax.tree.map(
+            lambda w: (w != 0).astype(jnp.float32), pruned
+        )
+        once = apply_mask(pruned, masks)
+        twice = apply_mask(once, masks)
+        for a, b in zip(jax.tree.leaves(once), jax.tree.leaves(twice)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_mask_gradients_blocks_pruned_only(self, seed):
+        k = jax.random.PRNGKey(seed)
+        g = jax.random.normal(k, (8, 8))
+        m = (jax.random.uniform(jax.random.fold_in(k, 1), (8, 8)) > 0.5
+             ).astype(jnp.float32)
+        out = mask_gradients({"w": g}, {"w": m})["w"]
+        np.testing.assert_array_equal(np.asarray(out == 0), np.asarray(m == 0)
+                                      | (np.asarray(g) == 0))
+
+
+class TestADMMInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_dual_update_algebra(self, seed):
+        """U_k = U_{k-1} + W_k − Z_k exactly (Eqn. 7)."""
+        params = _tree(seed)
+        av = admm.admm_init(params)
+        cfg = PruneConfig(scheme="irregular", alpha=0.5)
+        specs = build_specs(params, cfg)
+        av = admm.proximal_step(lambda t: project_tree(t, specs), params, av)
+        av2 = admm.dual_step(params, av)
+        w = np.asarray(params["layers"][0]["w"])
+        z = np.asarray(av.z["layers"][0]["w"])
+        u0 = np.asarray(av.u["layers"][0]["w"])
+        np.testing.assert_allclose(
+            np.asarray(av2.u["layers"][0]["w"]), u0 + w - z, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), rho=st.floats(1e-4, 1.0))
+    def test_penalty_nonnegative_and_zero_at_consensus(self, seed, rho):
+        params = _tree(seed)
+        cfg = PruneConfig(scheme="irregular", alpha=0.5)
+        specs = build_specs(params, cfg)
+        av = admm.admm_init(params)      # Z=W, U=0 → consensus
+        pen = admm.augmented_penalty(params, av, rho, specs)
+        assert float(pen) == 0.0
+        moved = jax.tree.map(lambda x: x + 1.0, params)
+        pen2 = admm.augmented_penalty(moved, av, rho, specs)
+        assert float(pen2) > 0.0
+
+
+class TestTilePatternStructure:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           keep=st.sampled_from([2, 4]))
+    def test_lanes_shared_within_tile(self, seed, keep):
+        """Within every (block_p × group_q) tile the SAME lanes survive for
+        all output columns — the property the Pallas kernel's packing needs."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (128, 16))
+        out = np.asarray(project_tile_pattern(
+            w, block_p=128, group_q=8, keep=keep))
+        # orientation: (P, Q) = (128 outputs, 16 input lanes)
+        alive = out != 0
+        for g in range(16 // 8):
+            grp = alive[:, g * 8:(g + 1) * 8]          # (128, 8)
+            pattern = grp.any(axis=0)
+            assert pattern.sum() <= keep
+            # every row either matches the tile pattern or is all-zero there
+            assert (grp <= pattern[None, :]).all()
+
+
+class TestOptimizers:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           lr=st.floats(1e-4, 1e-1))
+    def test_sgd_direction(self, seed, lr):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (6,))
+        opt = sgd(lr)
+        s = opt.init(None)
+        upd, _ = opt.update({"w": g}, s)
+        np.testing.assert_allclose(np.asarray(upd["w"]),
+                                   -lr * np.asarray(g), rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_adamw_decreases_quadratic(self, seed):
+        """A few AdamW steps must reduce a convex quadratic."""
+        key = jax.random.PRNGKey(seed)
+        target = jax.random.normal(key, (8,))
+        params = {"w": jnp.zeros(8)}
+        opt = adamw(0.1)
+        s = opt.init(params)
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        l0 = float(loss(params))
+        for _ in range(25):
+            g = jax.grad(loss)(params)
+            upd, s = opt.update(g, s, params)
+            params = jax.tree.map(lambda a, u: a + u, params, upd)
+        assert float(loss(params)) < l0 * 0.5

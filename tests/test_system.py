@@ -1,0 +1,164 @@
+"""End-to-end behaviour of the paper's system (Fig. 2b workflow).
+
+The full privacy-preserving loop at test scale:
+  1. CLIENT trains a model on her confidential dataset (high accuracy);
+  2. SYSTEM DESIGNER prunes it using ONLY random synthetic data (never
+     touching the dataset) → (pruned model, mask function);
+  3. CLIENT retrains with the mask on her confidential data;
+  4. the retrained model recovers accuracy while the discovered sparse
+     architecture is preserved EXACTLY.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PruneConfig,
+    PrivacyPreservingPruner,
+    compression_rate,
+    cross_entropy,
+    greedy_prune,
+    sparsity,
+)
+from repro.core.retrain import retrain
+from repro.data import ClassificationPipeline, DataConfig
+from repro.models.cnn import vgg16
+from repro.optim import adamw
+
+HWC = (8, 8, 3)
+
+
+@pytest.fixture(scope="module")
+def system():
+    """(model, trained teacher params, confidential pipeline, base accuracy)."""
+    model = vgg16(num_classes=4, width_mult=0.125, image_hwc=HWC)
+    pipe = ClassificationPipeline(
+        DataConfig(kind="classification", num_classes=4, global_batch=32,
+                   image_hwc=HWC, seed=3),
+        noise=0.3,
+    )
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(3e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, batch):
+        x, y = batch
+
+        def loss_fn(q):
+            return cross_entropy(model.apply(q, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        upd, s = opt.update(grads, s, p)
+        p = jax.tree.map(lambda a, u: (a + u).astype(a.dtype), p, upd)
+        return p, s, loss
+
+    it = iter(pipe)
+    for _ in range(120):
+        params, opt_state, _ = step(params, opt_state, next(it))
+    base_acc = _accuracy(model, params, pipe)
+    assert base_acc > 0.9, f"teacher should train well, got {base_acc}"
+    return model, params, pipe, base_acc
+
+
+def _accuracy(model, params, pipe, batches=3):
+    apply = jax.jit(model.apply)
+    correct = total = 0
+    for i in range(batches):
+        x, y = pipe.batch_at(77_000 + i)
+        correct += int(jnp.sum(jnp.argmax(apply(params, x), -1) == y))
+        total += int(y.shape[0])
+    return correct / total
+
+
+def _prune_cfg(**kw):
+    base = dict(
+        scheme="irregular", alpha=1 / 8,
+        exclude=tuple(PruneConfig().exclude) + (r".*head.*",),
+        iterations=12, batch_size=16, lr=1e-3, rho_init=1e-3,
+        rho_every_iters=4,
+    )
+    base.update(kw)
+    return PruneConfig(**base)
+
+
+class TestEndToEnd:
+    def test_full_privacy_preserving_workflow(self, system):
+        model, teacher, pipe, base_acc = system
+
+        # -- system designer: synthetic data only ------------------------
+        # 4x on the width-0.125 test net (≈ the paper's 16x on full VGG-16:
+        # the tiny net has far less redundancy per layer)
+        pruner = PrivacyPreservingPruner(model, _prune_cfg(alpha=1 / 4))
+        result = pruner.run(jax.random.PRNGKey(5), teacher)
+        assert compression_rate(result.masks) == pytest.approx(4.0, rel=0.06)
+
+        # pruned weights are exactly zero under the mask
+        for lp, lm in zip(result.params["layers"], result.masks["layers"]):
+            w, m = np.asarray(lp["w"]), np.asarray(lm["w"])
+            assert (w[m == 0] == 0).all()
+
+        # -- client: masked retraining on confidential data --------------
+        retrained, hist = retrain(
+            jax.random.PRNGKey(6), result.params, result.masks,
+            model.apply, cross_entropy, adamw(3e-3), iter(pipe), steps=150,
+        )
+        acc = _accuracy(model, retrained, pipe)
+        assert acc > base_acc - 0.12, (
+            f"retrained accuracy {acc} too far below base {base_acc}"
+        )
+
+        # sparse architecture preserved EXACTLY through retraining
+        for lp, lm in zip(retrained["layers"], result.masks["layers"]):
+            w, m = np.asarray(lp["w"]), np.asarray(lm["w"])
+            assert (w[m == 0] == 0).all()
+        # and sparsity didn't drift
+        assert sparsity(result.masks) == pytest.approx(
+            1 - 1 / 4, rel=0.06
+        )
+
+    def test_designer_never_needs_client_data(self, system):
+        """The pruner's only inputs are (teacher weights, PRNG key, config)."""
+        model, teacher, _pipe, _ = system
+        pruner = PrivacyPreservingPruner(model, _prune_cfg(iterations=4))
+        # runs to completion with no dataset anywhere in scope
+        result = pruner.run(jax.random.PRNGKey(1), teacher)
+        assert result.masks is not None
+
+    def test_admm_distills_better_than_greedy(self, system):
+        """Table V's mechanism: the ADMM student tracks teacher outputs on
+        synthetic probes much better than one-shot magnitude pruning."""
+        model, teacher, _pipe, _ = system
+        cfg = _prune_cfg(alpha=1 / 12, iterations=16)
+        admm_res = PrivacyPreservingPruner(model, cfg).run(
+            jax.random.PRNGKey(2), teacher
+        )
+        greedy_res = greedy_prune(teacher, cfg)
+
+        probe = model.synthetic_batch(jax.random.PRNGKey(3), 32)
+        t_out = model.apply(teacher, probe)
+        d_admm = float(jnp.mean((model.apply(admm_res.params, probe) - t_out) ** 2))
+        d_greedy = float(
+            jnp.mean((model.apply(greedy_res.params, probe) - t_out) ** 2)
+        )
+        assert d_admm < d_greedy, (admm_res, d_admm, d_greedy)
+
+    def test_mask_function_blocks_pruned_gradients(self, system):
+        """Observation (iii): pruned weights receive zero gradient updates."""
+        model, teacher, pipe, _ = system
+        pruner = PrivacyPreservingPruner(model, _prune_cfg(iterations=4))
+        result = pruner.run(jax.random.PRNGKey(7), teacher)
+
+        retrained, _ = retrain(
+            jax.random.PRNGKey(8), result.params, result.masks,
+            model.apply, cross_entropy, adamw(1e-2), iter(pipe), steps=5,
+        )
+        for lp0, lp1, lm in zip(result.params["layers"], retrained["layers"],
+                                result.masks["layers"]):
+            m = np.asarray(lm["w"])
+            w1 = np.asarray(lp1["w"])
+            # pruned stay zero; kept weights did move (lr is large)
+            assert (w1[m == 0] == 0).all()
+            assert np.abs(w1 - np.asarray(lp0["w"])).max() > 0
