@@ -1,0 +1,115 @@
+"""BENCH_packed_serve — dense vs packed serving hot path (decode + prefill).
+
+The serving-side perf trajectory of the PrunedArtifact API: a reduced LM is
+tile-pattern pruned (4-of-8 lanes → 2x weight compression on every packed
+GEMM), packed through the scheme→kernel registry, and the engine's jitted
+decode step is timed dense vs packed.
+
+On this CPU box the packed path runs the Pallas kernels in interpret mode,
+so wall-clock favors dense — the numbers that matter for trajectory are the
+weight-byte reduction (what a TPU's HBM-bound decode step is proportional
+to) and the analytic roofline estimate reported alongside. Token identity
+dense vs packed is asserted so every timed configuration is a correct one.
+
+    PYTHONPATH=src python benchmarks/packed_serve.py
+    (REPRO_BENCH_FAST=1 for the CI smoke variant)
+
+Writes experiments/bench/BENCH_packed_serve.json via benchmarks/common.emit.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.roofline.hw import HBM_BW
+from repro.serve.engine import Request, ServeEngine
+from repro.sparse import tree_packed_bytes
+
+from benchmarks import common
+
+
+def _median_ms(fn, iters: int) -> float:
+    fn()                                   # compile
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e3)
+
+
+def bench_decode(batch: int = 8, seq: int = 32) -> List[Dict]:
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 64, "tile_group_q": 8,
+                          "tile_keep": 4}},
+    )
+    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack()
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
+                                 0, cfg.vocab_size)
+    iters = 3 if common.fast_mode() else 10
+    rows = []
+    token_runs = {}
+    for mode, packed in (("dense", False), ("packed", True)):
+        engine = ServeEngine(model, artifact, batch_size=batch,
+                             max_seq_len=2 * seq, packed=packed)
+        p = engine.params
+        cache, logits = engine._prefill(p, prompts)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        ms_prefill = _median_ms(lambda: engine._prefill(p, prompts)[1], iters)
+        ms_decode = _median_ms(lambda: engine._decode(p, cache, tok)[1], iters)
+
+        reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=8)
+                for i in range(batch)]
+        token_runs[mode] = [r.tokens for r in engine.generate(reqs)]
+
+        weight_bytes = tree_packed_bytes(p)
+        # HBM-bound decode estimate: every weight byte crosses HBM once/step
+        est_decode_ms = weight_bytes / HBM_BW * 1e3
+        rows.append({
+            "bench": "packed_serve", "mode": mode,
+            "batch": batch, "prompt_len": seq,
+            "weight_bytes": int(weight_bytes),
+            "cpu_ms_prefill": round(ms_prefill, 3),
+            "cpu_ms_decode_step": round(ms_decode, 3),
+            "tpu_est_ms_decode_step": round(est_decode_ms, 5),
+        })
+    assert token_runs["dense"] == token_runs["packed"], (
+        "packed decode diverged from dense — kernel correctness regression"
+    )
+    dense_b = rows[0]["weight_bytes"]
+    for r in rows:
+        r["weight_bytes_ratio"] = round(dense_b / r["weight_bytes"], 3)
+        r["tokens_identical"] = True
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = bench_decode()
+    for r in rows:
+        print(f"  packed_serve {r['mode']:>6s}: decode "
+              f"{r['cpu_ms_decode_step']:.2f}ms/step (cpu, interpret), "
+              f"weights {r['weight_bytes']/1e6:.2f}MB "
+              f"({r['weight_bytes_ratio']}x), "
+              f"tpu-est {r['tpu_est_ms_decode_step']:.4f}ms/step")
+    common.emit("BENCH_packed_serve", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

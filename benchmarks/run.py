@@ -28,13 +28,15 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: table1,table2,table4,table5,fig3")
+                    help="comma list: table1,table2,table4,table5,fig3,"
+                         "packed_serve")
     args = ap.parse_args()
     want = None if args.only == "all" else set(args.only.split(","))
 
     from benchmarks import (
         common,
         fig3_kernels,
+        packed_serve,
         table1_schemes,
         table2_pattern,
         table4_formulations,
@@ -47,6 +49,7 @@ def main() -> None:
         "table4": table4_formulations.run,
         "table5": table5_greedy.run,
         "fig3": fig3_kernels.run,
+        "packed_serve": packed_serve.run,
     }
 
     summary = {}

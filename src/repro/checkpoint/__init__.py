@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpointer import (
     CheckpointManager,
+    load_pytree,
     restore_pytree,
     save_pytree,
 )

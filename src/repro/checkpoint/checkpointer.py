@@ -13,6 +13,13 @@ Properties required at 1000-node scale, all implemented here:
     256-chip (or any) mesh. On a real multi-host deployment the np.save
     writer is replaced by a per-shard writer behind the same interface; the
     manifest format already records per-leaf shapes/dtypes for that.
+  * PACKED MANIFEST — ``sparse.PackedTensor`` leaves are first-class: the
+    manifest records each packed leaf's scheme tag, dense shape and scheme
+    metadata, and one file per packed buffer, so a serving artifact
+    round-trips through save/load without unpacking. ``load_pytree``
+    restores a checkpoint WITHOUT a template tree (structure rebuilt from
+    the manifest paths) — what artifact loading needs, since the packed
+    structure is only known from the manifest itself.
 
 No orbax on the box — this is a self-contained implementation.
 """
@@ -55,29 +62,79 @@ def _from_numpy(arr: np.ndarray, logical: str) -> np.ndarray:
     return arr
 
 
-def _leaf_paths(tree: Any) -> List[str]:
-    from repro.utils.tree import tree_map_with_path_str
+def _is_packed(x: Any) -> bool:
+    # duck-typed (lazy) so the checkpointer has no import-time dependency
+    # on repro.sparse; a PackedTensor can only appear in a tree if sparse
+    # was already imported to create it.
+    return type(x).__name__ == "PackedTensor" and hasattr(x, "buffers")
 
-    paths: List[str] = []
-    tree_map_with_path_str(lambda p, x: paths.append(p) or x, tree)
-    return paths
+
+def _leaf_paths(tree: Any) -> List[str]:
+    from repro.utils.tree import tree_paths
+
+    return tree_paths(tree, is_leaf=_is_packed)
+
+
+def _container_kinds(tree: Any, prefix: str = "",
+                     out: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Map of node path -> {kind: 'list'|'tuple', len: n} for sequences.
+
+    Recorded in the manifest so ``load_pytree`` rebuilds sequences as
+    sequences and digit-keyed DICTS as dicts — the path strings alone
+    cannot distinguish the two. The length is recorded because an element
+    whose subtree holds no leaves (e.g. an all-None masks entry)
+    contributes no paths at all.
+    """
+    if out is None:
+        out = {}
+    if _is_packed(tree):
+        return out
+    if isinstance(tree, (list, tuple)):
+        out[prefix] = {"kind": "tuple" if isinstance(tree, tuple) else "list",
+                       "len": len(tree)}
+        for i, v in enumerate(tree):
+            _container_kinds(v, f"{prefix}/{i}" if prefix else str(i), out)
+    elif isinstance(tree, dict):
+        for k, v in tree.items():
+            _container_kinds(v, f"{prefix}/{k}" if prefix else str(k), out)
+    return out
 
 
 def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
-    """Atomically save a pytree of arrays into ``directory``."""
+    """Atomically save a pytree of arrays (and PackedTensor leaves)."""
     parent = os.path.dirname(os.path.abspath(directory)) or "."
     os.makedirs(parent, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix="tmp.ckpt.", dir=parent)
     try:
-        leaves, treedef = jax.tree.flatten(tree)
+        leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_packed)
         paths = _leaf_paths(tree)
         manifest = {
             "treedef": str(treedef),
             "leaves": [],
+            "containers": _container_kinds(tree),
             "extra": extra or {},
             "time": time.time(),
         }
         for i, (path, leaf) in enumerate(zip(paths, leaves)):
+            if _is_packed(leaf):
+                # packed-manifest entry: scheme metadata + one file/buffer
+                bufs = []
+                for name, buf in zip(leaf.names, leaf.buffers):
+                    arr, logical = _to_numpy(buf)
+                    fname = f"leaf_{i:05d}.{name}.npy"
+                    np.save(os.path.join(tmp, fname), arr)
+                    bufs.append({"name": name, "file": fname,
+                                 "shape": list(arr.shape), "dtype": logical})
+                manifest["leaves"].append({
+                    "path": path,
+                    "packed": {
+                        "scheme": leaf.scheme,
+                        "shape": list(leaf.shape),
+                        "meta": [list(kv) for kv in leaf.meta],
+                        "buffers": bufs,
+                    },
+                })
+                continue
             arr, logical = _to_numpy(leaf)
             fname = f"leaf_{i:05d}.npy"
             np.save(os.path.join(tmp, fname), arr)
@@ -95,6 +152,28 @@ def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
         raise
 
 
+def _load_leaf(directory: str, meta: Dict) -> Any:
+    """Materialize one manifest entry: an array or a PackedTensor."""
+    if "packed" in meta:
+        from repro.sparse.packed import PackedTensor
+
+        p = meta["packed"]
+        names, bufs = [], []
+        for b in p["buffers"]:
+            names.append(b["name"])
+            arr = np.load(os.path.join(directory, b["file"]))
+            bufs.append(jax.numpy.asarray(_from_numpy(arr, b["dtype"])))
+        return PackedTensor(
+            scheme=p["scheme"],
+            shape=tuple(p["shape"]),
+            names=tuple(names),
+            buffers=tuple(bufs),
+            meta=tuple((k, v) for k, v in p["meta"]),
+        )
+    arr = np.load(os.path.join(directory, meta["file"]))
+    return _from_numpy(arr, meta["dtype"])
+
+
 def restore_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
     """Restore into the structure of ``like`` (with optional target shardings).
 
@@ -104,24 +183,81 @@ def restore_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
     """
     with open(os.path.join(directory, MANIFEST)) as f:
         manifest = json.load(f)
-    leaves_like, treedef = jax.tree.flatten(like)
+    leaves_like, treedef = jax.tree.flatten(like, is_leaf=_is_packed)
     if len(manifest["leaves"]) != len(leaves_like):
         raise ValueError(
             f"checkpoint has {len(manifest['leaves'])} leaves; "
             f"target structure has {len(leaves_like)}"
         )
-    arrays = []
-    for i, meta in enumerate(manifest["leaves"]):
-        arr = np.load(os.path.join(directory, meta["file"]))
-        arrays.append(_from_numpy(arr, meta["dtype"]))
+    arrays = [_load_leaf(directory, meta) for meta in manifest["leaves"]]
     restored = jax.tree.unflatten(treedef, arrays)
     if shardings is not None:
         restored = jax.tree.map(
-            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            # PackedTensor leaves stay host-resident as loaded: their
+            # buffers have packed shapes the (dense-shaped) sharding
+            # cannot describe
+            lambda x, s: x if _is_packed(x) else (
+                jax.device_put(x, s) if s is not None else jax.device_put(x)
+            ),
             restored, shardings,
-            is_leaf=lambda x: x is None,
+            is_leaf=lambda x: x is None or _is_packed(x),
         )
     return restored
+
+
+def _nest(flat: Dict[str, Any],
+          containers: Optional[Dict[str, str]] = None) -> Any:
+    """Rebuild a nested tree from '/'-joined leaf paths.
+
+    ``containers`` (manifest-recorded) says which node paths were
+    lists/tuples; when absent (pre-containers manifests) digit-keyed
+    nodes fall back to being treated as lists.
+    """
+    if list(flat) == [""]:
+        return flat[""]              # a bare leaf saved at the root
+    root: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        node = root
+        keys = path.split("/")
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = leaf
+
+    def rebuild(node, prefix):
+        if not isinstance(node, dict):
+            return node
+        out = {k: rebuild(v, f"{prefix}/{k}" if prefix else k)
+               for k, v in node.items()}
+        if containers is not None:
+            entry = containers.get(prefix)
+            if entry is not None:
+                # leaf-less elements (all-None subtrees) left no paths:
+                # restore them as None (the empty subtree)
+                seq = [out.get(str(i)) for i in range(entry["len"])]
+                return tuple(seq) if entry["kind"] == "tuple" else seq
+            return out
+        if out and all(k.isdigit() for k in out):
+            idxs = sorted(int(k) for k in out)
+            if idxs == list(range(len(idxs))):
+                return [out[str(i)] for i in idxs]
+        return out
+
+    return rebuild(root, "")
+
+
+def load_pytree(directory: str) -> Any:
+    """Restore a checkpoint WITHOUT a template tree.
+
+    The nested structure is rebuilt from the manifest's leaf paths and
+    recorded container kinds; PackedTensor leaves are reconstructed from
+    their packed-manifest entries. This is the loader serving artifacts
+    use — the packed structure is only knowable from the manifest itself.
+    """
+    with open(os.path.join(directory, MANIFEST)) as f:
+        manifest = json.load(f)
+    flat = {meta["path"]: _load_leaf(directory, meta)
+            for meta in manifest["leaves"]}
+    return _nest(flat, manifest.get("containers"))
 
 
 class CheckpointManager:

@@ -175,6 +175,29 @@ def project_kernel_pattern_library(
     return jnp.where(mask, w4, 0).astype(w4.dtype), pat_id
 
 
+def project_channel_pattern(
+    w4: jnp.ndarray, patterns: Optional[np.ndarray] = None
+) -> jnp.ndarray:
+    """CHANNEL-shared library patterns: all filters share channel c's taps.
+
+    The deployment variant of pattern pruning (scheme ``pattern_shared``):
+    one library pattern per INPUT channel, chosen to maximize retained
+    energy summed over all filters — the Euclidean projection under the
+    channel-shared constraint. This is the structure the Pallas
+    ``pattern_conv`` kernel packs losslessly (its filter-kernel-reorder
+    needs every filter of a channel to read the same 4 taps).
+    """
+    if patterns is None:
+        patterns = canonical_patterns_3x3()
+    patterns = jnp.asarray(patterns)
+    A, B, C, D = w4.shape
+    sq = jnp.square(w4.astype(jnp.float32)).reshape(A, B, C * D).sum(axis=0)
+    energy = jnp.einsum("be,pe->bp", sq, patterns.astype(jnp.float32))
+    pat_id = jnp.argmax(energy, axis=-1)                     # (B,)
+    mask = patterns[pat_id].reshape(1, B, C, D)              # shared over A
+    return jnp.where(mask, w4, 0).astype(w4.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Connectivity pruning (Eqn. 18) — prune whole kernels
 # ---------------------------------------------------------------------------
@@ -262,7 +285,8 @@ def project(
         return project_filter(w, alpha=alpha)
     if scheme == "column":
         return project_column(w, alpha=alpha, **kw)
-    if scheme in ("pattern", "kernel_pattern", "connectivity"):
+    if scheme in ("pattern", "pattern_shared", "kernel_pattern",
+                  "connectivity"):
         w4 = w.reshape(conv_shape) if conv_shape is not None else w
         if w4.ndim != 4:
             raise ValueError(f"scheme '{scheme}' needs a 4-D conv tensor")
@@ -279,6 +303,11 @@ def project(
             out = project_kernel_pattern(w4, keep=keep)
         elif scheme == "connectivity":
             out = project_connectivity(w4, alpha=alpha, pattern_keep=keep)
+        elif scheme == "pattern_shared":
+            # channel-shared library patterns + connectivity: the packable
+            # deployment composition (sparse.registry packs it losslessly)
+            out = project_channel_pattern(w4)
+            out = project_connectivity(out, alpha=alpha, pattern_keep=keep)
         else:  # sequential composition, paper §IV-D-4
             out = project_kernel_pattern(w4, keep=keep)
             out = project_connectivity(out, alpha=alpha, pattern_keep=keep)
@@ -288,4 +317,5 @@ def project(
     raise ValueError(f"unknown pruning scheme '{scheme}'")
 
 
-SCHEMES = ("irregular", "filter", "column", "pattern", "tile_pattern")
+SCHEMES = ("irregular", "filter", "column", "pattern", "pattern_shared",
+           "tile_pattern")

@@ -67,11 +67,31 @@ class SequentialAdapter(Protocol):
 
 @dataclasses.dataclass
 class PruneResult:
+    """Raw pruner output. Kept for compatibility — downstream consumers
+    should move to ``to_artifact()``: the ``sparse.PrunedArtifact`` is the
+    deployment hand-off (packing, save/load, packed serving)."""
+
     params: Any                       # pruned model (exactly sparse)
     masks: Any                        # mask function: 1=kept, 0=pruned
     specs: Any                        # LayerSpec pytree used
     history: Dict[str, List[float]]   # per-iteration diagnostics
     seconds_per_iter: float = 0.0
+
+    def to_artifact(self, **meta):
+        """Package for deployment: ``result.to_artifact().pack()``.
+
+        ``meta`` key/values are recorded in the artifact manifest (e.g.
+        arch name, compression target).
+        """
+        from repro.sparse.artifact import PrunedArtifact
+
+        info = {
+            "seconds_per_iter": self.seconds_per_iter,
+            "iterations": len(self.history.get("loss", [])),
+            **meta,
+        }
+        return PrunedArtifact(params=self.params, masks=self.masks,
+                              specs=self.specs, meta=info)
 
 
 def rho_schedule(config: PruneConfig, it: int) -> float:

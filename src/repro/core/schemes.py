@@ -30,6 +30,9 @@ DEFAULT_EXCLUDE = (
     r".*norm.*",
     r".*scale.*",
     r".*embed.*",
+    # classifier heads stored (out, in) and applied transposed (CNN
+    # `head/w`); \b keeps `lm_head` (a plain GEMM leaf) prunable
+    r".*\bhead\b.*",
     r".*router.*",
     r".*gate_logit.*",
     r".*pos_emb.*",
@@ -60,6 +63,18 @@ class LayerSpec:
     pattern_keep: int = 4              # 4-of-9 kernel patterns
 
     def project(self, w: jnp.ndarray) -> jnp.ndarray:
+        # The projections take the paper's GEMM view W in R^{P x Q} (P=out
+        # rows, Q=in/contraction columns) — conv tensors (O, I, kh, kw)
+        # already are. Model GEMM leaves are stored TRANSPOSED, (in, out)
+        # for y = x @ w, so 2-D leaves are presented as w.T: structured
+        # schemes then prune along the axes the packed kernels consume
+        # (column -> contraction rows of w; tile_pattern -> shared lanes
+        # along the contraction, blocks along the output columns).
+        if w.ndim == 2 and self.conv_shape is None:
+            return self._project_pq(w.T).T
+        return self._project_pq(w)
+
+    def _project_pq(self, w: jnp.ndarray) -> jnp.ndarray:
         if self.scheme == "column":
             return projections.project_column(
                 w, alpha=self.alpha, group=self.column_group
@@ -115,7 +130,8 @@ class PruneConfig:
             if re.fullmatch(pat, path):
                 kw.update(ov)
         # kernel schemes need a 4-D view; infer from the tensor itself
-        if kw["scheme"] in ("pattern", "kernel_pattern", "connectivity"):
+        if kw["scheme"] in ("pattern", "pattern_shared", "kernel_pattern",
+                            "connectivity"):
             if len(shape) == 4:
                 kw.setdefault("conv_shape", tuple(shape))
             elif "conv_shape" not in kw:
@@ -136,7 +152,7 @@ def _project_leaf(spec: Optional[LayerSpec], w: jnp.ndarray) -> jnp.ndarray:
     if spec is None:
         return w
     if spec.conv_shape is None and w.ndim > 2 and spec.scheme not in (
-        "pattern", "kernel_pattern", "connectivity",
+        "pattern", "pattern_shared", "kernel_pattern", "connectivity",
     ):
         # Stacked (scan-over-layers) weights: vmap the projection per layer.
         return jax.vmap(spec.project)(w)

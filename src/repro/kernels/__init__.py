@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compiler-level deployment stack.
+
+Public surface (all re-exported here):
+  matmul/conv/attention wrappers — ``tile_pattern_matmul``,
+  ``column_matmul``, ``pattern_conv``, ``flash_attention`` (jit'd,
+  interpret-mode aware) and the pack functions that build their compressed
+  operands.
+
+The pack functions remain for direct kernel-level use, but model-facing
+code should go through ``repro.sparse``: ``PrunedArtifact.pack()`` chooses
+the right packer per ``LayerSpec.scheme`` via the scheme→kernel registry,
+and ``models.layers.dense_apply`` / ``models.cnn.conv_apply`` dispatch the
+packed execution.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    assign_channel_patterns,
+    column_matmul,
+    flash_attention,
+    pack_columns,
+    pack_pattern_conv,
+    pack_tile_pattern,
+    pattern_conv,
+    tile_pattern_matmul,
+)

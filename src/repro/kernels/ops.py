@@ -3,10 +3,20 @@
 ``interpret`` defaults to True off-TPU (this box is CPU-only; interpret mode
 executes the kernel body in Python for correctness validation) and False on
 real TPU backends.
+
+NOTE: the hand-driven pack functions here are DEPRECATED for model-facing
+use — ``repro.sparse`` owns packing now (``PrunedArtifact.pack()`` resolves
+the right packer per ``LayerSpec.scheme`` through the scheme→kernel
+registry, handles stacked leaves and records scheme metadata for
+save/load). The wrappers keep their exact signatures and behavior so
+existing benchmarks/experiments run unchanged; they emit a
+DeprecationWarning pointing at the registry.
 """
 
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import Tuple
 
 import jax
@@ -23,8 +33,25 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _deprecated_pack(fn):
+    """Shim: keep the ops-level pack signature, point at repro.sparse."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        warnings.warn(
+            f"kernels.ops.{fn.__name__} is deprecated for model-facing "
+            "packing; use repro.sparse (PrunedArtifact.pack / "
+            "SPARSE_SCHEMES) which dispatches per LayerSpec.scheme",
+            DeprecationWarning, stacklevel=2,
+        )
+        return fn(*args, **kw)
+
+    return wrapper
+
+
 # -- tile-pattern sparse GEMM -------------------------------------------------
 
+@_deprecated_pack
 def pack_tile_pattern(w, **kw):
     return _pg.pack_tile_pattern(w, **kw)
 
@@ -37,6 +64,7 @@ def tile_pattern_matmul(x, w_packed, lane_idx, *, interpret=None, **kw):
 
 # -- column-pruned GEMM -------------------------------------------------------
 
+@_deprecated_pack
 def pack_columns(w, **kw):
     return _cg.pack_columns(w, **kw)
 
@@ -57,10 +85,12 @@ def flash_attention(q, k, v, *, interpret=None, **kw):
 
 # -- pattern conv ---------------------------------------------------------------
 
+@_deprecated_pack
 def assign_channel_patterns(w4, patterns=None):
     return _pc.assign_channel_patterns(w4, patterns)
 
 
+@_deprecated_pack
 def pack_pattern_conv(w4, pat_ids, patterns=None):
     return _pc.pack_pattern_conv(w4, pat_ids, patterns)
 

@@ -49,8 +49,15 @@ def main():
     ap.add_argument("--teacher-ckpt", default=None,
                     help="client checkpoint dir (else random init, demo mode)")
     ap.add_argument("--out", required=True)
+    ap.add_argument("--artifact-out", default=None,
+                    help="also save a PACKED PrunedArtifact here "
+                         "(servable via launch/serve.py --artifact ... "
+                         "--packed)")
     ap.add_argument("--layerwise", action=argparse.BooleanOptionalAction,
                     default=True, help="problem (3) vs problem (2)")
+    ap.add_argument("--tile-block", type=int, default=128,
+                    help="tile_pattern block_p; must divide every GEMM "
+                         "output dim (reduced configs want 32)")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -64,12 +71,22 @@ def main():
     else:
         log.warning("no --teacher-ckpt: using random init (demo mode)")
 
+    overrides = {}
+    if args.scheme == "tile_pattern":
+        keep = max(1, min(7, round(8 / args.rate)))
+        if abs(8 / keep - args.rate) > 1e-9:
+            log.warning(
+                "tile_pattern lanes quantize to keep %d-of-8 (%.2fx), not "
+                "the requested %.2fx", keep, 8 / keep, args.rate)
+        overrides = {".*": {"tile_block_p": args.tile_block,
+                            "tile_keep": keep}}
     config = PruneConfig(
         scheme=args.scheme, alpha=1.0 / args.rate,
         exclude=tuple(DEFAULT_EXCLUDE),
         iterations=args.iters, batch_size=args.batch, lr=1e-3,
         rho_every_iters=max(args.iters // 3, 1),
         layerwise=args.layerwise,
+        overrides=overrides,
     )
     adapter = LMAdapter(model, seq_len=args.seq)
     t0 = time.time()
@@ -94,6 +111,14 @@ def main():
     )
     save_pytree(args.out + "/masks", dense_masks,
                 extra={"arch": args.arch})
+    if args.artifact_out:
+        artifact = result.to_artifact(arch=args.arch, scheme=args.scheme,
+                                      rate=args.rate).pack()
+        artifact.save(args.artifact_out)
+        s = artifact.summary()
+        log.info("packed artifact -> %s (%d/%d leaves, %.2fx weight bytes)",
+                 args.artifact_out, s["packed_leaves"], s["total_leaves"],
+                 s["bytes_ratio"])
     print(f"pruned model -> {args.out}/pruned ; mask function -> "
           f"{args.out}/masks")
     print(f"compression {compression_rate(result.masks):.2f}x "

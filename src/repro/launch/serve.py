@@ -2,12 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --requests 8 --max-new 16 [--ckpt /tmp/pruned_qwen2/pruned]
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --artifact /tmp/qwen2_artifact --packed
 
-Loads a checkpoint (e.g. the output of launch/prune.py after client
-retraining) and serves a batch of random-prompt requests through the
-continuous-batching engine. The decode step is the same program the
-dry-run's decode_32k/long_500k cells lower. On TPU backends the prefill
-path routes attention through the Pallas flash kernel.
+Loads either a raw checkpoint (``--ckpt``, e.g. the output of
+launch/prune.py after client retraining) or a saved ``PrunedArtifact``
+directory (``--artifact``) and serves a batch of random-prompt requests
+through the continuous-batching engine. ``--packed`` (artifact only) binds
+the compressed representation: every block GEMM runs through the
+scheme→kernel registry instead of dense matmuls. The decode step is the
+same program the dry-run's decode_32k/long_500k cells lower; on TPU
+backends the prefill path routes attention through the Pallas flash kernel.
 """
 
 from __future__ import annotations
@@ -31,6 +36,10 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--artifact", default=None,
+                    help="saved PrunedArtifact directory (see sparse/)")
+    ap.add_argument("--packed", action="store_true",
+                    help="serve the packed representation (needs --artifact)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -42,14 +51,26 @@ def main():
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only; no decode serving")
+    if args.packed and not args.artifact:
+        raise SystemExit("--packed requires --artifact")
+    if args.artifact and args.ckpt:
+        raise SystemExit("--artifact and --ckpt are mutually exclusive: the "
+                         "artifact already carries its weights")
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    if args.ckpt:
-        params = restore_pytree(args.ckpt, params)
-        log.info("restored %s", args.ckpt)
+
+    if args.artifact:
+        from repro.sparse import PrunedArtifact
+
+        params = PrunedArtifact.load(args.artifact)
+        log.info("loaded artifact %s: %s", args.artifact, params.summary())
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        if args.ckpt:
+            params = restore_pytree(args.ckpt, params)
+            log.info("restored %s", args.ckpt)
 
     engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_seq_len=args.max_seq)
+                         max_seq_len=args.max_seq, packed=args.packed)
     key = jax.random.PRNGKey(7)
     reqs = [
         Request(uid=i,
@@ -63,8 +84,9 @@ def main():
     results = engine.generate(reqs)
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
+    mode = "packed" if args.packed else "dense"
     print(f"{len(results)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s, batch={args.batch})")
+          f"({n_tok / dt:.1f} tok/s, batch={args.batch}, {mode})")
     for r in results[:4]:
         print(f"  uid={r.uid}: {r.tokens[:12]}{'...' if len(r.tokens) > 12 else ''}")
 

@@ -39,6 +39,39 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
     )
 
 
+def conv_apply(x: jnp.ndarray, w, stride: int = 1) -> jnp.ndarray:
+    """Packed-aware conv: the CNN analogue of ``layers.dense_apply``.
+
+    A pattern-packed weight (stride-1 3×3, the paper's pruned CONV) runs
+    through the Pallas ``pattern_conv`` kernel; any other packed leaf is
+    reconstructed dense (strided convs have no packed kernel yet), and raw
+    arrays take the plain XLA conv.
+    """
+    from repro.sparse.packed import PackedTensor
+
+    if isinstance(w, PackedTensor):
+        from repro.sparse.registry import SPARSE_SCHEMES
+
+        # direct .get(): a scheme-tagged PackedTensor of an unknown scheme
+        # must fail loudly here, not fall back to misreading its buffers
+        handler = SPARSE_SCHEMES.get(w.scheme)
+        if handler.conv is not None and stride == 1:
+            return handler.conv(x, w)
+        w = handler.to_dense(w)
+    return conv2d(x, w, stride)
+
+
+def _as_dense(w):
+    """Dense view of a possibly-packed weight (for transposed-use heads)."""
+    from repro.sparse.packed import PackedTensor
+
+    if isinstance(w, PackedTensor):
+        from repro.sparse.registry import SPARSE_SCHEMES
+
+        return SPARSE_SCHEMES.get(w.scheme).to_dense(w)
+    return w
+
+
 @dataclasses.dataclass
 class VGG:
     """VGG-style plain CNN. ``plan``: list of (out_channels | 'M' maxpool)."""
@@ -95,7 +128,7 @@ class VGG:
 
     def apply_layer(self, n: int, lp, x):
         """conv → relu (→ maxpool where the plan says so)."""
-        y = conv2d(x, lp["w"]) + lp["bias"]
+        y = conv_apply(x, lp["w"]) + lp["bias"]
         y = jax.nn.relu(y)
         # apply any pools that follow this conv in the plan (skip once the
         # spatial dims have shrunk to 1 — small-image variants)
@@ -116,7 +149,7 @@ class VGG:
 
     def apply(self, params, x):
         f = self.features(params, x)
-        return f @ params["head"]["w"].T + params["head"]["bias"]
+        return f @ _as_dense(params["head"]["w"]).T + params["head"]["bias"]
 
 
 def vgg16(num_classes: int = 10, width_mult: float = 1.0,
@@ -207,19 +240,29 @@ class ResNet:
         spec = self.layer_plan[n]
         x = state["x"]
         if spec["kind"] == "stem":
-            y = jax.nn.relu(conv2d(x, lp["w"], 1) + lp["bias"])
+            y = jax.nn.relu(conv_apply(x, lp["w"], 1) + lp["bias"])
             return {"x": y, "res": None}
         if spec["kind"] == "conv1":
-            y = jax.nn.relu(conv2d(x, lp["w"], spec["stride"]) + lp["bias"])
+            y = jax.nn.relu(conv_apply(x, lp["w"], spec["stride"]) + lp["bias"])
             return {"x": y, "res": x}
         # conv2: add residual (projected if needed)
-        y = conv2d(x, lp["w"], 1) + lp["bias"]
+        y = conv_apply(x, lp["w"], 1) + lp["bias"]
         res = state["res"]
         if spec.get("proj"):
             stride = self.layer_plan[n - 1]["stride"]
-            res = conv2d(res, lp["w_proj"], stride)
+            res = conv_apply(res, lp["w_proj"], stride)
         y = jax.nn.relu(y + res)
         return {"x": y, "res": None}
+
+    def unpackable_leaf_paths(self):
+        """Leaf paths whose packed form cannot execute packed here.
+
+        Strided 3×3 convs have no packed kernel (``conv_apply`` would
+        rebuild the dense weight inside every forward step);
+        ``PrunedArtifact.bind`` consults this to keep them dense.
+        """
+        return [f"layers/{n}/w" for n, spec in enumerate(self.layer_plan)
+                if spec.get("stride", 1) != 1]
 
     def features(self, params, x):
         state = self.embed(params, x)
@@ -230,7 +273,7 @@ class ResNet:
 
     def apply(self, params, x):
         f = self.features(params, x)
-        return f @ params["head"]["w"].T + params["head"]["bias"]
+        return f @ _as_dense(params["head"]["w"]).T + params["head"]["bias"]
 
 
 def resnet18(num_classes: int = 10, width_mult: float = 1.0,

@@ -20,6 +20,30 @@ def dtype_of(name: str):
 
 
 # ---------------------------------------------------------------------------
+# Packed-aware dense apply
+# ---------------------------------------------------------------------------
+
+def dense_apply(x: jnp.ndarray, w) -> jnp.ndarray:
+    """y = x @ w for a dense array OR a ``sparse.PackedTensor`` weight.
+
+    THE dispatch point of the packed serving path: every model GEMM routes
+    through here, so binding a packed artifact (``PrunedArtifact.bind``)
+    swaps the whole model onto the registry's Pallas kernels with no model
+    code aware of any scheme. ``x`` is (..., d_in); leading dims are
+    flattened to the kernel's M axis and restored.
+    """
+    from repro.sparse.packed import PackedTensor
+
+    if isinstance(w, PackedTensor):
+        from repro.sparse.registry import dispatch_matmul
+
+        lead = x.shape[:-1]
+        y = dispatch_matmul(x.reshape(-1, x.shape[-1]), w)
+        return y.reshape(lead + (y.shape[-1],))
+    return jnp.einsum("...d,do->...o", x, w)
+
+
+# ---------------------------------------------------------------------------
 # Initializers
 # ---------------------------------------------------------------------------
 
@@ -97,10 +121,10 @@ def ffn_init(key, d_model: int, d_ff: int, ffn_type: str, dtype) -> dict:
 
 def ffn_apply(params: dict, x: jnp.ndarray, ffn_type: str) -> jnp.ndarray:
     if ffn_type == "swiglu":
-        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
-        up = jnp.einsum("...d,df->...f", x, params["w_up"])
+        gate = dense_apply(x, params["w_gate"])
+        up = dense_apply(x, params["w_up"])
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     else:
-        up = jnp.einsum("...d,df->...f", x, params["w_up"])
+        up = dense_apply(x, params["w_up"])
         h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
-    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    return dense_apply(h, params["w_down"])

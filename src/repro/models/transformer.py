@@ -38,6 +38,7 @@ from repro.models.attention import (
     decode_attention,
 )
 from repro.models.layers import (
+    dense_apply,
     dense_init,
     dtype_of,
     embed_init,
@@ -285,9 +286,9 @@ class LM:
     ):
         cfg = self.config
         h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
-        q = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wq"])
-        k = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wk"])
-        v = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wv"])
+        q = dense_apply(h, bp["attn"]["wq"])
+        k = dense_apply(h, bp["attn"]["wk"])
+        v = dense_apply(h, bp["attn"]["wv"])
         if cfg.qkv_bias:
             q = q + bp["attn"]["bq"]
             k = k + bp["attn"]["bk"]
@@ -323,8 +324,7 @@ class LM:
                 qe, ke, ve, causal=cfg.causal, window=cfg.sliding_window,
                 chunk=min(512, S),
             )[:, :, :H, :]
-        out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, cfg.attn_dim),
-                         bp["attn"]["wo"])
+        out = dense_apply(out.reshape(B, S, cfg.attn_dim), bp["attn"]["wo"])
         return out, kv
 
     def _mixer_and_mlp(self, bp, x, positions, *, collect_kv: bool = False,
@@ -447,7 +447,7 @@ class LM:
 
     def lm_logits(self, params, h: jnp.ndarray) -> jnp.ndarray:
         w = (params["embed"].T if "lm_head" not in params else params["lm_head"])
-        return jnp.einsum("bsd,dv->bsv", h, w)
+        return dense_apply(h, w)
 
     def train_loss(self, params, batch: Dict[str, jnp.ndarray]):
         """Chunked-CE training loss. batch: {inputs, labels}."""
@@ -647,9 +647,9 @@ class LM:
                 bp, kc, vc = xs
                 mst = None
             h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
-            q = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wq"])
-            k = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wk"])
-            v = jnp.einsum("bsd,dh->bsh", h, bp["attn"]["wv"])
+            q = dense_apply(h, bp["attn"]["wq"])
+            k = dense_apply(h, bp["attn"]["wk"])
+            v = dense_apply(h, bp["attn"]["wv"])
             if cfg.qkv_bias:
                 q = q + bp["attn"]["bq"]
                 k = k + bp["attn"]["bk"]
@@ -665,8 +665,8 @@ class LM:
             attn = decode_attention(
                 q, kc, vc, new_slot, pos, window=cfg.sliding_window,
             )
-            attn = jnp.einsum("bsh,hd->bsd", attn.reshape(B, 1, cfg.attn_dim),
-                              bp["attn"]["wo"])
+            attn = dense_apply(attn.reshape(B, 1, cfg.attn_dim),
+                               bp["attn"]["wo"])
             if cfg.family == "hybrid":
                 m_out, new_mst = ssm_mod.mamba_step(
                     bp["mamba"], h[:, 0, :], mst)

@@ -231,6 +231,43 @@ _SLICING_OPS = {"dynamic-slice", "slice", "gather"}
 _UPDATE_OPS = {"dynamic-update-slice", "scatter"}
 
 
+def _param_read_bytes(comps: Dict[str, Computation], callee: Computation,
+                      pname: Optional[str], full: float,
+                      depth: int = 0) -> float:
+    """Bytes a called computation actually READS from one parameter.
+
+    Follows nested fusion/call chains (newer XLA wraps the scan weight
+    slice as call→fusion→dynamic-slice): if every transitive use of the
+    parameter is a slicing op, cost the slices; any other use costs the
+    full operand.
+    """
+    if pname is None or depth > 4:
+        return full
+    users = callee.users_of(pname)
+    if not users:
+        return 0.0                   # operand plumbed through but never read
+    total = 0.0
+    for u in users:
+        if u.opcode in _SLICING_OPS:
+            total += _shape_bytes(u.type_str)
+        elif u.opcode in ("fusion", "call"):
+            mm = _CALLS.search(u.rest)
+            inner = comps.get(mm.group(1).lstrip("%")) if mm else None
+            if inner is None:
+                return full
+            # the parameter may feed SEVERAL operand positions of the
+            # nested call — cost every position it occupies
+            for idx, o in enumerate(u.operands):
+                if o != pname:
+                    continue
+                total += _param_read_bytes(comps, inner,
+                                           inner.param_name(idx),
+                                           full, depth + 1)
+        else:
+            return full
+    return min(total, full)
+
+
 def _instr_bytes(comp: Computation, ins: Instr,
                  comps: Dict[str, Computation]) -> float:
     """HBM bytes accessed by one top-level instruction (XLA-like rules)."""
@@ -256,12 +293,9 @@ def _instr_bytes(comp: Computation, ins: Instr,
                 continue
             full = _shape_bytes(src.type_str)
             if callee is not None:
-                pname = callee.param_name(idx)
-                users = callee.users_of(pname) if pname else []
-                if users and all(u.opcode in _SLICING_OPS for u in users):
-                    # fusion only slices this operand (scan weight access):
-                    # cost the slices actually read
-                    full = sum(_shape_bytes(u.type_str) for u in users)
+                # scan weight access: cost only the slices actually read
+                full = _param_read_bytes(comps, callee,
+                                         callee.param_name(idx), full)
             total += full
         return total
     # plain instruction: operands + output

@@ -5,9 +5,13 @@ lower: a fixed-size decode batch, per-slot position tracking, new requests
 prefilled into free slots. This engine is single-program (fits the pjit
 model — the whole batch steps together); slot management happens on host.
 
-Supports pruned (masked) models transparently — weights are already exactly
-sparse; serving needs no mask logic (the paper's deployment story: prune →
-retrain → deploy the sparse model).
+Pruned models serve two ways:
+  * dense sparse — weights are already exactly sparse; no mask logic needed
+    (the paper's baseline deployment: prune → retrain → deploy);
+  * PACKED — pass a ``sparse.PrunedArtifact`` with ``packed=True`` and the
+    engine binds the compressed representation: every GEMM dispatches
+    through the scheme→kernel registry (compressed weight storage on the
+    hot path, the paper's compiler-level deployment).
 """
 
 from __future__ import annotations
@@ -44,7 +48,24 @@ class ServeEngine:
         batch_size: int,
         max_seq_len: int,
         sampler: Callable = greedy_sample,
+        packed: bool = False,
     ):
+        """``params`` may be a raw params tree, a ``PruneResult``, or a
+        ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
+        only) the engine serves the compressed representation through the
+        scheme→kernel registry."""
+        from repro.core.pruner import PruneResult
+        from repro.sparse import PrunedArtifact
+
+        if isinstance(params, PruneResult):
+            params = params.to_artifact()
+        if isinstance(params, PrunedArtifact):
+            params = params.bind(model, packed=packed)
+        elif packed:
+            raise TypeError(
+                "packed=True needs a PrunedArtifact (or PruneResult); got a "
+                "raw params tree — build one via PruneResult.to_artifact()"
+            )
         self.model = model
         self.params = params
         self.batch_size = batch_size

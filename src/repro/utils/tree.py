@@ -23,16 +23,17 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any,
+                           is_leaf: Callable[[Any], bool] = None) -> Any:
     """``jax.tree.map`` where ``fn`` receives a '/'-joined string path."""
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: fn(_path_str(path), leaf), tree
+        lambda path, leaf: fn(_path_str(path), leaf), tree, is_leaf=is_leaf
     )
 
 
-def tree_paths(tree: Any):
+def tree_paths(tree: Any, is_leaf: Callable[[Any], bool] = None):
     """List of '/'-joined string paths for every leaf."""
-    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    leaves = jax.tree_util.tree_leaves_with_path(tree, is_leaf=is_leaf)
     return [_path_str(path) for path, _ in leaves]
 
 

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed on this box")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref

@@ -1,0 +1,224 @@
+"""The PackedTensor/registry/PrunedArtifact API (sparse/).
+
+Round trips per scheme (pack → packed matmul ≡ dense masked matmul, pack →
+to_dense exact), pytree behavior under jit/scan, artifact save/load
+including bfloat16 leaves, and the compression-accounting contract
+(packed weight bytes reduced by the scheme's rate).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.core.schemes import LayerSpec
+from repro.core.projections import project_kernel_pattern
+from repro.sparse import (
+    PackedTensor,
+    PrunedArtifact,
+    SPARSE_SCHEMES,
+    dispatch_matmul,
+    handler_for,
+    is_packed,
+    packed_leaf_paths,
+)
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32).astype(dtype)
+
+
+class TestSchemeRoundTrips:
+    """pack → packed matmul ≡ dense masked matmul, per scheme."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_tile_pattern(self, dtype):
+        spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                         tile_group_q=8, tile_keep=4)
+        w = spec.project(_rand(0, (256, 128))).astype(dtype)
+        h = handler_for("tile_pattern")
+        pt = h.pack(w, spec)
+        assert pt is not None
+        assert np.array_equal(np.asarray(h.to_dense(pt), np.float32),
+                              np.asarray(w, np.float32))
+        x = _rand(1, (33, 256), dtype)          # odd M: row padding path
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(h.matmul(x, pt, interpret=True), np.float32),
+            np.asarray(jnp.dot(x.astype(jnp.float32),
+                               w.astype(jnp.float32))),
+            rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_column(self, dtype):
+        spec = LayerSpec(scheme="column", alpha=0.25)
+        w = spec.project(_rand(2, (128, 96))).astype(dtype)
+        h = handler_for("column")
+        pt = h.pack(w, spec)
+        assert pt is not None
+        assert pt.buf("w_packed").shape[0] == 32    # 0.25 * 128 rows kept
+        assert np.array_equal(np.asarray(h.to_dense(pt), np.float32),
+                              np.asarray(w, np.float32))
+        x = _rand(3, (20, 128), dtype)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(h.matmul(x, pt, interpret=True), np.float32),
+            np.asarray(jnp.dot(x.astype(jnp.float32),
+                               w.astype(jnp.float32))),
+            rtol=tol, atol=tol)
+
+    def test_pattern_shared_conv(self):
+        spec = LayerSpec(scheme="pattern_shared", alpha=0.4,
+                         conv_shape=(16, 8, 3, 3))
+        w4 = spec.project(_rand(4, (16, 8, 3, 3)))
+        h = handler_for("pattern_shared")
+        pt = h.pack(w4, spec)
+        assert pt is not None
+        assert np.array_equal(np.asarray(h.to_dense(pt)), np.asarray(w4))
+        from repro.kernels import ref
+
+        x = _rand(5, (2, 6, 6, 8))
+        np.testing.assert_allclose(
+            np.asarray(h.conv(x, pt, interpret=True)),
+            np.asarray(ref.ref_conv3x3(x, w4)),
+            rtol=2e-4, atol=2e-4)
+
+    def test_per_kernel_pattern_falls_back_dense(self):
+        """Per-kernel top-4 taps are not channel-shared: pack refuses and
+        the leaf stays dense (never silently lossy)."""
+        spec = LayerSpec(scheme="pattern", conv_shape=(16, 8, 3, 3))
+        w4 = project_kernel_pattern(_rand(6, (16, 8, 3, 3)))
+        assert handler_for("pattern").pack(w4, spec) is None
+
+    def test_irregular_resolves_to_dense_handler(self):
+        assert handler_for("irregular").name == "dense"
+        assert handler_for("filter").name == "dense"
+        assert "tile_pattern" in SPARSE_SCHEMES
+        assert "column" in SPARSE_SCHEMES
+        assert "pattern" in SPARSE_SCHEMES
+
+    def test_untileable_leaf_stays_dense(self):
+        spec = LayerSpec(scheme="tile_pattern")     # block_p=128 > O=96
+        w = _rand(7, (64, 96))
+        assert handler_for("tile_pattern").pack(w, spec) is None
+
+
+class TestPackedTensorPytree:
+    def test_jit_and_scan(self):
+        spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                         tile_group_q=8, tile_keep=4)
+        ws = jax.vmap(spec.project)(_rand(8, (3, 128, 64)))
+        pt = handler_for("tile_pattern").pack(ws, spec)
+        assert pt.stacked == 1
+        x = _rand(9, (16, 128))
+
+        @jax.jit
+        def f(x, pt):
+            def body(c, ptl):
+                return c, dispatch_matmul(x, ptl, interpret=True)
+
+            _, ys = jax.lax.scan(body, 0, pt)
+            return ys
+
+        ys = f(x, pt)
+        ref = jnp.stack([x @ ws[i] for i in range(3)])
+        np.testing.assert_allclose(np.asarray(ys), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_flatten_roundtrip_preserves_aux(self):
+        spec = LayerSpec(scheme="column", alpha=0.5)
+        w = spec.project(_rand(10, (64, 32)))
+        pt = handler_for("column").pack(w, spec)
+        leaves, treedef = jax.tree.flatten(pt)
+        pt2 = jax.tree.unflatten(treedef, leaves)
+        assert pt2.scheme == pt.scheme
+        assert pt2.shape == pt.shape
+        assert pt2.meta == pt.meta
+
+
+class TestArtifact:
+    def _artifact(self, dtype="float32"):
+        from repro.configs.base import ModelConfig
+        from repro.models import build_model
+
+        cfg = ModelConfig(name="t", family="dense", num_layers=2,
+                          d_model=128, num_heads=4, num_kv_heads=2,
+                          head_dim=32, d_ff=256, vocab_size=512,
+                          param_dtype=dtype)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pcfg = PruneConfig(scheme="tile_pattern",
+                           exclude=tuple(DEFAULT_EXCLUDE),
+                           overrides={".*": {"tile_block_p": 64}})
+        return model, greedy_prune(params, pcfg).to_artifact(arch="t")
+
+    def test_pack_verified_and_bytes_ratio(self):
+        model, art = self._artifact()
+        art = art.pack(verify=True)      # raises on any pack/unpack mismatch
+        paths = packed_leaf_paths(art.packed)
+        assert "blocks/attn/wq" in paths and "blocks/mlp/w_up" in paths
+        # CWS contract: every packed leaf stores >= ~2x fewer weight bytes
+        # at 4-of-8 (small lane_idx table rides along)
+        for leaf in jax.tree.leaves(art.packed, is_leaf=is_packed):
+            if is_packed(leaf):
+                assert leaf.dense_bytes() / leaf.packed_bytes() > 1.9
+        s = art.summary()
+        assert s["packed_leaves"] >= 8
+        assert s["bytes_ratio"] > 1.5    # whole tree (embed stays dense)
+
+    def test_bind_validates_structure(self):
+        model, art = self._artifact()
+        art = art.pack()
+        bound = art.bind(model, packed=True)
+        assert any(is_packed(l) for l in
+                   jax.tree.leaves(bound, is_leaf=is_packed))
+        # a mismatched artifact fails loudly
+        bad = dataclasses.replace(
+            art, params={"nope": jnp.zeros((2, 2))}, packed=None)
+        with pytest.raises(ValueError, match="parameter structure"):
+            bad.bind(model, packed=False)
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_save_load_roundtrip(self, tmp_path, dtype):
+        model, art = self._artifact(dtype)
+        art = art.pack()
+        art.save(str(tmp_path / "art"))
+        art2 = PrunedArtifact.load(str(tmp_path / "art"))
+
+        for a, b in zip(jax.tree.leaves(art.params),
+                        jax.tree.leaves(art2.params)):
+            assert a.dtype == b.dtype
+            assert np.array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+        # masks congruent with params again (None leaves rebuilt)
+        assert (jax.tree.structure(art.masks, is_leaf=lambda x: x is None)
+                == jax.tree.structure(art2.masks,
+                                      is_leaf=lambda x: x is None))
+        # specs round trip as LayerSpec
+        spec_leaf = lambda x: x is None or isinstance(x, LayerSpec)
+        specs = [s for s in jax.tree.leaves(art2.specs, is_leaf=spec_leaf)
+                 if isinstance(s, LayerSpec)]
+        assert specs and all(s.scheme == "tile_pattern" for s in specs)
+        # packed buffers identical (scheme tag, shape, meta, values)
+        p1 = [l for l in jax.tree.leaves(art.packed, is_leaf=is_packed)
+              if is_packed(l)]
+        p2 = [l for l in jax.tree.leaves(art2.packed, is_leaf=is_packed)
+              if is_packed(l)]
+        assert len(p1) == len(p2)
+        for a, b in zip(p1, p2):
+            assert (a.scheme, a.shape, a.names, a.meta) == \
+                   (b.scheme, b.shape, b.names, b.meta)
+            for x, y in zip(a.buffers, b.buffers):
+                assert x.dtype == y.dtype
+                assert np.array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+    def test_with_params_clears_packing(self):
+        model, art = self._artifact()
+        art = art.pack()
+        art2 = art.with_params(art.params)
+        assert art2.packed is None

@@ -55,8 +55,11 @@ def system():
         p = jax.tree.map(lambda a, u: (a + u).astype(a.dtype), p, upd)
         return p, s, loss
 
+    # 400 steps: at 120 the loss is still ~0.8 on this jax version's RNG
+    # stream and the teacher sits near chance — the whole module keys off
+    # a well-trained teacher (base_acc > 0.9)
     it = iter(pipe)
-    for _ in range(120):
+    for _ in range(400):
         params, opt_state, _ = step(params, opt_state, next(it))
     base_acc = _accuracy(model, params, pipe)
     assert base_acc > 0.9, f"teacher should train well, got {base_acc}"
