@@ -1,0 +1,67 @@
+"""Packed sparse deployment: pack once, dispatch everywhere.
+
+This package is the deployment half of the paper's framework — the
+compiler-level optimizations (PatDNN lineage, arXiv:2001.00138) that turn
+ADMM-pruned weights into faster, smaller serving. It is the seam between
+``core`` (which discovers sparsity) and ``models``/``serve`` (which run it):
+
+    PruneResult.to_artifact() -> PrunedArtifact.pack() -> ServeEngine(packed)
+
+Paper optimization -> PackedTensor field mapping
+------------------------------------------------
+
+The paper deploys pruned CONV layers through three compiler optimizations;
+each one is realized by a concrete field of ``PackedTensor`` (TPU/MXU
+translation in parentheses):
+
+  CWS  compressed weight storage
+       -> ``w_packed``: only KEPT weights are stored, for every scheme.
+          tile_pattern stores (Q*keep/group_q, P); column stores (K, P);
+          pattern stores (keep*C, A). Zeros never reach HBM — weight bytes
+          drop by the scheme's compression rate (2x at 4-of-8 lanes,
+          2.25x at 4-of-9 taps).
+
+  LRE  load redundancy elimination
+       -> ``kept_idx`` (column) / the per-block gather driven by
+          ``lane_idx`` (tile_pattern) / the 9-shifted-view tap gather
+          (pattern). Each surviving input element crosses HBM->VMEM once
+          per output tile; pruned features are never materialized at all.
+
+  FKR  filter kernel reorder
+       -> ``lane_idx`` / ``taps``: the index tables that make the pattern
+          UNIFORM across a whole output tile (128 MXU cols share one lane
+          set; all filters share a channel's taps). That grouping is what
+          lets the packed computation run as a dense MXU matmul instead of
+          scattered SIMD lanes — the TPU analogue of reordering filters so
+          same-pattern kernels run together.
+
+Registry
+--------
+
+``SPARSE_SCHEMES`` maps each ``LayerSpec.scheme`` to its
+``SchemeHandler`` (pack / packed matmul / dense reference):
+
+  tile_pattern -> Pallas ``pattern_gemm``     (kernels/pattern_gemm.py)
+  column       -> Pallas ``column_gemm``      (kernels/column_gemm.py)
+  pattern      -> Pallas ``pattern_conv``     (kernels/pattern_conv.py)
+  irregular / filter / anything else -> dense fallback (plain matmul)
+
+Models dispatch through ``models.layers.dense_apply`` (GEMMs) and
+``models.cnn.conv_apply`` (convs): a raw array takes the dense path, a
+``PackedTensor`` takes its registered kernel. New schemes plug in by
+registering a handler — no model or engine changes.
+"""
+
+from repro.sparse.artifact import PrunedArtifact
+from repro.sparse.packed import (
+    PackedTensor,
+    is_packed,
+    packed_leaf_paths,
+    tree_packed_bytes,
+)
+from repro.sparse.registry import (
+    SPARSE_SCHEMES,
+    SchemeHandler,
+    dispatch_matmul,
+    handler_for,
+)

@@ -1,0 +1,251 @@
+"""PrunedArtifact: the single hand-off object from pruning to serving.
+
+The paper's workflow ends with "deploy the compressed model"; this object
+is that deployment unit. It carries everything downstream consumers need:
+
+  params   dense exactly-sparse weights (what the client retrains)
+  masks    the mask function (1=kept) for masked retraining
+  specs    the LayerSpec pytree that produced the sparsity
+  packed   params with prunable GEMM/conv leaves replaced by PackedTensor
+           (built lazily by ``pack()`` via the scheme registry)
+
+Life cycle::
+
+    result   = PrivacyPreservingPruner(adapter, cfg).run(key, teacher)
+    artifact = result.to_artifact()              # from the pruner
+    artifact = artifact.with_params(retrained)   # after client retraining
+    artifact = artifact.pack()                   # compress for deployment
+    artifact.save("/ckpt/pruned")                # packed manifest on disk
+    ...
+    artifact = PrunedArtifact.load("/ckpt/pruned")
+    engine   = ServeEngine(model, artifact, packed=True, ...)
+
+``bind(model)`` is the seam into execution: it validates the artifact's
+tree against the model's parameter structure and returns the params tree
+(packed or dense) that the model's registry-dispatched applies consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import LayerSpec
+from repro.sparse.packed import PackedTensor, is_packed, tree_packed_bytes
+from repro.sparse.registry import handler_for
+from repro.utils.tree import tree_map_with_path_str, tree_paths
+
+ARTIFACT_JSON = "artifact.json"
+
+
+def _spec_is_leaf(x: Any) -> bool:
+    return x is None or isinstance(x, LayerSpec)
+
+
+@dataclasses.dataclass
+class PrunedArtifact:
+    """A pruned model packaged for deployment (see module docstring)."""
+
+    params: Any
+    masks: Any
+    specs: Any
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    packed: Optional[Any] = None
+
+    # ------------------------------------------------------------- building
+
+    def with_params(self, params: Any) -> "PrunedArtifact":
+        """New artifact with updated weights (e.g. after masked retraining).
+
+        Clears any existing packing — the packed form encodes weight VALUES,
+        not just structure.
+        """
+        return dataclasses.replace(self, params=params, packed=None)
+
+    def pack(self, *, verify: bool = False) -> "PrunedArtifact":
+        """Compress every packable leaf through the scheme registry.
+
+        Leaves whose scheme has no packed form (irregular/filter), or whose
+        shape is not tiled by the scheme's blocks, stay dense — serving
+        remains correct either way, packing only changes the execution path.
+        With ``verify=True`` each packed leaf is unpacked and checked to be
+        EXACTLY the dense leaf (cheap insurance when packing new schemes).
+        """
+
+        def pack_leaf(spec, w):
+            if spec is None or is_packed(w):
+                return w
+            pt = handler_for(spec.scheme).pack(w, spec)
+            if pt is None:
+                return w
+            if verify:
+                import numpy as np
+
+                back = handler_for(pt.scheme).to_dense(pt)
+                if not np.array_equal(np.asarray(back, np.float32),
+                                      np.asarray(w, np.float32)):
+                    raise AssertionError(
+                        f"pack/unpack mismatch for scheme {pt.scheme} "
+                        f"on leaf {tuple(w.shape)}"
+                    )
+            return pt
+
+        packed = jax.tree.map(pack_leaf, self.specs, self.params,
+                              is_leaf=_spec_is_leaf)
+        return dataclasses.replace(self, packed=packed)
+
+    # -------------------------------------------------------------- binding
+
+    def bind(self, model: Any, *, packed: bool = True) -> Any:
+        """Return the params tree a model should run with.
+
+        ``packed=True`` returns the packed tree (packing on demand) whose
+        PackedTensor leaves the model's packed-aware applies dispatch
+        through the kernel registry; ``packed=False`` returns the dense
+        sparse weights. Either way the tree structure is validated against
+        ``model.init`` so a mismatched artifact fails loudly here, not
+        deep inside a scan.
+        """
+        if packed and self.packed is None:
+            # cache on self: packing is host-side per-leaf work, and every
+            # ServeEngine construction routes through bind
+            self.packed = self.pack().packed
+        tree = self.packed if packed else self.params
+        if packed:
+            # leaves the MODEL cannot execute packed (e.g. ResNet's strided
+            # 3x3 convs) go back to dense here — once, instead of a dense
+            # reconstruction inside every forward step
+            unpackable = set(getattr(model, "unpackable_leaf_paths",
+                                     lambda: ())())
+            if unpackable:
+                from repro.sparse.registry import SPARSE_SCHEMES
+
+                tree = tree_map_with_path_str(
+                    lambda p, x: (SPARSE_SCHEMES.get(x.scheme).to_dense(x)
+                                  if is_packed(x) and p in unpackable else x),
+                    tree, is_leaf=is_packed)
+        expected = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        want = {p: tuple(l.shape) for p, l in
+                zip(tree_paths(expected), jax.tree.leaves(expected))}
+        got = {}
+        for p, l in zip(tree_paths(tree, is_leaf=is_packed),
+                        jax.tree.leaves(tree, is_leaf=is_packed)):
+            got[p] = tuple(l.shape)       # PackedTensor.shape = dense shape
+        if set(want) != set(got):
+            missing = sorted(set(want) - set(got))[:4]
+            surplus = sorted(set(got) - set(want))[:4]
+            raise ValueError(
+                "artifact does not match the model's parameter structure "
+                f"(missing: {missing}, surplus: {surplus})"
+            )
+        wrong = [(p, got[p], want[p]) for p in want if got[p] != want[p]]
+        if wrong:
+            raise ValueError(
+                "artifact leaf shapes do not match the model "
+                f"(first mismatches: {wrong[:4]})"
+            )
+        return tree
+
+    # ------------------------------------------------------------ reporting
+
+    def packed_bytes(self) -> int:
+        tree = self.packed if self.packed is not None else self.params
+        return tree_packed_bytes(tree)
+
+    def dense_bytes(self) -> int:
+        return tree_packed_bytes(self.params)
+
+    def summary(self) -> Dict[str, Any]:
+        """Compression accounting: bytes and leaf counts, packed vs dense."""
+        n_packed = 0
+        n_leaves = 0
+        if self.packed is not None:
+            for leaf in jax.tree.leaves(self.packed, is_leaf=is_packed):
+                n_leaves += 1
+                n_packed += int(is_packed(leaf))
+        dense_b = self.dense_bytes()
+        packed_b = self.packed_bytes()
+        return {
+            "dense_bytes": dense_b,
+            "packed_bytes": packed_b,
+            "bytes_ratio": dense_b / max(packed_b, 1),
+            "packed_leaves": n_packed,
+            "total_leaves": n_leaves,
+        }
+
+    # ---------------------------------------------------------- persistence
+
+    def save(self, directory: str):
+        """Write the artifact (packed manifest included) under ``directory``.
+
+        Layout: ``params/``, ``masks/``, ``packed/`` (each an atomic
+        checkpoint directory) plus ``artifact.json`` holding the path-keyed
+        LayerSpec table and user metadata.
+        """
+        from repro.checkpoint import save_pytree
+
+        os.makedirs(directory, exist_ok=True)
+        save_pytree(os.path.join(directory, "params"), self.params)
+        # masks have None at non-pruned leaves: store only real mask arrays
+        # (load rebuilds the Nones from the params structure)
+        save_pytree(os.path.join(directory, "masks"), self.masks)
+        if self.packed is not None:
+            save_pytree(os.path.join(directory, "packed"), self.packed)
+        spec_table = {}
+        tree_map_with_path_str(
+            lambda path, s: spec_table.__setitem__(
+                path, None if s is None else dataclasses.asdict(s)
+            ),
+            self.specs,
+            is_leaf=_spec_is_leaf,
+        )
+        doc = {"specs": spec_table, "meta": self.meta,
+               "packed": self.packed is not None}
+        with open(os.path.join(directory, ARTIFACT_JSON), "w") as f:
+            json.dump(doc, f, indent=1)
+
+    @classmethod
+    def load(cls, directory: str) -> "PrunedArtifact":
+        """Rebuild an artifact saved by ``save`` (no template tree needed)."""
+        from repro.checkpoint import load_pytree
+
+        with open(os.path.join(directory, ARTIFACT_JSON)) as f:
+            doc = json.load(f)
+        params = jax.tree.map(jnp.asarray, load_pytree(
+            os.path.join(directory, "params")))
+        mask_dir = os.path.join(directory, "masks")
+        masks_flat: Dict[str, Any] = {}
+        if os.path.isdir(mask_dir):
+            loaded = load_pytree(mask_dir)
+            for path, leaf in zip(tree_paths(loaded),
+                                  jax.tree.leaves(loaded)):
+                masks_flat[path] = jnp.asarray(leaf)
+        # masks/specs congruent with params: absent paths are None (free
+        # params are never masked / have no spec)
+        masks = tree_map_with_path_str(
+            lambda path, _w: masks_flat.get(path), params)
+        spec_table = doc.get("specs", {})
+
+        def spec_at(path, _w):
+            d = spec_table.get(path)
+            if d is None:
+                return None
+            if d.get("conv_shape") is not None:
+                d = dict(d, conv_shape=tuple(d["conv_shape"]))
+            return LayerSpec(**d)
+
+        specs = tree_map_with_path_str(spec_at, params)
+        packed = None
+        if doc.get("packed") and os.path.isdir(os.path.join(directory,
+                                                            "packed")):
+            packed = load_pytree(os.path.join(directory, "packed"))
+            packed = jax.tree.map(
+                lambda x: x if is_packed(x) else jnp.asarray(x),
+                packed, is_leaf=is_packed)
+        return cls(params=params, masks=masks, specs=specs,
+                   meta=doc.get("meta", {}), packed=packed)

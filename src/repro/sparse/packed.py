@@ -1,0 +1,127 @@
+"""PackedTensor: the compressed weight representation behind the registry.
+
+A PackedTensor is the deployment form of one pruned weight: a scheme tag,
+the packed buffers (kept weights + index tables), and the logical dense
+shape. It is registered as a JAX pytree so packed parameter trees flow
+through ``jit``, ``lax.scan`` (scan-stacked transformer blocks slice the
+leading layer axis of every buffer) and checkpointing exactly like dense
+trees — the scheme tag and metadata ride along as static aux data.
+
+Buffer conventions per scheme (see ``sparse.registry`` for the kernels):
+
+  tile_pattern   w_packed (Kp, P)   kept contraction lanes, dense   [CWS]
+                 lane_idx (nb, Kp)  per-output-block source rows    [FKR]
+  column         w_packed (K, P)    surviving contraction rows      [CWS]
+                 kept_idx (K,)      global kept-feature table       [LRE]
+  pattern        w_packed (4C, A)   kept conv taps per channel      [CWS]
+                 taps     (C, 4)    channel-shared tap table        [FKR]
+
+Leaves stacked over a leading layer axis (the scan-over-layers transformer
+layout) carry that axis on every buffer; ``stacked`` reports how many
+leading axes were stacked on top of the canonical per-layer buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedTensor:
+    """Scheme tag + packed buffers + index tables for one pruned weight.
+
+    ``shape`` is the logical DENSE shape of the leaf the buffers replace
+    (including any leading layer-stack axes); ``meta`` is a hashable tuple
+    of (key, value) pairs recording the scheme parameters used to pack
+    (block sizes, keep counts) so save/load and re-dispatch are exact.
+    """
+
+    scheme: str
+    shape: Tuple[int, ...]
+    names: Tuple[str, ...]
+    buffers: Tuple[Any, ...]
+    meta: Tuple[Tuple[str, Any], ...] = ()
+
+    # -- pytree protocol (buffers are children; everything else is static) --
+
+    def tree_flatten(self):
+        return self.buffers, (self.scheme, self.shape, self.names, self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        scheme, shape, names, meta = aux
+        return cls(scheme, shape, names, tuple(children), meta)
+
+    # -- accessors -----------------------------------------------------------
+
+    def buf(self, name: str):
+        return self.buffers[self.names.index(name)]
+
+    @property
+    def meta_dict(self) -> Dict[str, Any]:
+        return dict(self.meta)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return self.buf("w_packed").dtype
+
+    @property
+    def stacked(self) -> int:
+        """Number of leading layer-stack axes on top of the canonical pack.
+
+        The canonical (per-layer) ``w_packed`` is 2-D for every scheme; a
+        scan-stacked transformer leaf adds one leading axis.
+        """
+        return self.buf("w_packed").ndim - 2
+
+    # -- sizes ---------------------------------------------------------------
+
+    def packed_bytes(self) -> int:
+        """Actual bytes of the packed representation (buffers + tables)."""
+        return int(sum(np.prod(b.shape) * b.dtype.itemsize
+                       for b in self.buffers))
+
+    def dense_bytes(self) -> int:
+        """Bytes the dense (pruned-but-unpacked) leaf would occupy."""
+        return int(np.prod(self.shape)) * self.dtype.itemsize
+
+    def __repr__(self) -> str:  # keep params-tree dumps readable
+        bufs = ", ".join(
+            f"{n}{tuple(b.shape)}" for n, b in zip(self.names, self.buffers)
+        )
+        return (f"PackedTensor({self.scheme}, dense{tuple(self.shape)}, "
+                f"{bufs})")
+
+
+def is_packed(x: Any) -> bool:
+    return isinstance(x, PackedTensor)
+
+
+def packed_leaf_paths(tree: Any):
+    """'/'-joined paths of every PackedTensor leaf in ``tree``."""
+    from repro.utils.tree import tree_paths
+
+    leaves = jax.tree.leaves(tree, is_leaf=is_packed)
+    paths = tree_paths(tree, is_leaf=is_packed)
+    return [p for p, leaf in zip(paths, leaves) if is_packed(leaf)]
+
+
+def tree_packed_bytes(tree: Any) -> int:
+    """Total weight bytes of a params tree, counting packed leaves packed."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_packed):
+        if is_packed(leaf):
+            total += leaf.packed_bytes()
+        else:
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,374 @@
+"""Scheme → kernel registry: pack / packed-matmul / dense-reference per scheme.
+
+Every pruning scheme that has a packed execution path registers a
+``SchemeHandler`` here (reusing ``utils.registry.Registry``). The handler is
+the single seam between the algorithm level (``LayerSpec`` describing how a
+tensor was pruned) and the deployment level (the Pallas kernels in
+``repro.kernels``):
+
+    handler = handler_for(spec.scheme)
+    pt      = handler.pack(w, spec)          # None -> not packable, stay dense
+    y       = handler.matmul(x2d, pt)        # registry-dispatched hot path
+    w_back  = handler.to_dense(pt)           # exact dense reconstruction
+
+Schemes without a packed path (``irregular``, ``filter``) resolve to the
+``dense`` fallback handler, whose "pack" is the identity — the registry
+always answers, so callers never special-case.
+
+All matmul wrappers accept activations of shape (M, I) for a dense leaf of
+shape (I, O) (the model's ``y = x @ w`` layout) and pad M up to the kernel's
+block size internally; ``interpret`` defaults to True off-TPU exactly like
+``kernels.ops``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# `from <module path> import <name>` forms (resolved through sys.modules):
+# kernels/__init__ re-exports a `pattern_conv` FUNCTION that shadows the
+# submodule attribute of the same name on the package
+from repro.kernels.column_gemm import column_gemm as _column_gemm
+from repro.kernels.column_gemm import pack_columns as _pack_columns
+from repro.kernels.ops import _default_interpret
+from repro.kernels.pattern_conv import pattern_conv as _pattern_conv_kernel
+from repro.kernels.pattern_gemm import pack_tile_pattern as _pack_tile_pattern
+from repro.kernels.pattern_gemm import pattern_gemm as _pattern_gemm
+from repro.sparse.packed import PackedTensor
+from repro.utils.registry import Registry
+
+SPARSE_SCHEMES = Registry("sparse scheme")
+
+
+def _block_of(n: int, cap: int = 128) -> int:
+    """Largest power-of-two block <= cap that divides n (>=1)."""
+    b = min(cap, n)
+    while b > 1 and n % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _row_block(n: int, cap: int = 128) -> int:
+    """Row-tile size for the activation M axis (rows are padded to it)."""
+    return n if n <= cap else cap
+
+
+def _pad_rows(x: jnp.ndarray, block: int):
+    pad = (-x.shape[0]) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, pad
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeHandler:
+    """One scheme's deployment triple: pack, packed matmul, dense reference."""
+
+    name: str
+    # pack(w, spec) -> PackedTensor | None (None: leaf not packable, e.g.
+    # shape not tiled by the scheme's blocks — caller keeps the dense leaf)
+    pack: Callable[[jnp.ndarray, Any], Optional[PackedTensor]]
+    # matmul(x (M, I), pt) -> y (M, O) == x @ to_dense(pt)
+    matmul: Callable[..., jnp.ndarray]
+    # to_dense(pt) -> the exact dense (pruned) weight the buffers encode
+    to_dense: Callable[[PackedTensor], jnp.ndarray]
+    # conv(x (B, H, W, C), pt) -> (B, H, W, A); conv-shaped schemes only
+    conv: Optional[Callable[..., jnp.ndarray]] = None
+
+
+def handler_for(scheme: str) -> SchemeHandler:
+    """Resolve a scheme name; unpackable schemes fall back to ``dense``."""
+    if scheme in SPARSE_SCHEMES:
+        return SPARSE_SCHEMES.get(scheme)
+    return SPARSE_SCHEMES.get("dense")
+
+
+def dispatch_matmul(x: jnp.ndarray, pt: PackedTensor, *,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """y = x @ dense(pt) through the registered packed kernel."""
+    return SPARSE_SCHEMES.get(pt.scheme).matmul(x, pt, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dense fallback (irregular / filter / anything without a packed kernel)
+# ---------------------------------------------------------------------------
+
+def _dense_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
+    # Identity "packing": no compressed form exists for unstructured
+    # sparsity on the MXU — by convention the caller keeps the raw leaf
+    # (cheaper than a wrapper), so packing to dense returns None.
+    return None
+
+
+def _dense_matmul(x, pt, *, interpret=None):
+    return jnp.dot(x, pt.buf("w_packed"))
+
+
+def _dense_to_dense(pt):
+    return pt.buf("w_packed")
+
+
+SPARSE_SCHEMES.register(
+    "dense",
+    SchemeHandler("dense", _dense_pack, _dense_matmul, _dense_to_dense),
+)
+
+
+# ---------------------------------------------------------------------------
+# tile_pattern: keep-of-group_q contraction lanes per (group_q x block_p) tile
+# ---------------------------------------------------------------------------
+
+def _map_stacked(fn: Callable, w: jnp.ndarray, canonical_ndim: int):
+    """Apply a per-matrix numpy pack over any leading stack axes.
+
+    Returns a list of per-layer results (tuples of arrays) plus the stack
+    shape, or (None, ()) when ``w`` is already canonical.
+    """
+    lead = w.shape[: w.ndim - canonical_ndim]
+    if not lead:
+        return None, ()
+    flat = np.asarray(w).reshape((-1,) + w.shape[w.ndim - canonical_ndim:])
+    return [fn(jnp.asarray(m)) for m in flat], lead
+
+
+def _stack_packed(results, lead, names, scheme, shape, meta):
+    bufs = []
+    for i in range(len(names)):
+        stacked = np.stack([np.asarray(r[i]) for r in results])
+        bufs.append(jnp.asarray(stacked.reshape(lead + stacked.shape[1:])))
+    return PackedTensor(scheme, shape, names, tuple(bufs), meta)
+
+
+def _tile_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
+    """Pack a tile-pattern-pruned leaf (I, O) (or stacked (L, I, O))."""
+    block_p = spec.tile_block_p
+    group_q = spec.tile_group_q
+    keep = spec.tile_keep
+    I, O = w.shape[-2], w.shape[-1]
+    if I % group_q or O % block_p or keep >= group_q:
+        return None
+    meta = (("block_p", block_p), ("group_q", group_q), ("keep", keep))
+    names = ("w_packed", "lane_idx")
+
+    def one(m):
+        return _pack_tile_pattern(
+            m, block_p=block_p, group_q=group_q, keep=keep
+        )
+
+    results, lead = _map_stacked(one, w, 2)
+    if results is None:
+        wp, li = one(w)
+        return PackedTensor("tile_pattern", tuple(w.shape), names,
+                            (wp, li), meta)
+    return _stack_packed(results, lead, names, "tile_pattern",
+                         tuple(w.shape), meta)
+
+
+def _tile_matmul(x, pt, *, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    w_packed, lane_idx = pt.buf("w_packed"), pt.buf("lane_idx")
+    if w_packed.ndim != 2:
+        raise ValueError(
+            "tile_pattern matmul wants per-layer buffers; scan over the "
+            f"stacked leaf first (got w_packed {w_packed.shape})"
+        )
+    nb = lane_idx.shape[0]
+    block_p = w_packed.shape[-1] // nb
+    bm = _row_block(x.shape[0])
+    xp, pad = _pad_rows(x, bm)
+    y = _pattern_gemm(xp, w_packed, lane_idx, block_m=bm,
+                         block_p=block_p, interpret=interpret)
+    return y[: x.shape[0]] if pad else y
+
+
+def _stacked_to_dense(one_fn, bufs):
+    """vmap a per-layer to_dense over any leading stack axes (jit-safe)."""
+    extra = bufs[0].ndim - 2
+    fn = one_fn
+    for _ in range(extra):
+        fn = jax.vmap(fn)
+    return fn(*bufs)
+
+
+def _tile_to_dense(pt):
+    """Exact dense reconstruction, pure jnp (usable inside jit)."""
+    w_packed, lane_idx = pt.buf("w_packed"), pt.buf("lane_idx")
+
+    def one(wp, li):
+        Kp, P = wp.shape
+        nb = li.shape[0]
+        Q = pt.shape[-2]
+        onehot = jax.nn.one_hot(li, Q, dtype=wp.dtype)        # (nb, Kp, Q)
+        wpb = wp.reshape(Kp, nb, P // nb)                     # (Kp, nb, bp)
+        dense = jnp.einsum("jkq,kjb->qjb", onehot, wpb)
+        return dense.reshape(Q, P).astype(wp.dtype)
+
+    return _stacked_to_dense(one, (w_packed, lane_idx))
+
+
+SPARSE_SCHEMES.register(
+    "tile_pattern",
+    SchemeHandler("tile_pattern", _tile_pack, _tile_matmul, _tile_to_dense),
+)
+
+
+# ---------------------------------------------------------------------------
+# column: whole contraction rows pruned (paper Eqn. 15 / connectivity Eqn. 18)
+# ---------------------------------------------------------------------------
+
+def _column_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
+    """Pack a column-pruned leaf (I, O): keep surviving contraction rows.
+
+    Stacked leaves may keep different row COUNTS per layer (top-k ties);
+    the pack pads every layer to the max count with index-0 rows of zero
+    weight — zero rows contribute nothing, so the packed matmul is exact.
+    """
+    group = spec.column_group
+    meta = (("group", group),)
+    names = ("w_packed", "kept_idx")
+
+    def one(m):
+        return _pack_columns(m, group=group)
+
+    results, lead = _map_stacked(one, w, 2)
+    if results is None:
+        wp, kept = one(w)
+        if kept.shape[0] >= w.shape[0]:
+            return None                          # nothing pruned: stay dense
+        return PackedTensor("column", tuple(w.shape), names, (wp, kept), meta)
+    kmax = max(r[1].shape[0] for r in results)
+    if kmax >= w.shape[-2]:
+        return None
+    padded = []
+    for wp, kept in results:
+        pad = kmax - kept.shape[0]
+        if pad:
+            wp = jnp.pad(wp, ((0, pad), (0, 0)))
+            kept = jnp.pad(kept, (0, pad))
+        padded.append((wp, kept))
+    return _stack_packed(padded, lead, names, "column", tuple(w.shape), meta)
+
+
+def _column_matmul(x, pt, *, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    w_packed, kept = pt.buf("w_packed"), pt.buf("kept_idx")
+    if w_packed.ndim != 2:
+        raise ValueError(
+            "column matmul wants per-layer buffers; scan over the "
+            f"stacked leaf first (got w_packed {w_packed.shape})"
+        )
+    O = w_packed.shape[-1]
+    bm = _row_block(x.shape[0])
+    bp = _block_of(O)
+    xp, pad = _pad_rows(x, bm)
+    y = _column_gemm(xp, w_packed, kept, block_m=bm, block_p=bp,
+                        interpret=interpret)
+    return y[: x.shape[0]] if pad else y
+
+
+def _column_to_dense(pt):
+    """Exact dense reconstruction, pure jnp (usable inside jit)."""
+    w_packed, kept = pt.buf("w_packed"), pt.buf("kept_idx")
+
+    def one(wp, ki):
+        I = pt.shape[-2]
+        # scatter-by-onehot: padded rows are zero-weight duplicates of
+        # index 0, so the additive scatter stays exact
+        onehot = jax.nn.one_hot(ki, I, dtype=wp.dtype)        # (K, I)
+        return jnp.einsum("ki,ko->io", onehot, wp).astype(wp.dtype)
+
+    return _stacked_to_dense(one, (w_packed, kept))
+
+
+SPARSE_SCHEMES.register(
+    "column",
+    SchemeHandler("column", _column_pack, _column_matmul, _column_to_dense),
+)
+
+
+# ---------------------------------------------------------------------------
+# pattern: 3x3 conv kernels with channel-shared tap patterns (paper SIV-D-4)
+# ---------------------------------------------------------------------------
+
+def _pattern_pack(w4: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
+    """Pack a pattern-pruned conv (A, C, 3, 3) with channel-shared taps.
+
+    The Pallas pattern-conv kernel requires the SAME tap set for every
+    filter of a channel (the FKR grouping). Per-kernel pattern pruning can
+    violate that, so the pack derives each channel's tap UNION across
+    filters and only packs when it fits ``pattern_keep`` taps — otherwise
+    the leaf stays dense (the caller's fallback). Channels fully removed by
+    connectivity pruning pack as zero-weight taps.
+    """
+    if w4.ndim != 4 or w4.shape[-2:] != (3, 3):
+        return None
+    keep = spec.pattern_keep
+    wf = np.asarray(w4)
+    A, C = wf.shape[0], wf.shape[1]
+    nz = (wf != 0).any(axis=0).reshape(C, 9)          # (C, 9)
+    if (nz.sum(axis=1) > keep).any():
+        return None                  # taps not channel-shared: unpackable
+    taps = np.zeros((C, keep), np.int32)
+    w_packed = np.zeros((C * keep, A), wf.dtype)
+    for c in range(C):
+        t = np.nonzero(nz[c])[0]
+        taps[c, : t.shape[0]] = t    # remaining slots: tap 0 with zero weight
+        w_packed[c * keep: c * keep + t.shape[0], :] = (
+            wf[:, c, t // 3, t % 3].T
+        )
+    return PackedTensor(
+        "pattern", tuple(w4.shape), ("w_packed", "taps"),
+        (jnp.asarray(w_packed), jnp.asarray(taps)),
+        (("keep", keep),),
+    )
+
+
+def _pattern_conv(x, pt, *, interpret=None):
+    """Stride-1 SAME 3x3 pattern conv: x (B, H, W, C) -> (B, H, W, A)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pattern_conv_kernel(x, pt.buf("w_packed"), pt.buf("taps"),
+                            interpret=interpret)
+
+
+def _pattern_matmul(x, pt, *, interpret=None):
+    raise TypeError(
+        "scheme 'pattern' packs a conv tensor; use conv dispatch "
+        "(models.cnn.conv_apply), not a GEMM matmul"
+    )
+
+
+def _pattern_to_dense(pt):
+    """Exact dense reconstruction, pure jnp (usable inside jit)."""
+    wp, taps = pt.buf("w_packed"), pt.buf("taps")
+    A, C = pt.shape[0], pt.shape[1]
+    keep = taps.shape[1]
+    # zero-weight pad slots scatter zeros: harmless even on tap 0
+    onehot = jax.nn.one_hot(taps, 9, dtype=wp.dtype)          # (C, keep, 9)
+    wck = wp.reshape(C, keep, A)
+    dense = jnp.einsum("ckt,cka->act", onehot, wck)
+    return dense.reshape(A, C, 3, 3).astype(wp.dtype)
+
+
+SPARSE_SCHEMES.register(
+    "pattern",
+    SchemeHandler("pattern", _pattern_pack, _pattern_matmul,
+                  _pattern_to_dense, conv=_pattern_conv),
+)
+
+# pattern_shared (channel-shared library patterns, the packable deployment
+# composition) packs through the same handler — its pack ALWAYS succeeds
+# because the projection enforces channel-shared taps; plain `pattern`
+# (per-kernel top-4) packs only when the taps happen to be channel-shared.
+SPARSE_SCHEMES.register(
+    "pattern_shared",
+    SchemeHandler("pattern_shared", _pattern_pack, _pattern_matmul,
+                  _pattern_to_dense, conv=_pattern_conv),
+)
