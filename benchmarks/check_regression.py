@@ -1,0 +1,88 @@
+"""CI gate: fail if the packed serving hot path regresses below dense.
+
+Reads experiments/bench/BENCH_packed_serve.json (written by
+``benchmarks/packed_serve.py``) and enforces the deployment contract the
+paper's claims rest on:
+
+  * tokens_identical — packed decode must be token-identical to dense
+    (a wrong-but-fast kernel is a correctness regression, full stop);
+  * decode_ratio_vs_dense >= threshold — the compressed representation
+    must not decode slower than dense (default 1.0; override with
+    ``--min-ratio`` / REPRO_MIN_DECODE_RATIO, e.g. 0.95 to tolerate
+    measurement noise on shared CI boxes);
+  * weight_bytes_ratio — packed weights must actually be smaller (> 1.0).
+
+Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
+
+    PYTHONPATH=src:. python benchmarks/packed_serve.py   # regenerate
+    python benchmarks/check_regression.py                # gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if "__file__" in globals() else ".",
+    "experiments", "bench", "BENCH_packed_serve.json",
+)
+
+
+def check(path: str, min_ratio: float) -> int:
+    if not os.path.isfile(path):
+        print(f"check_regression: missing benchmark file {path} "
+              "(run benchmarks/packed_serve.py first)")
+        return 2
+    with open(path) as f:
+        rows = json.load(f)
+    by_mode = {r.get("mode"): r for r in rows}
+    if "dense" not in by_mode or "packed" not in by_mode:
+        print(f"check_regression: {path} lacks dense/packed rows")
+        return 2
+    pk = by_mode["packed"]
+    failures = []
+    for mode, r in by_mode.items():
+        if not r.get("tokens_identical", False):
+            failures.append(f"{mode}: tokens_identical is false")
+    ratio = pk.get("decode_ratio_vs_dense")
+    if ratio is None:
+        failures.append("packed row lacks decode_ratio_vs_dense")
+    elif ratio < min_ratio:
+        failures.append(
+            f"packed decode is {ratio:.3f}x dense speed "
+            f"(gate: >= {min_ratio}) — "
+            f"{pk['cpu_ms_decode_step']}ms/step vs "
+            f"{by_mode['dense']['cpu_ms_decode_step']}ms/step"
+        )
+    wr = pk.get("weight_bytes_ratio", 0)
+    if wr <= 1.0:
+        failures.append(f"packed weights not smaller than dense ({wr}x)")
+
+    if failures:
+        print("check_regression: FAIL")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"check_regression: OK — packed decode {ratio:.3f}x dense, "
+          f"weights {wr}x smaller, "
+          f"scan {pk.get('scan_speedup', '?')}x over per-token loop, "
+          f"tokens identical")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--path", default=DEFAULT_PATH)
+    ap.add_argument("--min-ratio", type=float,
+                    default=float(os.environ.get("REPRO_MIN_DECODE_RATIO",
+                                                 "1.0")))
+    args = ap.parse_args()
+    return check(args.path, args.min_ratio)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

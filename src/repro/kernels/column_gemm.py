@@ -20,12 +20,14 @@ column-structured.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels.epilogue import apply_epilogue, check_activation
 
 
 def pack_columns(w: jnp.ndarray, *, group: int = 1
@@ -45,12 +47,20 @@ def pack_columns(w: jnp.ndarray, *, group: int = 1
     return jnp.asarray(wf[kept]), jnp.asarray(kept)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, n_k: int, f32_dot: bool = False):
+def _kernel(*refs, n_k: int, f32_dot: bool = False, has_bias: bool = False,
+            activation=None):
     """Accumulate one (bm × bp) fp32 output tile over K chunks.
 
     ``f32_dot``: interpret-mode only (CPU DotThunk lacks BF16×BF16→F32);
     on TPU the MXU handles bf16 inputs with f32 accumulation natively.
+    The optional (bias, activation) epilogue runs on the finished fp32
+    accumulator at the LAST K step — the grid is sequential with k fastest,
+    so the tile is complete exactly then.
     """
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref = refs
+    else:
+        (x_ref, w_ref, o_ref), b_ref = refs, None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -62,22 +72,33 @@ def _kernel(x_ref, w_ref, o_ref, *, n_k: int, f32_dot: bool = False):
         x, w = x.astype(jnp.float32), w.astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
+    if has_bias or activation is not None:
+        @pl.when(k == n_k - 1)
+        def _epilogue():
+            o_ref[...] = apply_epilogue(
+                o_ref[...], b_ref[0] if has_bias else None, activation
+            )
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_p", "block_k", "interpret"),
+    static_argnames=("block_m", "block_p", "block_k", "interpret",
+                     "activation"),
 )
 def column_gemm(
     x: jnp.ndarray,              # (M, Q)
     w_packed: jnp.ndarray,       # (K, P)
     kept_idx: jnp.ndarray,       # (K,)
+    bias: Optional[jnp.ndarray] = None,      # (P,) fused-epilogue bias
     *,
     block_m: int = 128,
     block_p: int = 128,
     block_k: int = 512,
     interpret: bool = True,
+    activation: Optional[str] = None,        # relu | silu | gelu | None
 ) -> jnp.ndarray:
-    """y = x @ W for column-pruned W: gather K kept columns, dense matmul."""
+    """y = act(x @ W + bias) for column-pruned W: gather kept cols, dense dot."""
+    check_activation(activation)
     M, Q = x.shape
     K, P = w_packed.shape
     xg = jnp.take(x, kept_idx, axis=1)       # hoisted gather (fuses in XLA)
@@ -92,15 +113,21 @@ def column_gemm(
         raise ValueError(f"(M={M}, P={P}) not tiled by ({block_m}, {block_p})")
 
     needs_f32 = interpret and xg.dtype == jnp.bfloat16
+    in_specs = [
+        pl.BlockSpec((block_m, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, block_p), lambda i, j, k: (k, j)),
+    ]
+    operands = [xg, w_packed]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_p), lambda i, j, k: (0, j)))
+        operands.append(bias.reshape(1, P))
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32),
+        functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32,
+                          has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((M, P), jnp.float32),
         grid=(M // block_m, P // block_p, n_k),
-        in_specs=[
-            pl.BlockSpec((block_m, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, block_p), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_p), lambda i, j, k: (i, j)),
         interpret=interpret,
-    )(xg, w_packed)
+    )(*operands)
     return out.astype(x.dtype)

@@ -1,0 +1,49 @@
+"""Fused epilogue vocabulary shared by the packed Pallas kernels.
+
+Every packed GEMM/conv kernel accepts an optional (bias, activation)
+epilogue executed on the fp32 accumulator in VMEM, before the single
+writeback — the packed FFN/conv never materializes a pre-activation
+intermediate in HBM. The same names are accepted by the XLA small-M fast
+path (``sparse.registry``) and the dense reference (``models.layers``),
+so dense and packed execution share one epilogue contract:
+
+    y = activation(acc_f32 + bias)          # bias/activation each optional
+
+``activation`` is one of the keys below (or None); bias broadcasts over
+the M (rows) axis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def check_activation(activation: Optional[str]) -> None:
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(
+            f"unknown epilogue activation {activation!r}; "
+            f"expected one of {sorted(ACTIVATIONS)} or None"
+        )
+
+
+def apply_epilogue(acc: jnp.ndarray, bias, activation: Optional[str]
+                   ) -> jnp.ndarray:
+    """Epilogue on the fp32 accumulator: add bias, apply activation.
+
+    ``acc`` is assumed fp32 (the kernels' accumulation dtype); callers cast
+    back to the output dtype after. ``bias`` broadcasts over leading axes.
+    """
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if activation is not None:
+        acc = ACTIVATIONS[activation](acc)
+    return acc

@@ -95,7 +95,9 @@ def pack_pattern_conv(w4, pat_ids, patterns=None):
     return _pc.pack_pattern_conv(w4, pat_ids, patterns)
 
 
-def pattern_conv(x, w_packed, taps, *, interpret=None):
+def pattern_conv(x, w_packed, taps, bias=None, *, interpret=None,
+                 activation=None):
     if interpret is None:
         interpret = _default_interpret()
-    return _pc.pattern_conv(x, w_packed, taps, interpret=interpret)
+    return _pc.pattern_conv(x, w_packed, taps, bias, interpret=interpret,
+                            activation=activation)

@@ -23,7 +23,7 @@ VMEM with fp32 accumulation over K chunks.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +31,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.projections import canonical_patterns_3x3
+from repro.kernels.epilogue import apply_epilogue, check_activation
 
 
 def assign_channel_patterns(w4: jnp.ndarray, patterns: np.ndarray = None
@@ -93,7 +94,12 @@ def gather_taps(x: jnp.ndarray, taps: np.ndarray) -> jnp.ndarray:
     return xg.reshape(B * H * W, keep * C)
 
 
-def _kernel(x_ref, w_ref, o_ref, *, n_k: int, f32_dot: bool = False):
+def _kernel(*refs, n_k: int, f32_dot: bool = False, has_bias: bool = False,
+            activation=None):
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref = refs
+    else:
+        (x_ref, w_ref, o_ref), b_ref = refs, None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -105,20 +111,32 @@ def _kernel(x_ref, w_ref, o_ref, *, n_k: int, f32_dot: bool = False):
         x, w = x.astype(jnp.float32), w.astype(jnp.float32)
     o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
+    if has_bias or activation is not None:
+        # fused epilogue on the finished fp32 tile (k iterates fastest)
+        @pl.when(k == n_k - 1)
+        def _epilogue():
+            o_ref[...] = apply_epilogue(
+                o_ref[...], b_ref[0] if has_bias else None, activation
+            )
+
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_a", "block_k", "interpret")
+    jax.jit, static_argnames=("block_m", "block_a", "block_k", "interpret",
+                              "activation")
 )
 def pattern_conv_gemm(
     xg: jnp.ndarray,             # (M, keep·C) gathered taps
     w_packed: jnp.ndarray,       # (keep·C, A)
+    bias: Optional[jnp.ndarray] = None,     # (A,) fused-epilogue bias
     *,
     block_m: int = 256,
     block_a: int = 128,
     block_k: int = 512,
     interpret: bool = True,
+    activation: Optional[str] = None,       # relu | silu | gelu | None
 ) -> jnp.ndarray:
-    """The packed-GEMM hot loop of the pattern conv."""
+    """The packed-GEMM hot loop of the pattern conv (+ fused epilogue)."""
+    check_activation(activation)
     M, K = xg.shape
     K2, A = w_packed.shape
     bm = min(block_m, M)
@@ -133,17 +151,25 @@ def pattern_conv_gemm(
     n_k = Kp // bk
 
     needs_f32 = interpret and xg.dtype == jnp.bfloat16
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, ba), lambda i, j, k: (k, j)),
+    ]
+    operands = [xg, w_packed]
+    if bias is not None:
+        if pad_a:
+            bias = jnp.pad(bias, (0, pad_a))
+        in_specs.append(pl.BlockSpec((1, ba), lambda i, j, k: (0, j)))
+        operands.append(bias.reshape(1, Ap))
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32),
+        functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32,
+                          has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((Mp, Ap), jnp.float32),
         grid=(Mp // bm, Ap // ba, n_k),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, ba), lambda i, j, k: (k, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, ba), lambda i, j, k: (i, j)),
         interpret=interpret,
-    )(xg, w_packed)
+    )(*operands)
     return out[:M, :A].astype(xg.dtype)
 
 
@@ -151,11 +177,18 @@ def pattern_conv(
     x: jnp.ndarray,              # (B, H, W, C)
     w_packed: jnp.ndarray,       # (keep·C, A)
     taps: np.ndarray,            # (C, keep)
+    bias: Optional[jnp.ndarray] = None,     # (A,) fused-epilogue bias
     *,
     interpret: bool = True,
+    activation: Optional[str] = None,
 ) -> jnp.ndarray:
-    """Pattern-pruned 3×3 conv, stride 1, SAME padding → (B, H, W, A)."""
+    """Pattern-pruned 3×3 conv, stride 1, SAME padding → (B, H, W, A).
+
+    The (bias, activation) epilogue fuses into the packed GEMM: conv →
+    bias → relu writes back once instead of materializing the conv output.
+    """
     B, H, W, C = x.shape
     xg = gather_taps(x, taps)
-    y = pattern_conv_gemm(xg, w_packed, interpret=interpret)
+    y = pattern_conv_gemm(xg, w_packed, bias, interpret=interpret,
+                          activation=activation)
     return y.reshape(B, H, W, -1)

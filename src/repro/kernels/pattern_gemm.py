@@ -30,12 +30,14 @@ dynamic-gather on sublanes; validated here with interpret=True (CPU box).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.kernels.epilogue import apply_epilogue, check_activation
 
 
 def pack_tile_pattern(
@@ -67,54 +69,105 @@ def pack_tile_pattern(
     return (jnp.asarray(w_packed, w.dtype), jnp.asarray(lane_idx))
 
 
-def _kernel(idx_ref, x_ref, w_ref, o_ref, *, f32_dot: bool = False):
+def pack_tile_pattern_blocked(
+    w: jnp.ndarray, *, block_p: int = 128, group_q: int = 8, keep: int = 4
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack into the BLOCKED dispatch layout: (nb, Kp, block_p).
+
+    Same contents as ``pack_tile_pattern`` but with the per-output-block
+    weight panel contiguous — the layout both execution paths want:
+      * the Pallas kernel DMAs exactly panel j per grid column (no strided
+        HBM reads across P);
+      * the small-M decode fast path runs one batched dot over the nb axis
+        with no per-call transpose.
+    Chosen once at pack time (``sparse.registry``), not per call.
+    """
+    wp, lane_idx = pack_tile_pattern(
+        w, block_p=block_p, group_q=group_q, keep=keep
+    )
+    Kp, P = wp.shape
+    nb = P // block_p
+    wpb = np.ascontiguousarray(
+        np.asarray(wp).reshape(Kp, nb, block_p).transpose(1, 0, 2))
+    return jnp.asarray(wpb), lane_idx
+
+
+def _kernel(*refs, f32_dot: bool = False, blocked: bool = False,
+            has_bias: bool = False, activation=None):
     """One (bm × block_p) output tile: VMEM lane gather + dense MXU matmul.
 
     ``f32_dot`` upcasts inputs for interpret mode — the CPU backend's DotThunk
     lacks BF16×BF16→F32; on TPU the MXU takes bf16 inputs with f32 accum via
     ``preferred_element_type`` (do NOT upcast there: f32 MXU is 8× slower).
+
+    The optional (bias, activation) epilogue runs on the fp32 accumulator in
+    VMEM before the single writeback.
     """
+    if has_bias:
+        idx_ref, x_ref, w_ref, b_ref, o_ref = refs
+    else:
+        (idx_ref, x_ref, w_ref, o_ref), b_ref = refs, None
     lanes = idx_ref[0]                       # (Kp,) packed-lane source rows
     xg = x_ref[...][:, lanes]                # (bm, Kp) — gather inside VMEM
-    w = w_ref[...]
+    w = w_ref[0] if blocked else w_ref[...]  # (Kp, block_p) either way
     if f32_dot:
         xg, w = xg.astype(jnp.float32), w.astype(jnp.float32)
-    o_ref[...] = jnp.dot(
-        xg, w, preferred_element_type=jnp.float32
-    ).astype(o_ref.dtype)
+    acc = jnp.dot(xg, w, preferred_element_type=jnp.float32)
+    acc = apply_epilogue(acc, b_ref[0] if has_bias else None, activation)
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_p", "interpret")
+    jax.jit, static_argnames=("block_m", "block_p", "interpret", "activation")
 )
 def pattern_gemm(
     x: jnp.ndarray,               # (M, Q)
-    w_packed: jnp.ndarray,        # (Kp, P), Kp = Q·keep/group_q
+    w_packed: jnp.ndarray,        # (Kp, P) flat or (nb, Kp, block_p) blocked
     lane_idx: jnp.ndarray,        # (P/block_p, Kp)
+    bias: Optional[jnp.ndarray] = None,       # (P,) fused-epilogue bias
     *,
     block_m: int = 128,
     block_p: int = 128,
     interpret: bool = True,
+    activation: Optional[str] = None,         # relu | silu | gelu | None
 ) -> jnp.ndarray:
-    """y = x @ W for tile-pattern sparse W, via the packed representation."""
+    """y = act(x @ W + bias) for tile-pattern sparse W, packed representation.
+
+    Accepts either weight layout: the legacy flat (Kp, P) or the blocked
+    (nb, Kp, block_p) dispatch layout (``pack_tile_pattern_blocked``) —
+    blocked infers ``block_p`` from the panel shape.
+    """
+    check_activation(activation)
     M, Q = x.shape
-    Kp, P = w_packed.shape
-    nb = P // block_p
+    blocked = w_packed.ndim == 3
+    if blocked:
+        nb, Kp, block_p = w_packed.shape
+        P = nb * block_p
+    else:
+        Kp, P = w_packed.shape
+        nb = P // block_p
     if lane_idx.shape != (nb, Kp):
         raise ValueError(f"lane_idx {lane_idx.shape} != {(nb, Kp)}")
     if M % block_m:
         raise ValueError(f"M={M} % block_m={block_m}")
 
     needs_f32 = interpret and x.dtype == jnp.bfloat16
+    in_specs = [
+        pl.BlockSpec((1, Kp), lambda i, j: (j, 0)),           # lane table
+        pl.BlockSpec((block_m, Q), lambda i, j: (i, 0)),      # x row-tile
+        (pl.BlockSpec((1, Kp, block_p), lambda i, j: (j, 0, 0)) if blocked
+         else pl.BlockSpec((Kp, block_p), lambda i, j: (0, j))),
+    ]
+    operands = [lane_idx, x, w_packed]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_p), lambda i, j: (0, j)))
+        operands.append(bias.reshape(1, P))
     return pl.pallas_call(
-        functools.partial(_kernel, f32_dot=needs_f32),
+        functools.partial(_kernel, f32_dot=needs_f32, blocked=blocked,
+                          has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((M, P), x.dtype),
         grid=(M // block_m, nb),
-        in_specs=[
-            pl.BlockSpec((1, Kp), lambda i, j: (j, 0)),       # lane table
-            pl.BlockSpec((block_m, Q), lambda i, j: (i, 0)),  # x row-tile
-            pl.BlockSpec((Kp, block_p), lambda i, j: (0, j)), # packed weights
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
         interpret=interpret,
-    )(lane_idx, x, w_packed)
+    )(*operands)

@@ -428,6 +428,21 @@ def decode_attention(
 
     qg = q.reshape(B, KV, G, hd)
 
+    if nC == 1:
+        # single-chunk fast path: the whole cache fits one tile — plain
+        # masked softmax, no running-max loop machinery (decode caches are
+        # usually small; this trims a per-layer per-step while loop)
+        s = jnp.einsum("bkgd,bpkd->bkgp", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        ok = (slot_pos >= 0) & (slot_pos <= q_pos[:, None])
+        if window is not None:
+            ok &= q_pos[:, None] - slot_pos < window
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgp,bpkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, 1, H, hd).astype(q.dtype)
+
     def body(carry, j):
         m, l, acc = carry
         kc = jax.lax.dynamic_slice_in_dim(k_cache, j * chunk, chunk, axis=1)
@@ -470,16 +485,17 @@ def cache_insert(
     *,
     ring: bool,
 ):
-    """Insert one position into the cache (ring: slot = pos % C)."""
+    """Insert one position into the cache (ring: slot = pos % C).
+
+    Per-batch scatter into the target slot: touches B·KV·hd elements
+    instead of blending over the whole (B, C, KV, hd) cache — the decode
+    scan carries the buffers through unchanged except for the one slot,
+    which is what lets XLA update them in place step over step.
+    """
     C = k_cache.shape[1]
     slot = (pos % C) if ring else pos                         # (B,)
-    onehot = jax.nn.one_hot(slot, C, dtype=k_cache.dtype)     # (B, C)
-    k_cache = k_cache * (1 - onehot)[..., None, None] + (
-        onehot[..., None, None] * k_new.astype(k_cache.dtype)
-    )
-    v_cache = v_cache * (1 - onehot)[..., None, None] + (
-        onehot[..., None, None] * v_new.astype(v_cache.dtype)
-    )
-    ip = onehot.astype(jnp.int32)
-    slot_pos = slot_pos * (1 - ip) + ip * pos[:, None]
+    b = jnp.arange(k_cache.shape[0])
+    k_cache = k_cache.at[b, slot].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[b, slot].set(v_new[:, 0].astype(v_cache.dtype))
+    slot_pos = slot_pos.at[b, slot].set(pos)
     return k_cache, v_cache, slot_pos

@@ -39,26 +39,30 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
     )
 
 
-def conv_apply(x: jnp.ndarray, w, stride: int = 1) -> jnp.ndarray:
+def conv_apply(x: jnp.ndarray, w, stride: int = 1, bias=None,
+               activation=None) -> jnp.ndarray:
     """Packed-aware conv: the CNN analogue of ``layers.dense_apply``.
 
     A pattern-packed weight (stride-1 3×3, the paper's pruned CONV) runs
-    through the Pallas ``pattern_conv`` kernel; any other packed leaf is
+    through the Pallas ``pattern_conv`` kernel with the (bias, activation)
+    epilogue fused into the packed GEMM; any other packed leaf is
     reconstructed dense (strided convs have no packed kernel yet), and raw
-    arrays take the plain XLA conv.
+    arrays take the plain XLA conv with the identical fp32 epilogue math.
     """
     from repro.sparse.packed import PackedTensor
 
     if isinstance(w, PackedTensor):
-        from repro.sparse.registry import SPARSE_SCHEMES
+        from repro.sparse.registry import SPARSE_SCHEMES, dispatch_conv
 
         # direct .get(): a scheme-tagged PackedTensor of an unknown scheme
         # must fail loudly here, not fall back to misreading its buffers
         handler = SPARSE_SCHEMES.get(w.scheme)
         if handler.conv is not None and stride == 1:
-            return handler.conv(x, w)
+            return dispatch_conv(x, w, bias=bias, activation=activation)
         w = handler.to_dense(w)
-    return conv2d(x, w, stride)
+    from repro.models.layers import _dense_epilogue
+
+    return _dense_epilogue(conv2d(x, w, stride), bias, activation)
 
 
 def _as_dense(w):
@@ -127,9 +131,8 @@ class VGG:
         return {**params, "layers": layers}
 
     def apply_layer(self, n: int, lp, x):
-        """conv → relu (→ maxpool where the plan says so)."""
-        y = conv_apply(x, lp["w"]) + lp["bias"]
-        y = jax.nn.relu(y)
+        """conv → bias → relu fused epilogue (→ maxpool per the plan)."""
+        y = conv_apply(x, lp["w"], bias=lp["bias"], activation="relu")
         # apply any pools that follow this conv in the plan (skip once the
         # spatial dims have shrunk to 1 — small-image variants)
         conv_seen = -1
@@ -240,13 +243,14 @@ class ResNet:
         spec = self.layer_plan[n]
         x = state["x"]
         if spec["kind"] == "stem":
-            y = jax.nn.relu(conv_apply(x, lp["w"], 1) + lp["bias"])
+            y = conv_apply(x, lp["w"], 1, bias=lp["bias"], activation="relu")
             return {"x": y, "res": None}
         if spec["kind"] == "conv1":
-            y = jax.nn.relu(conv_apply(x, lp["w"], spec["stride"]) + lp["bias"])
+            y = conv_apply(x, lp["w"], spec["stride"], bias=lp["bias"],
+                           activation="relu")
             return {"x": y, "res": x}
-        # conv2: add residual (projected if needed)
-        y = conv_apply(x, lp["w"], 1) + lp["bias"]
+        # conv2: bias fuses into the kernel; relu waits for the residual add
+        y = conv_apply(x, lp["w"], 1, bias=lp["bias"])
         res = state["res"]
         if spec.get("proj"):
             stride = self.layer_plan[n - 1]["stride"]

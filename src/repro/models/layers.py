@@ -20,17 +20,36 @@ def dtype_of(name: str):
 
 
 # ---------------------------------------------------------------------------
-# Packed-aware dense apply
+# Packed-aware dense apply (+ fused epilogue)
 # ---------------------------------------------------------------------------
 
-def dense_apply(x: jnp.ndarray, w) -> jnp.ndarray:
-    """y = x @ w for a dense array OR a ``sparse.PackedTensor`` weight.
+def _dense_epilogue(y: jnp.ndarray, bias, activation) -> jnp.ndarray:
+    """Reference epilogue for raw-array weights: act(y + bias) in fp32.
+
+    Mirrors the packed kernels' in-VMEM epilogue (``kernels.epilogue``)
+    so dense and packed execution share one numeric contract.
+    """
+    if bias is None and activation is None:
+        return y
+    from repro.kernels.epilogue import apply_epilogue
+
+    return apply_epilogue(y.astype(jnp.float32), bias, activation).astype(
+        y.dtype)
+
+
+def dense_apply(x: jnp.ndarray, w, bias=None, activation=None) -> jnp.ndarray:
+    """y = act(x @ w + bias) for a dense array OR ``sparse.PackedTensor``.
 
     THE dispatch point of the packed serving path: every model GEMM routes
     through here, so binding a packed artifact (``PrunedArtifact.bind``)
-    swaps the whole model onto the registry's Pallas kernels with no model
-    code aware of any scheme. ``x`` is (..., d_in); leading dims are
-    flattened to the kernel's M axis and restored.
+    swaps the whole model onto the registry's plan-cached Pallas kernels
+    with no model code aware of any scheme. ``x`` is (..., d_in); leading
+    dims are flattened to the kernel's M axis and restored.
+
+    ``bias``/``activation`` (relu | silu | gelu) form the fused epilogue:
+    packed weights execute it on the fp32 accumulator inside the kernel
+    (no intermediate hits HBM); dense weights compute the identical math
+    in XLA, which fuses it the usual way.
     """
     from repro.sparse.packed import PackedTensor
 
@@ -38,9 +57,11 @@ def dense_apply(x: jnp.ndarray, w) -> jnp.ndarray:
         from repro.sparse.registry import dispatch_matmul
 
         lead = x.shape[:-1]
-        y = dispatch_matmul(x.reshape(-1, x.shape[-1]), w)
+        y = dispatch_matmul(x.reshape(-1, x.shape[-1]), w, bias=bias,
+                            activation=activation)
         return y.reshape(lead + (y.shape[-1],))
-    return jnp.einsum("...d,do->...o", x, w)
+    y = jnp.einsum("...d,do->...o", x, w)
+    return _dense_epilogue(y, bias, activation)
 
 
 # ---------------------------------------------------------------------------
@@ -84,21 +105,36 @@ def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
     return 1.0 / (theta ** exponents)
 
 
+def rope_tables(positions: jnp.ndarray, head_dim: int, theta: float):
+    """(sin, cos) tables for ``apply_rope_tables``.
+
+    Computed once per forward/decode step and reused by every layer —
+    the tables depend only on positions, not on the layer, so the decode
+    hot loop hoists them out of the scan over blocks.
+    """
+    freqs = rope_frequencies(head_dim, theta)                  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # insert the heads dim: (..., S, 1, hd/2)
+    angles = angles[..., None, :]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope_tables(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Rotate ``x`` (..., seq, heads, head_dim) by precomputed tables."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
     """Rotate ``x`` (..., seq, heads, head_dim) by position-dependent angles.
 
     ``positions`` broadcasts against the seq dim: (seq,) or (batch, seq).
     """
-    head_dim = x.shape[-1]
-    freqs = rope_frequencies(head_dim, theta)                  # (hd/2,)
-    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
-    # insert the heads dim: (..., S, 1, hd/2)
-    angles = angles[..., None, :]
-    sin, cos = jnp.sin(angles), jnp.cos(angles)
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    rx1 = x1 * cos - x2 * sin
-    rx2 = x2 * cos + x1 * sin
-    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+    sin, cos = rope_tables(positions, x.shape[-1], theta)
+    return apply_rope_tables(x, sin, cos)
 
 
 # ---------------------------------------------------------------------------
@@ -120,11 +156,15 @@ def ffn_init(key, d_model: int, d_ff: int, ffn_type: str, dtype) -> dict:
 
 
 def ffn_apply(params: dict, x: jnp.ndarray, ffn_type: str) -> jnp.ndarray:
+    """FFN with the activation fused into the producing GEMM's epilogue.
+
+    Packed weights run silu/gelu on the fp32 accumulator inside the Pallas
+    kernel (the pre-activation never reaches HBM); dense weights compute
+    the same fp32 math in XLA — identical numerics either way.
+    """
     if ffn_type == "swiglu":
-        gate = dense_apply(x, params["w_gate"])
-        up = dense_apply(x, params["w_up"])
-        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        gate = dense_apply(x, params["w_gate"], activation="silu")
+        h = gate * dense_apply(x, params["w_up"])
     else:
-        up = dense_apply(x, params["w_up"])
-        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+        h = dense_apply(x, params["w_up"], activation="gelu")
     return dense_apply(h, params["w_down"])

@@ -47,6 +47,8 @@ from repro.models.layers import (
     rmsnorm,
     rmsnorm_init,
     apply_rope,
+    apply_rope_tables,
+    rope_tables,
 )
 from repro.models.moe import moe_apply, moe_init
 from repro.parallel.sharding import constrain
@@ -282,17 +284,20 @@ class LM:
 
     def _attention_block(
         self, bp, x, positions, *, collect_kv: bool = False,
-        use_flash: bool = False,
+        use_flash: bool = False, rope=None,
     ):
         cfg = self.config
+        if rope is None:
+            rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
         h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
-        q = dense_apply(h, bp["attn"]["wq"])
-        k = dense_apply(h, bp["attn"]["wk"])
-        v = dense_apply(h, bp["attn"]["wv"])
-        if cfg.qkv_bias:
-            q = q + bp["attn"]["bq"]
-            k = k + bp["attn"]["bk"]
-            v = v + bp["attn"]["bv"]
+        attn_p = bp["attn"]
+        # qkv bias rides the GEMM epilogue (fused in-kernel when packed)
+        q = dense_apply(h, attn_p["wq"],
+                        bias=attn_p["bq"] if cfg.qkv_bias else None)
+        k = dense_apply(h, attn_p["wk"],
+                        bias=attn_p["bk"] if cfg.qkv_bias else None)
+        v = dense_apply(h, attn_p["wv"],
+                        bias=attn_p["bv"] if cfg.qkv_bias else None)
         B, S, _ = x.shape
         q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
         k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
@@ -301,8 +306,8 @@ class LM:
         q = constrain(q, qa)
         k = constrain(k, ka)
         v = constrain(v, ka)
-        q = apply_rope(q, positions, cfg.rope_theta)
-        k = apply_rope(k, positions, cfg.rope_theta)
+        q = apply_rope_tables(q, *rope)
+        k = apply_rope_tables(k, *rope)
         kv = (k, v) if collect_kv else None    # cache keeps original KV heads
 
         # §Perf iteration 2: head-parallel attention for any (H, KV, TP)
@@ -328,7 +333,7 @@ class LM:
         return out, kv
 
     def _mixer_and_mlp(self, bp, x, positions, *, collect_kv: bool = False,
-                       use_flash: bool = False):
+                       use_flash: bool = False, rope=None):
         """One full block: sequence mixer + channel mixer.
 
         Returns (x, aux, kv) where kv is None unless ``collect_kv`` (prefill):
@@ -339,7 +344,7 @@ class LM:
 
         attn_out, kv = self._attention_block(bp, x, positions,
                                              collect_kv=collect_kv,
-                                             use_flash=use_flash)
+                                             use_flash=use_flash, rope=rope)
         if cfg.family == "hybrid":
             h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
             if collect_kv:
@@ -387,10 +392,13 @@ class LM:
             kv = None
             aux = jnp.float32(0)
         else:
+            # rope tables are layer-invariant: build once, close over them
+            rope = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+
             def block_fn(x, bp):
                 return self._mixer_and_mlp(bp, x, positions,
                                            collect_kv=collect_kv,
-                                           use_flash=use_flash)
+                                           use_flash=use_flash, rope=rope)
 
             if cfg.remat != "none":
                 policy = (None if cfg.remat == "full"
@@ -638,6 +646,8 @@ class LM:
         )
 
         slot_pos = cache["slot_pos"]
+        # rope tables depend only on pos — compute once, reuse per layer
+        r_sin, r_cos = rope_tables(pos[:, None], cfg.head_dim, cfg.rope_theta)
 
         def block_step(carry, xs):
             x, slot_pos = carry
@@ -647,18 +657,18 @@ class LM:
                 bp, kc, vc = xs
                 mst = None
             h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
-            q = dense_apply(h, bp["attn"]["wq"])
-            k = dense_apply(h, bp["attn"]["wk"])
-            v = dense_apply(h, bp["attn"]["wv"])
-            if cfg.qkv_bias:
-                q = q + bp["attn"]["bq"]
-                k = k + bp["attn"]["bk"]
-                v = v + bp["attn"]["bv"]
+            attn_p = bp["attn"]
+            q = dense_apply(h, attn_p["wq"],
+                            bias=attn_p["bq"] if cfg.qkv_bias else None)
+            k = dense_apply(h, attn_p["wk"],
+                            bias=attn_p["bk"] if cfg.qkv_bias else None)
+            v = dense_apply(h, attn_p["wv"],
+                            bias=attn_p["bv"] if cfg.qkv_bias else None)
             q = q.reshape(B, 1, cfg.num_heads, cfg.head_dim)
             k = k.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
             v = v.reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
-            q = apply_rope(q, pos[:, None], cfg.rope_theta)
-            k = apply_rope(k, pos[:, None], cfg.rope_theta)
+            q = apply_rope_tables(q, r_sin, r_cos)
+            k = apply_rope_tables(k, r_sin, r_cos)
 
             kc, vc, new_slot = cache_insert(kc, vc, slot_pos, k, v, pos,
                                             ring=ring)
@@ -692,7 +702,11 @@ class LM:
                   cache["mamba"])
         else:
             xs = (params["blocks"], cache["k"], cache["v"])
-        (x, new_slot_pos), ys = jax.lax.scan(block_step, (x, slot_pos), xs)
+        # shallow stacks: unroll the layer scan (no while-loop overhead at
+        # decode); deep stacks keep the O(1)-HLO scan
+        (x, new_slot_pos), ys = jax.lax.scan(
+            block_step, (x, slot_pos), xs,
+            unroll=min(cfg.num_layers, 4))
         if cfg.family == "hybrid":
             new_k, new_v, new_mamba = ys
             cache = {**cache, "mamba": new_mamba}
@@ -704,6 +718,40 @@ class LM:
         h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = self.lm_logits(params, h)
         return cache, logits
+
+    def decode_many(self, params, cache, tokens: jnp.ndarray,
+                    num_steps: int, sampler=None, unroll: int = 4):
+        """Device-resident multi-token decode: one ``lax.scan`` over steps.
+
+        Samples on-device after every step and feeds the token back in, so
+        a whole ``num_steps`` block costs ONE XLA dispatch and ONE host
+        transfer instead of one of each per token. The KV cache lives in
+        the scan carry — XLA reuses (donates) its buffers across steps
+        instead of round-tripping them to the host.
+
+        tokens: (B, 1) int32 — the first token of the block (e.g. sampled
+        from the prefill logits). ``sampler``: jit-compatible
+        ``logits (B, 1, V) -> (B, 1) int32`` (default: greedy argmax).
+        ``unroll`` trades compiled-code size for per-step while-loop
+        overhead (any ``num_steps`` is fine, jax handles remainders).
+        Returns (final cache, tokens (B, num_steps)) where column 0 is the
+        token sampled AFTER feeding ``tokens`` (i.e. the continuation).
+        """
+        if sampler is None:
+            from repro.serve.sampler import greedy_sample
+            sampler = greedy_sample
+
+        def step(carry, _):
+            cache, tok = carry
+            cache, logits = self.decode_step(params, cache, tok)
+            nxt = sampler(logits)
+            return (cache, nxt), nxt
+
+        (cache, _), toks = jax.lax.scan(
+            step, (cache, tokens), xs=None, length=num_steps,
+            unroll=min(unroll, num_steps),
+        )
+        return cache, jnp.swapaxes(toks[..., 0], 0, 1)   # (B, num_steps)
 
     def _xlstm_decode(self, params, cache, tokens):
         cfg = self.config

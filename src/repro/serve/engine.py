@@ -1,17 +1,30 @@
-"""Batched serving engine: continuous prefill + decode over a fixed batch.
+"""Batched serving engine: fixed-size chunked batches, scan-decoded on device.
 
-The production pattern the dry-run's ``decode_32k``/``long_500k`` cells
-lower: a fixed-size decode batch, per-slot position tracking, new requests
-prefilled into free slots. This engine is single-program (fits the pjit
-model — the whole batch steps together); slot management happens on host.
+What is actually implemented (scope note): this engine serves requests in
+FIXED chunked batches — ``generate`` splits the request list into chunks of
+``batch_size``, and each chunk is prefilled together and decoded together
+to the chunk's longest ``max_new_tokens``. There is NO continuous batching:
+a finished slot idles (masked) until its chunk completes; new requests are
+not prefilled into freed slots mid-decode. Chunking is the single-program
+pjit-friendly shape — the whole batch steps together.
+
+The decode hot path is device-resident: after one prefill dispatch, the
+whole token block is produced by ONE jitted ``LM.decode_many`` call — a
+``lax.scan`` over decode steps that samples on-device and feeds tokens
+back without host round-trips. The host sees one dispatch and one
+device→host transfer per chunk (plus prefill), instead of one of each per
+token. On TPU the KV cache buffers are donated into the scan. Chunks
+shorter than ``batch_size`` pad with empty slots: zero prompts plus an
+empty-slot mask that pins their sampled tokens to 0 (no request data is
+duplicated into pad slots).
 
 Pruned models serve two ways:
   * dense sparse — weights are already exactly sparse; no mask logic needed
     (the paper's baseline deployment: prune → retrain → deploy);
   * PACKED — pass a ``sparse.PrunedArtifact`` with ``packed=True`` and the
     engine binds the compressed representation: every GEMM dispatches
-    through the scheme→kernel registry (compressed weight storage on the
-    hot path, the paper's compiler-level deployment).
+    through the scheme→kernel registry's pack-time plans (compressed weight
+    storage on the hot path, the paper's compiler-level deployment).
 """
 
 from __future__ import annotations
@@ -21,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import LM
 from repro.serve.sampler import greedy_sample
@@ -53,7 +67,9 @@ class ServeEngine:
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
         only) the engine serves the compressed representation through the
-        scheme→kernel registry."""
+        scheme→kernel registry. ``sampler`` must be jit-compatible
+        (``logits (B, 1, V) -> (B, 1) int32``) — it runs on device inside
+        the decode scan."""
         from repro.core.pruner import PruneResult
         from repro.sparse import PrunedArtifact
 
@@ -76,6 +92,19 @@ class ServeEngine:
             lambda p, x: model.prefill(p, x, max_seq_len)
         )
 
+        def scan_decode(p, cache, tok, mask, num_steps):
+            # empty pad slots decode deterministic zeros (mask is (B,))
+            samp = lambda logits: sampler(logits) * mask[:, None]
+            return model.decode_many(p, cache, tok, num_steps, sampler=samp)
+
+        # donate the prefill cache into the scan: on TPU the decode loop
+        # mutates the KV buffers in place (CPU has no donation — skip the
+        # warning noise)
+        donate = (1,) if jax.default_backend() == "tpu" else ()
+        self._decode_many = jax.jit(
+            scan_decode, static_argnums=(4,), donate_argnums=donate
+        )
+
     def generate(self, requests: List[Request]) -> List[Result]:
         """Serve a list of requests in fixed-size batches."""
         results: List[Result] = []
@@ -88,7 +117,7 @@ class ServeEngine:
         B = self.batch_size
         n = len(requests)
         S = max(int(r.prompt.shape[0]) for r in requests)
-        # left-pad prompts to a common length, pad batch to B
+        # left-pad prompts to a common length; empty slots get zero prompts
         def pad(r: Request):
             p = r.prompt
             if p.shape[0] < S:
@@ -96,22 +125,26 @@ class ServeEngine:
                 p = jnp.pad(p, pad_width)
             return p
 
-        prompts = jnp.stack([pad(r) for r in requests] +
-                            [jnp.zeros_like(pad(requests[0]))] * (B - n))
+        padded = [pad(r) for r in requests]
+        prompts = jnp.stack(padded + [jnp.zeros_like(padded[0])] * (B - n))
+        slot_mask = jnp.asarray([1] * n + [0] * (B - n),
+                                dtype=jnp.int32)      # 1 = real request
         cache, logits = self._prefill(self.params, prompts)
+        # scan length is trimmed per chunk: this chunk's longest request,
+        # not a global engine-wide maximum
         max_new = max(r.max_new_tokens for r in requests)
-        out_tokens = []
-        tok = self.sampler(logits)
-        out_tokens.append(tok)
-        for _ in range(max_new - 1):
-            cache, logits = self._decode(self.params, cache, tok)
-            tok = self.sampler(logits)
-            out_tokens.append(tok)
-        toks = jnp.concatenate(out_tokens, axis=1)            # (B, max_new)
-        results = []
-        for j, r in enumerate(requests):
-            results.append(
-                Result(uid=r.uid,
-                       tokens=[int(t) for t in toks[j, : r.max_new_tokens]])
-            )
-        return results
+        tok0 = self.sampler(logits) * slot_mask[:, None]
+        if max_new > 1:
+            _, rest = self._decode_many(self.params, cache, tok0,
+                                        slot_mask, max_new - 1)
+            toks = jnp.concatenate([tok0, rest], axis=1)   # (B, max_new)
+        else:
+            toks = tok0
+        # ONE device→host transfer for the whole token block (a per-token
+        # int() loop on a device array would issue B·T blocking syncs)
+        toks_np = np.asarray(jax.device_get(toks))
+        return [
+            Result(uid=r.uid,
+                   tokens=[int(t) for t in toks_np[j, : r.max_new_tokens]])
+            for j, r in enumerate(requests)
+        ]

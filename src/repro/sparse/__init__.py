@@ -50,6 +50,43 @@ Models dispatch through ``models.layers.dense_apply`` (GEMMs) and
 ``models.cnn.conv_apply`` (convs): a raw array takes the dense path, a
 ``PackedTensor`` takes its registered kernel. New schemes plug in by
 registering a handler — no model or engine changes.
+
+Pack-time dispatch geometry (the hot-path contract)
+---------------------------------------------------
+
+Serving-time dispatch makes NO per-call decisions. The contract has three
+parts:
+
+  1. PACK TIME — the packer fixes the execution geometry and records it
+     in ``PackedTensor.meta``: the weight layout (``w_ndim`` — 3 for
+     tile_pattern's blocked (nb, Kp, block_p) panels, 2 for the flat
+     layouts), the kernel tile sizes (``block_p``, ``block_k``), and the
+     decode threshold (``small_m``). Buffers are laid out the way the
+     kernels consume them (one contiguous panel per output block).
+
+  2. PLAN TIME — the first ``dispatch_matmul``/``dispatch_conv`` call for
+     a given (scheme, shapes, dtype, M, epilogue) tuple builds ONE jitted
+     closure with geometry, M-padding, and kernel choice baked in, then
+     memoizes it. M <= ``small_m`` (decode: M = batch) selects the fast
+     path — a fused XLA gather + batched dot over the SAME compressed
+     buffers, no Pallas grid, no M padding.
+
+  3. CALL TIME — a dict lookup and the closure. Nothing else.
+
+Fused epilogue API
+------------------
+
+All packed execution accepts an optional (bias, activation) epilogue
+computed on the fp32 accumulator BEFORE writeback (in VMEM for the Pallas
+kernels), with activation one of relu | silu | gelu:
+
+    dispatch_matmul(x, pt, bias=b, activation="silu")   # act(x @ W + b)
+    dispatch_conv(x, pt, bias=b, activation="relu")     # conv epilogue
+
+``models.layers.dense_apply`` / ``models.cnn.conv_apply`` take the same
+keywords and compute the identical fp32 math for raw-array weights, so
+dense and packed serving share one numeric contract (token identity).
+The packed FFN/conv never materializes its pre-activation intermediate.
 """
 
 from repro.sparse.artifact import PrunedArtifact
@@ -62,6 +99,7 @@ from repro.sparse.packed import (
 from repro.sparse.registry import (
     SPARSE_SCHEMES,
     SchemeHandler,
+    dispatch_conv,
     dispatch_matmul,
     handler_for,
 )

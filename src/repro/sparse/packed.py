@@ -9,12 +9,21 @@ trees — the scheme tag and metadata ride along as static aux data.
 
 Buffer conventions per scheme (see ``sparse.registry`` for the kernels):
 
-  tile_pattern   w_packed (Kp, P)   kept contraction lanes, dense   [CWS]
-                 lane_idx (nb, Kp)  per-output-block source rows    [FKR]
-  column         w_packed (K, P)    surviving contraction rows      [CWS]
-                 kept_idx (K,)      global kept-feature table       [LRE]
-  pattern        w_packed (4C, A)   kept conv taps per channel      [CWS]
-                 taps     (C, 4)    channel-shared tap table        [FKR]
+  tile_pattern   w_packed (nb, Kp, bp)  kept lanes, BLOCKED: one       [CWS]
+                                        contiguous panel per output
+                                        block of bp=block_p columns
+                 lane_idx (nb, Kp)      per-output-block source rows   [FKR]
+  column         w_packed (K, P)        surviving contraction rows     [CWS]
+                 kept_idx (K,)          global kept-feature table      [LRE]
+  pattern        w_packed (4C, A)       kept conv taps per channel     [CWS]
+                 taps     (C, 4)        channel-shared tap table       [FKR]
+
+Pack-time dispatch geometry: ``meta`` records, at pack time, everything the
+hot path would otherwise decide per call — the weight layout (``w_ndim``),
+the kernel block sizes (``block_p`` / ``block_k`` / ``block_m``), and the
+small-M decode threshold (``small_m``). ``sparse.registry`` turns a
+(scheme, shapes, dtype, M) tuple into ONE cached jitted closure, so serving
+does a dict lookup instead of re-deriving geometry on every GEMM.
 
 Leaves stacked over a leading layer axis (the scan-over-layers transformer
 layout) carry that axis on every buffer; ``stacked`` reports how many
@@ -76,13 +85,22 @@ class PackedTensor:
         return self.buf("w_packed").dtype
 
     @property
+    def canonical_w_ndim(self) -> int:
+        """Rank of the canonical per-layer ``w_packed`` (pack-time meta).
+
+        2 for the flat (K, P) layouts; 3 for tile_pattern's blocked
+        (nb, Kp, bp) dispatch layout.
+        """
+        return int(self.meta_dict.get("w_ndim", 2))
+
+    @property
     def stacked(self) -> int:
         """Number of leading layer-stack axes on top of the canonical pack.
 
-        The canonical (per-layer) ``w_packed`` is 2-D for every scheme; a
-        scan-stacked transformer leaf adds one leading axis.
+        A scan-stacked transformer leaf adds one leading axis on every
+        buffer over the canonical per-layer rank.
         """
-        return self.buf("w_packed").ndim - 2
+        return self.buf("w_packed").ndim - self.canonical_w_ndim
 
     # -- sizes ---------------------------------------------------------------
 

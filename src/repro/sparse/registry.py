@@ -8,23 +8,42 @@ tensor was pruned) and the deployment level (the Pallas kernels in
 
     handler = handler_for(spec.scheme)
     pt      = handler.pack(w, spec)          # None -> not packable, stay dense
-    y       = handler.matmul(x2d, pt)        # registry-dispatched hot path
+    y       = dispatch_matmul(x2d, pt)       # plan-cached hot path
     w_back  = handler.to_dense(pt)           # exact dense reconstruction
 
 Schemes without a packed path (``irregular``, ``filter``) resolve to the
 ``dense`` fallback handler, whose "pack" is the identity — the registry
 always answers, so callers never special-case.
 
-All matmul wrappers accept activations of shape (M, I) for a dense leaf of
-shape (I, O) (the model's ``y = x @ w`` layout) and pad M up to the kernel's
-block size internally; ``interpret`` defaults to True off-TPU exactly like
-``kernels.ops``.
+Hot-path geometry contract (the pack-time dispatch refactor)
+------------------------------------------------------------
+
+All per-call decisions — block sizes, M padding, weight layout, handler
+lookup — are made exactly once:
+
+  * at PACK time the packer chooses the kernel geometry and records it in
+    ``PackedTensor.meta`` (``w_ndim``, ``block_p``, ``block_k``,
+    ``small_m``), and lays the buffers out the way the kernels want them
+    (tile_pattern stores the blocked (nb, Kp, bp) panel layout);
+  * at FIRST dispatch for a given (scheme, shapes, dtype, M, epilogue)
+    tuple, ``dispatch_matmul``/``dispatch_conv`` build one jitted closure
+    with that geometry baked in and memoize it in ``_PLAN_CACHE``; every
+    later call is a dict lookup;
+  * requests with M ≤ ``small_m`` (decode: M = batch) take a fast path
+    that skips the Pallas grid entirely — a fused XLA gather + batched
+    dot over the SAME compressed buffers, with no M padding.
+
+All matmul plans accept activations of shape (M, I) for a dense leaf of
+shape (I, O) (the model's ``y = x @ w`` layout); an optional fused
+epilogue (bias + relu/silu/gelu, see ``kernels.epilogue``) runs on the
+fp32 accumulator before the result is cast back. ``interpret`` defaults
+to True off-TPU exactly like ``kernels.ops``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,14 +54,22 @@ import numpy as np
 # submodule attribute of the same name on the package
 from repro.kernels.column_gemm import column_gemm as _column_gemm
 from repro.kernels.column_gemm import pack_columns as _pack_columns
+from repro.kernels.epilogue import apply_epilogue, check_activation
 from repro.kernels.ops import _default_interpret
 from repro.kernels.pattern_conv import pattern_conv as _pattern_conv_kernel
-from repro.kernels.pattern_gemm import pack_tile_pattern as _pack_tile_pattern
+from repro.kernels.pattern_gemm import (
+    pack_tile_pattern_blocked as _pack_tile_blocked,
+)
 from repro.kernels.pattern_gemm import pattern_gemm as _pattern_gemm
 from repro.sparse.packed import PackedTensor
 from repro.utils.registry import Registry
 
 SPARSE_SCHEMES = Registry("sparse scheme")
+
+# decode fast path: below this M the Pallas grid (and its M padding) costs
+# more than it saves — dispatch a fused XLA gather+dot over the same
+# compressed buffers instead. Decode has M = batch (1 token/slot).
+SMALL_M = 32
 
 
 def _block_of(n: int, cap: int = 128) -> int:
@@ -67,18 +94,26 @@ def _pad_rows(x: jnp.ndarray, block: int):
 
 @dataclasses.dataclass(frozen=True)
 class SchemeHandler:
-    """One scheme's deployment triple: pack, packed matmul, dense reference."""
+    """One scheme's deployment triple: pack, packed matmul, dense reference.
+
+    ``plan`` builds the jitted dispatch closure for one (pt, M, epilogue)
+    geometry — ``dispatch_matmul`` memoizes what it returns. ``matmul``
+    keeps the per-scheme call signature but delegates to the same
+    plan-cached dispatch (there is one hot path, not two).
+    """
 
     name: str
     # pack(w, spec) -> PackedTensor | None (None: leaf not packable, e.g.
     # shape not tiled by the scheme's blocks — caller keeps the dense leaf)
     pack: Callable[[jnp.ndarray, Any], Optional[PackedTensor]]
-    # matmul(x (M, I), pt) -> y (M, O) == x @ to_dense(pt)
+    # matmul(x (M, I), pt, bias=None, activation=None) -> (M, O)
     matmul: Callable[..., jnp.ndarray]
     # to_dense(pt) -> the exact dense (pruned) weight the buffers encode
     to_dense: Callable[[PackedTensor], jnp.ndarray]
-    # conv(x (B, H, W, C), pt) -> (B, H, W, A); conv-shaped schemes only
+    # conv(x (B, H, W, C), pt, bias=, activation=) -> (B, H, W, A)
     conv: Optional[Callable[..., jnp.ndarray]] = None
+    # plan(pt, M, has_bias, activation, interpret) -> fn(x, pt, bias)
+    plan: Optional[Callable[..., Callable]] = None
 
 
 def handler_for(scheme: str) -> SchemeHandler:
@@ -88,10 +123,55 @@ def handler_for(scheme: str) -> SchemeHandler:
     return SPARSE_SCHEMES.get("dense")
 
 
+# ---------------------------------------------------------------------------
+# plan cache: (scheme, geometry, M, dtype, epilogue) -> jitted closure
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _plan_key(pt: PackedTensor, M: int, dtype, has_bias: bool,
+              activation: Optional[str], interpret: bool, kind: str) -> Tuple:
+    bufs = tuple((n, tuple(b.shape), str(b.dtype))
+                 for n, b in zip(pt.names, pt.buffers))
+    return (kind, pt.scheme, pt.shape, pt.meta, bufs, M,
+            str(dtype), has_bias, activation, interpret)
+
+
 def dispatch_matmul(x: jnp.ndarray, pt: PackedTensor, *,
+                    bias: Optional[jnp.ndarray] = None,
+                    activation: Optional[str] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """y = x @ dense(pt) through the registered packed kernel."""
-    return SPARSE_SCHEMES.get(pt.scheme).matmul(x, pt, interpret=interpret)
+    """y = act(x @ dense(pt) + bias) through the plan-cached packed kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    check_activation(activation)
+    key = _plan_key(pt, x.shape[0], x.dtype, bias is not None, activation,
+                    interpret, "matmul")
+    fn = _PLAN_CACHE.get(key)
+    if fn is None:
+        handler = SPARSE_SCHEMES.get(pt.scheme)
+        if handler.plan is None:
+            raise TypeError(f"scheme {pt.scheme!r} has no matmul plan")
+        fn = jax.jit(handler.plan(pt, x.shape[0], bias is not None,
+                                  activation, interpret))
+        _PLAN_CACHE[key] = fn
+    return fn(x, pt, bias)
+
+
+def dispatch_conv(x: jnp.ndarray, pt: PackedTensor, *,
+                  bias: Optional[jnp.ndarray] = None,
+                  activation: Optional[str] = None,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Packed conv with fused epilogue (conv-shaped schemes only)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    check_activation(activation)
+    handler = SPARSE_SCHEMES.get(pt.scheme)
+    if handler.conv is None:
+        raise TypeError(f"scheme {pt.scheme!r} has no conv dispatch")
+    return handler.conv(x, pt, bias=bias, activation=activation,
+                        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -105,8 +185,18 @@ def _dense_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     return None
 
 
-def _dense_matmul(x, pt, *, interpret=None):
-    return jnp.dot(x, pt.buf("w_packed"))
+def _dense_plan(pt, M, has_bias, activation, interpret):
+    def fn(x, pt, bias):
+        y = jnp.dot(x, pt.buf("w_packed"),
+                    preferred_element_type=jnp.float32)
+        return apply_epilogue(y, bias, activation).astype(x.dtype)
+
+    return fn
+
+
+def _dense_matmul(x, pt, bias=None, *, activation=None, interpret=None):
+    return dispatch_matmul(x, pt, bias=bias, activation=activation,
+                           interpret=interpret)
 
 
 def _dense_to_dense(pt):
@@ -115,7 +205,8 @@ def _dense_to_dense(pt):
 
 SPARSE_SCHEMES.register(
     "dense",
-    SchemeHandler("dense", _dense_pack, _dense_matmul, _dense_to_dense),
+    SchemeHandler("dense", _dense_pack, _dense_matmul, _dense_to_dense,
+                  plan=_dense_plan),
 )
 
 
@@ -145,18 +236,24 @@ def _stack_packed(results, lead, names, scheme, shape, meta):
 
 
 def _tile_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
-    """Pack a tile-pattern-pruned leaf (I, O) (or stacked (L, I, O))."""
+    """Pack a tile-pattern-pruned leaf (I, O) (or stacked (L, I, O)).
+
+    Stores the BLOCKED (nb, Kp, block_p) weight layout and records the
+    dispatch geometry in meta — layout and block sizes are decided here,
+    once, not per matmul call.
+    """
     block_p = spec.tile_block_p
     group_q = spec.tile_group_q
     keep = spec.tile_keep
     I, O = w.shape[-2], w.shape[-1]
     if I % group_q or O % block_p or keep >= group_q:
         return None
-    meta = (("block_p", block_p), ("group_q", group_q), ("keep", keep))
+    meta = (("block_p", block_p), ("group_q", group_q), ("keep", keep),
+            ("w_ndim", 3), ("small_m", SMALL_M))
     names = ("w_packed", "lane_idx")
 
     def one(m):
-        return _pack_tile_pattern(
+        return _pack_tile_blocked(
             m, block_p=block_p, group_q=group_q, keep=keep
         )
 
@@ -169,27 +266,65 @@ def _tile_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
                          tuple(w.shape), meta)
 
 
-def _tile_matmul(x, pt, *, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
-    w_packed, lane_idx = pt.buf("w_packed"), pt.buf("lane_idx")
-    if w_packed.ndim != 2:
+def _tile_wpb(pt) -> jnp.ndarray:
+    """Blocked (nb, Kp, bp) view of the panel buffer (handles the legacy
+    flat (Kp, P) layout of artifacts packed before the geometry refactor)."""
+    wp = pt.buf("w_packed")
+    if pt.canonical_w_ndim == 3:
+        return wp
+    nb = pt.buf("lane_idx").shape[0]
+    Kp, P = wp.shape
+    return jnp.transpose(wp.reshape(Kp, nb, P // nb), (1, 0, 2))
+
+
+def _tile_plan(pt, M, has_bias, activation, interpret):
+    if pt.stacked:
         raise ValueError(
             "tile_pattern matmul wants per-layer buffers; scan over the "
-            f"stacked leaf first (got w_packed {w_packed.shape})"
+            f"stacked leaf first (got w_packed {pt.buf('w_packed').shape})"
         )
-    nb = lane_idx.shape[0]
-    block_p = w_packed.shape[-1] // nb
-    bm = _row_block(x.shape[0])
-    xp, pad = _pad_rows(x, bm)
-    y = _pattern_gemm(xp, w_packed, lane_idx, block_m=bm,
-                         block_p=block_p, interpret=interpret)
-    return y[: x.shape[0]] if pad else y
+    wpb = _tile_wpb(pt)
+    nb, Kp, bp = wpb.shape
+    P = nb * bp
+    small_m = int(pt.meta_dict.get("small_m", SMALL_M))
+
+    if M <= small_m:
+        # decode fast path: one fused gather + one batched dot over the
+        # blocked panels — no Pallas grid, no M padding, CWS preserved
+        # (only w_packed bytes are read)
+        def fn(x, pt, bias):
+            wpb = _tile_wpb(pt)
+            li = pt.buf("lane_idx")
+            xg = jnp.take(x, li.reshape(-1), axis=1).reshape(M, nb, Kp)
+            y = jax.lax.dot_general(
+                xg, wpb, (((2,), (1,)), ((1,), (0,))),
+                preferred_element_type=jnp.float32)       # (nb, M, bp)
+            y = jnp.transpose(y, (1, 0, 2)).reshape(M, P)
+            return apply_epilogue(y, bias, activation).astype(x.dtype)
+
+        return fn
+
+    bm = _row_block(M)
+    pad = (-M) % bm
+
+    def fn(x, pt, bias):
+        xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+        y = _pattern_gemm(xp, _tile_wpb(pt), pt.buf("lane_idx"), bias,
+                          block_m=bm, interpret=interpret,
+                          activation=activation)
+        return y[:M] if pad else y
+
+    return fn
 
 
-def _stacked_to_dense(one_fn, bufs):
+def _tile_matmul(x, pt, bias=None, *, activation=None, interpret=None):
+    return dispatch_matmul(x, pt, bias=bias, activation=activation,
+                           interpret=interpret)
+
+
+def _stacked_to_dense(one_fn, bufs, canonical_ndim: int = 2):
     """vmap a per-layer to_dense over any leading stack axes (jit-safe)."""
-    extra = bufs[0].ndim - 2
+    extra = bufs[0].ndim - canonical_ndim
     fn = one_fn
     for _ in range(extra):
         fn = jax.vmap(fn)
@@ -198,23 +333,31 @@ def _stacked_to_dense(one_fn, bufs):
 
 def _tile_to_dense(pt):
     """Exact dense reconstruction, pure jnp (usable inside jit)."""
-    w_packed, lane_idx = pt.buf("w_packed"), pt.buf("lane_idx")
+    Q = pt.shape[-2]
 
-    def one(wp, li):
+    def one(wpb, li):                       # (nb, Kp, bp), (nb, Kp)
+        nb, Kp, bp = wpb.shape
+        onehot = jax.nn.one_hot(li, Q, dtype=wpb.dtype)       # (nb, Kp, Q)
+        dense = jnp.einsum("jkq,jkb->qjb", onehot, wpb)
+        return dense.reshape(Q, nb * bp).astype(wpb.dtype)
+
+    if pt.canonical_w_ndim == 3:
+        return _stacked_to_dense(one, (pt.buf("w_packed"),
+                                       pt.buf("lane_idx")), 3)
+
+    def one_flat(wp, li):                   # legacy flat (Kp, P) layout
         Kp, P = wp.shape
         nb = li.shape[0]
-        Q = pt.shape[-2]
-        onehot = jax.nn.one_hot(li, Q, dtype=wp.dtype)        # (nb, Kp, Q)
-        wpb = wp.reshape(Kp, nb, P // nb)                     # (Kp, nb, bp)
-        dense = jnp.einsum("jkq,kjb->qjb", onehot, wpb)
-        return dense.reshape(Q, P).astype(wp.dtype)
+        return one(jnp.transpose(wp.reshape(Kp, nb, P // nb), (1, 0, 2)), li)
 
-    return _stacked_to_dense(one, (w_packed, lane_idx))
+    return _stacked_to_dense(one_flat, (pt.buf("w_packed"),
+                                        pt.buf("lane_idx")), 2)
 
 
 SPARSE_SCHEMES.register(
     "tile_pattern",
-    SchemeHandler("tile_pattern", _tile_pack, _tile_matmul, _tile_to_dense),
+    SchemeHandler("tile_pattern", _tile_pack, _tile_matmul, _tile_to_dense,
+                  plan=_tile_plan),
 )
 
 
@@ -228,9 +371,12 @@ def _column_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     Stacked leaves may keep different row COUNTS per layer (top-k ties);
     the pack pads every layer to the max count with index-0 rows of zero
     weight — zero rows contribute nothing, so the packed matmul is exact.
+    Kernel geometry (block_p over O, block_k over K) is chosen here.
     """
     group = spec.column_group
-    meta = (("group", group),)
+    O = w.shape[-1]
+    meta = (("group", group), ("block_p", _block_of(O)),
+            ("small_m", SMALL_M))
     names = ("w_packed", "kept_idx")
 
     def one(m):
@@ -255,22 +401,42 @@ def _column_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     return _stack_packed(padded, lead, names, "column", tuple(w.shape), meta)
 
 
-def _column_matmul(x, pt, *, interpret=None):
-    if interpret is None:
-        interpret = _default_interpret()
-    w_packed, kept = pt.buf("w_packed"), pt.buf("kept_idx")
-    if w_packed.ndim != 2:
+def _column_plan(pt, M, has_bias, activation, interpret):
+    wp = pt.buf("w_packed")
+    if wp.ndim != 2:
         raise ValueError(
             "column matmul wants per-layer buffers; scan over the "
-            f"stacked leaf first (got w_packed {w_packed.shape})"
+            f"stacked leaf first (got w_packed {wp.shape})"
         )
-    O = w_packed.shape[-1]
-    bm = _row_block(x.shape[0])
-    bp = _block_of(O)
-    xp, pad = _pad_rows(x, bm)
-    y = _column_gemm(xp, w_packed, kept, block_m=bm, block_p=bp,
-                        interpret=interpret)
-    return y[: x.shape[0]] if pad else y
+    small_m = int(pt.meta_dict.get("small_m", SMALL_M))
+
+    if M <= small_m:
+        # decode fast path: gather the surviving features, one dense dot
+        def fn(x, pt, bias):
+            xg = jnp.take(x, pt.buf("kept_idx"), axis=1)
+            y = jnp.dot(xg, pt.buf("w_packed"),
+                        preferred_element_type=jnp.float32)
+            return apply_epilogue(y, bias, activation).astype(x.dtype)
+
+        return fn
+
+    bp = int(pt.meta_dict.get("block_p", 0)) or _block_of(wp.shape[-1])
+    bm = _row_block(M)
+    pad = (-M) % bm
+
+    def fn(x, pt, bias):
+        xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+        y = _column_gemm(xp, pt.buf("w_packed"), pt.buf("kept_idx"), bias,
+                         block_m=bm, block_p=bp, interpret=interpret,
+                         activation=activation)
+        return y[:M] if pad else y
+
+    return fn
+
+
+def _column_matmul(x, pt, bias=None, *, activation=None, interpret=None):
+    return dispatch_matmul(x, pt, bias=bias, activation=activation,
+                           interpret=interpret)
 
 
 def _column_to_dense(pt):
@@ -289,7 +455,8 @@ def _column_to_dense(pt):
 
 SPARSE_SCHEMES.register(
     "column",
-    SchemeHandler("column", _column_pack, _column_matmul, _column_to_dense),
+    SchemeHandler("column", _column_pack, _column_matmul, _column_to_dense,
+                  plan=_column_plan),
 )
 
 
@@ -330,15 +497,15 @@ def _pattern_pack(w4: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     )
 
 
-def _pattern_conv(x, pt, *, interpret=None):
+def _pattern_conv(x, pt, bias=None, *, activation=None, interpret=None):
     """Stride-1 SAME 3x3 pattern conv: x (B, H, W, C) -> (B, H, W, A)."""
     if interpret is None:
         interpret = _default_interpret()
-    return _pattern_conv_kernel(x, pt.buf("w_packed"), pt.buf("taps"),
-                            interpret=interpret)
+    return _pattern_conv_kernel(x, pt.buf("w_packed"), pt.buf("taps"), bias,
+                                interpret=interpret, activation=activation)
 
 
-def _pattern_matmul(x, pt, *, interpret=None):
+def _pattern_matmul(x, pt, bias=None, *, activation=None, interpret=None):
     raise TypeError(
         "scheme 'pattern' packs a conv tensor; use conv dispatch "
         "(models.cnn.conv_apply), not a GEMM matmul"

@@ -1,0 +1,109 @@
+"""Fused (bias + activation) epilogues: packed kernels vs dense reference.
+
+Every scheme's packed execution path — Pallas kernel AND the small-M XLA
+fast path — must compute act(x @ W + b) identically (within fp tolerance)
+to the dense reference, for every supported activation, including bf16.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.schemes import LayerSpec
+from repro.kernels import ref
+from repro.kernels.epilogue import ACTIVATIONS
+from repro.sparse import dispatch_matmul, dispatch_conv, handler_for
+
+ACTS = [None, "relu", "silu", "gelu"]
+
+
+def _rand(seed, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32).astype(dtype)
+
+
+def _dense_ref(x, w, bias, activation):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    return np.asarray(y)
+
+
+class TestGemmEpilogues:
+    @pytest.mark.parametrize("activation", ACTS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("M", [2, 33])   # small-M fast path + Pallas
+    def test_tile_pattern(self, activation, dtype, M):
+        spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                         tile_group_q=8, tile_keep=4)
+        w = spec.project(_rand(0, (128, 128))).astype(dtype)
+        pt = handler_for("tile_pattern").pack(w, spec)
+        x = _rand(1, (M, 128), dtype)
+        bias = _rand(2, (128,), dtype)
+        y = dispatch_matmul(x, pt, bias=bias, activation=activation,
+                            interpret=True)
+        assert y.dtype == dtype
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), _dense_ref(x, w, bias, activation),
+            rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("activation", ACTS)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("M", [2, 20])
+    def test_column(self, activation, dtype, M):
+        spec = LayerSpec(scheme="column", alpha=0.25)
+        w = spec.project(_rand(3, (128, 96))).astype(dtype)
+        pt = handler_for("column").pack(w, spec)
+        x = _rand(4, (M, 128), dtype)
+        bias = _rand(5, (96,), dtype)
+        y = dispatch_matmul(x, pt, bias=bias, activation=activation,
+                            interpret=True)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), _dense_ref(x, w, bias, activation),
+            rtol=tol, atol=tol)
+
+    def test_no_bias_no_activation_unchanged(self):
+        """The epilogue-free path is still exactly the packed matmul."""
+        spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                         tile_group_q=8, tile_keep=4)
+        w = spec.project(_rand(6, (128, 128)))
+        pt = handler_for("tile_pattern").pack(w, spec)
+        x = _rand(7, (8, 128))
+        np.testing.assert_allclose(
+            np.asarray(dispatch_matmul(x, pt, interpret=True)),
+            _dense_ref(x, w, None, None), rtol=2e-5, atol=2e-5)
+
+    def test_unknown_activation_rejected(self):
+        spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                         tile_group_q=8, tile_keep=4)
+        w = spec.project(_rand(8, (128, 128)))
+        pt = handler_for("tile_pattern").pack(w, spec)
+        with pytest.raises(ValueError, match="activation"):
+            dispatch_matmul(_rand(9, (8, 128)), pt, activation="tanh")
+
+
+class TestConvEpilogues:
+    @pytest.mark.parametrize("activation", [None, "relu"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_pattern_conv(self, activation, dtype):
+        spec = LayerSpec(scheme="pattern_shared", alpha=0.4,
+                         conv_shape=(16, 8, 3, 3))
+        w4 = spec.project(_rand(10, (16, 8, 3, 3))).astype(dtype)
+        pt = handler_for("pattern_shared").pack(w4, spec)
+        x = _rand(11, (2, 6, 6, 8), dtype)
+        bias = _rand(12, (16,), dtype)
+        y = dispatch_conv(x, pt, bias=bias, activation=activation,
+                          interpret=True)
+        refy = ref.ref_conv3x3(x.astype(jnp.float32),
+                               w4.astype(jnp.float32))
+        refy = refy + bias.astype(jnp.float32)
+        if activation == "relu":
+            refy = jnp.maximum(refy, 0)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(refy), rtol=tol, atol=tol)
