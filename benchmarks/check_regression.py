@@ -10,7 +10,12 @@ paper's claims rest on:
     must not decode slower than dense (default 1.0; override with
     ``--min-ratio`` / REPRO_MIN_DECODE_RATIO, e.g. 0.95 to tolerate
     measurement noise on shared CI boxes);
-  * weight_bytes_ratio — packed weights must actually be smaller (> 1.0).
+  * cpu_ms_prefill(packed) <= cpu_ms_prefill(dense) × factor — the
+    large-M half of the hot path must not regress either (default factor
+    1.05; ``--max-prefill-factor`` / REPRO_MAX_PREFILL_FACTOR);
+  * weight_bytes_ratio >= threshold — packed weights must be smaller by
+    at least the scheme's structural rate minus overhead (default 1.6 at
+    4-of-8 lanes; ``--min-bytes-ratio`` / REPRO_MIN_BYTES_RATIO).
 
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
@@ -32,7 +37,8 @@ DEFAULT_PATH = os.path.join(
 )
 
 
-def check(path: str, min_ratio: float) -> int:
+def check(path: str, min_ratio: float, max_prefill_factor: float = 1.05,
+          min_bytes_ratio: float = 1.6) -> int:
     if not os.path.isfile(path):
         print(f"check_regression: missing benchmark file {path} "
               "(run benchmarks/packed_serve.py first)")
@@ -58,9 +64,21 @@ def check(path: str, min_ratio: float) -> int:
             f"{pk['cpu_ms_decode_step']}ms/step vs "
             f"{by_mode['dense']['cpu_ms_decode_step']}ms/step"
         )
+    pf_packed = pk.get("cpu_ms_prefill")
+    pf_dense = by_mode["dense"].get("cpu_ms_prefill")
+    if pf_packed is None or pf_dense is None:
+        failures.append("rows lack cpu_ms_prefill")
+    elif pf_packed > pf_dense * max_prefill_factor:
+        failures.append(
+            f"packed prefill is {pf_packed}ms vs dense {pf_dense}ms "
+            f"(gate: <= {max_prefill_factor}x dense)"
+        )
     wr = pk.get("weight_bytes_ratio", 0)
-    if wr <= 1.0:
-        failures.append(f"packed weights not smaller than dense ({wr}x)")
+    if wr < min_bytes_ratio:
+        failures.append(
+            f"packed weights only {wr}x smaller than dense "
+            f"(gate: >= {min_bytes_ratio}x)"
+        )
 
     if failures:
         print("check_regression: FAIL")
@@ -68,6 +86,7 @@ def check(path: str, min_ratio: float) -> int:
             print(f"  - {f_}")
         return 1
     print(f"check_regression: OK — packed decode {ratio:.3f}x dense, "
+          f"prefill {pk.get('prefill_ratio_vs_dense', '?')}x dense, "
           f"weights {wr}x smaller, "
           f"scan {pk.get('scan_speedup', '?')}x over per-token loop, "
           f"tokens identical")
@@ -80,8 +99,15 @@ def main() -> int:
     ap.add_argument("--min-ratio", type=float,
                     default=float(os.environ.get("REPRO_MIN_DECODE_RATIO",
                                                  "1.0")))
+    ap.add_argument("--max-prefill-factor", type=float,
+                    default=float(os.environ.get("REPRO_MAX_PREFILL_FACTOR",
+                                                 "1.05")))
+    ap.add_argument("--min-bytes-ratio", type=float,
+                    default=float(os.environ.get("REPRO_MIN_BYTES_RATIO",
+                                                 "1.6")))
     args = ap.parse_args()
-    return check(args.path, args.min_ratio)
+    return check(args.path, args.min_ratio, args.max_prefill_factor,
+                 args.min_bytes_ratio)
 
 
 if __name__ == "__main__":

@@ -3,9 +3,15 @@
 The serving-side perf trajectory of the PrunedArtifact API: a reduced LM is
 tile-pattern pruned (4-of-8 lanes → 2x weight compression on every packed
 GEMM; block_p=128 MXU-width tiles, kv projections at 64), packed through
-the scheme→kernel registry's pack-time dispatch plans, and the engine's
-decode hot path is timed dense vs packed, two ways:
+the scheme→kernel registry's pack-time dispatch plans, AUTOTUNED for the
+engine's decode and prefill M-buckets (``PrunedArtifact.pack(tune_for=…)``
+— the winning plans ship in the PackedTensor meta like the paper's
+compile-time deployment), and the engine's hot path is timed dense vs
+packed:
 
+  * prefill (``cpu_ms_prefill``) — the large-M half: one jitted
+    ``LM.prefill`` over the whole prompt batch (flash-attention on real
+    TPU backends, XLA blockwise otherwise);
   * scan decode (``cpu_ms_decode_step``) — the production path: one jitted
     ``LM.decode_many`` lax.scan producing the whole token block with one
     dispatch and one host transfer;
@@ -17,18 +23,27 @@ decode hot path is timed dense vs packed, two ways:
 Dense and packed are timed INTERLEAVED (alternating calls within each
 iteration) so box noise hits both equally; medians are reported. Token
 identity dense vs packed is asserted so every timed configuration is a
-correct one. ``decode_ratio_vs_dense`` (dense ms / this-mode ms, >= 1.0
-means at-least-dense-speed) is the number the paper's deployment claim
-rides on; ``benchmarks/check_regression.py`` gates on it.
+correct one. ``decode_ratio_vs_dense`` and ``prefill_ratio_vs_dense``
+(dense ms / this-mode ms, >= 1.0 means at-least-dense-speed) are the
+numbers the paper's deployment claim rides on;
+``benchmarks/check_regression.py`` gates on both plus the weight-bytes
+ratio.
 
-    PYTHONPATH=src python benchmarks/packed_serve.py
+    PYTHONPATH=src:. python benchmarks/packed_serve.py
+    PYTHONPATH=src:. python benchmarks/packed_serve.py --profile
     (REPRO_BENCH_FAST=1 for the CI smoke variant)
+
+``--profile`` prints a per-stage breakdown (prefill vs decode-device vs
+host-conversion medians per mode), the registry's per-scheme dispatch
+counts, and the tuned plan table — so a ratio regression is attributable
+to a stage and a scheme without rerunning under a profiler.
 
 Writes experiments/bench/BENCH_packed_serve.json via benchmarks/common.emit.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, List
 
@@ -43,6 +58,8 @@ from repro.roofline.hw import HBM_BW
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.sampler import greedy_sample
 from repro.sparse import tree_packed_bytes
+from repro.sparse import tune as tune_mod
+from repro.sparse.registry import dispatch_stats, reset_dispatch_stats
 
 from benchmarks import common
 
@@ -51,8 +68,8 @@ def _median_ms(samples) -> float:
     return float(np.median(samples) * 1e3)
 
 
-def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
-                 ) -> List[Dict]:
+def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32,
+                 profile: bool = False) -> List[Dict]:
     cfg = ModelConfig(name="bench", family="dense", num_layers=2,
                       d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
                       d_ff=256, vocab_size=512, param_dtype="float32")
@@ -66,7 +83,11 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
                           "tile_keep": 4},
                    r".*/(wk|wv)": {"tile_block_p": 64}},
     )
-    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack()
+    # tune for the two M-buckets the engine serves: decode (M = batch)
+    # and prefill (M = batch · prompt_len) — plans persist in the meta
+    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack(
+        tune_for=(batch, batch * seq),
+        tune_iters=2 if common.fast_mode() else 5)
 
     prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
                                  0, cfg.vocab_size)
@@ -80,6 +101,7 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
     def fresh(cache):
         return jax.tree.map(jnp.copy, cache) if donating else cache
 
+    reset_dispatch_stats()
     state = {}
     token_runs = {}
     for mode, packed in (("dense", False), ("packed", True)):
@@ -103,7 +125,9 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
     # interleaved timing: alternate modes within each iteration so load
     # spikes on the box bias neither side
     t_prefill = {m: [] for m in state}
-    t_scan = {m: [] for m in state}
+    t_scan = {m: [] for m in state}      # device + host (the served path)
+    t_dev = {m: [] for m in state}       # device-only (profile split)
+    t_host = {m: [] for m in state}      # host token conversion (profile)
     t_loop = {m: [] for m in state}
     for _ in range(iters):
         for mode, (engine, cache, tok) in state.items():
@@ -112,12 +136,23 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
             jax.block_until_ready(engine._prefill(p, prompts)[1])
             t_prefill[mode].append(time.perf_counter() - t0)
 
-            # scan decode: whole block, one dispatch, one host transfer
+            # scan decode: whole block, one dispatch, one host transfer.
+            # The REPORTED time covers device + host conversion (what a
+            # caller of generate() experiences, and symmetric with the
+            # legacy loop's timing); the device/host split is recorded
+            # separately for --profile attribution.
             cache_i = fresh(cache)
             t0 = time.perf_counter()
             _, rest = engine._decode_many(p, cache_i, tok, mask, steps - 1)
-            np.asarray(jax.device_get(jnp.concatenate([tok, rest], axis=1)))
-            t_scan[mode].append(time.perf_counter() - t0)
+            jax.block_until_ready(rest)
+            t1 = time.perf_counter()
+            toks_np = np.asarray(jax.device_get(
+                jnp.concatenate([tok, rest], axis=1)))
+            _ = [[int(v) for v in toks_np[j]] for j in range(batch)]
+            t2 = time.perf_counter()
+            t_scan[mode].append(t2 - t0)
+            t_dev[mode].append(t1 - t0)
+            t_host[mode].append(t2 - t1)
 
             # legacy loop: per-token dispatch + eager sample, then the
             # B·T-sync int() conversion the seed engine did
@@ -152,18 +187,39 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32
         })
     dense_b = rows[0]["weight_bytes"]
     dense_ms = rows[0]["cpu_ms_decode_step"]
+    dense_pf = rows[0]["cpu_ms_prefill"]
     for r in rows:
         r["weight_bytes_ratio"] = round(dense_b / r["weight_bytes"], 3)
         r["decode_ratio_vs_dense"] = round(
             dense_ms / r["cpu_ms_decode_step"], 3)
+        r["prefill_ratio_vs_dense"] = round(dense_pf / r["cpu_ms_prefill"], 3)
         r["tokens_identical"] = True
+
+    if profile:
+        print("--- profile: per-stage medians (ms) ---")
+        for mode in state:
+            print(f"  {mode:>6s}: prefill {_median_ms(t_prefill[mode]):7.3f}"
+                  f" | decode(device) {_median_ms(t_dev[mode]):7.3f}"
+                  f" | host-convert {_median_ms(t_host[mode]):7.3f}"
+                  f" | legacy-loop {_median_ms(t_loop[mode]):7.3f}")
+        print("--- profile: traced dispatch counts (kind:scheme:M-bucket,"
+              " plan builds by resolved impl) ---")
+        for key, n in sorted(dispatch_stats().items()):
+            print(f"  {key:60s} x{n}")
+        print("--- profile: tuned plans shipped in the artifact ---")
+        for path, plans in sorted(
+                tune_mod.describe_plans(artifact.packed).items()):
+            for key, plan in sorted(plans.items()):
+                print(f"  {path:40s} {key:20s} -> {plan}")
     return rows
 
 
-def run() -> List[Dict]:
-    rows = bench_decode()
+def run(profile: bool = False) -> List[Dict]:
+    rows = bench_decode(profile=profile)
     for r in rows:
-        print(f"  packed_serve {r['mode']:>6s}: decode "
+        print(f"  packed_serve {r['mode']:>6s}: "
+              f"prefill {r['cpu_ms_prefill']:.3f}ms "
+              f"({r['prefill_ratio_vs_dense']}x vs dense), decode "
               f"{r['cpu_ms_decode_step']:.3f}ms/step scan "
               f"({r['cpu_ms_decode_loop']:.3f} loop, "
               f"{r['scan_speedup']:.1f}x), "
@@ -176,4 +232,9 @@ def run() -> List[Dict]:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-stage breakdown, dispatch counts, and "
+                         "the tuned plan table")
+    args = ap.parse_args()
+    run(profile=args.profile)

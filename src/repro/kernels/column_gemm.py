@@ -28,6 +28,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels.epilogue import apply_epilogue, check_activation
+from repro.kernels.grids import accum_gemm_grid
 
 
 def pack_columns(w: jnp.ndarray, *, group: int = 1
@@ -83,7 +84,7 @@ def _kernel(*refs, n_k: int, f32_dot: bool = False, has_bias: bool = False,
 @functools.partial(
     jax.jit,
     static_argnames=("block_m", "block_p", "block_k", "interpret",
-                     "activation"),
+                     "activation", "grid_order"),
 )
 def column_gemm(
     x: jnp.ndarray,              # (M, Q)
@@ -96,8 +97,18 @@ def column_gemm(
     block_k: int = 512,
     interpret: bool = True,
     activation: Optional[str] = None,        # relu | silu | gelu | None
+    grid_order: str = "mp",                  # outer-loop order; k innermost
 ) -> jnp.ndarray:
-    """y = act(x @ W + bias) for column-pruned W: gather kept cols, dense dot."""
+    """y = act(x @ W + bias) for column-pruned W: gather kept cols, dense dot.
+
+    Large-M regime knobs (autotuned per M-bucket by ``sparse/tune.py``):
+    ``block_m`` > 128 emits multi-row output panels; ``block_k`` sets the
+    k-panel prefetch granularity (smaller panels start the MXU sooner,
+    larger panels amortize more grid steps); ``grid_order`` picks which of
+    the (row-tile, col-tile) loops runs outermost — k always iterates
+    fastest so the fp32 output tile is revisited on consecutive grid steps
+    (the accumulate-in-place contract of the kernel).
+    """
     check_activation(activation)
     M, Q = x.shape
     K, P = w_packed.shape
@@ -113,21 +124,23 @@ def column_gemm(
         raise ValueError(f"(M={M}, P={P}) not tiled by ({block_m}, {block_p})")
 
     needs_f32 = interpret and xg.dtype == jnp.bfloat16
+    grid, im_x, im_w, im_b, im_o = accum_gemm_grid(
+        grid_order, M // block_m, P // block_p, n_k)
     in_specs = [
-        pl.BlockSpec((block_m, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, block_p), lambda i, j, k: (k, j)),
+        pl.BlockSpec((block_m, bk), im_x),
+        pl.BlockSpec((bk, block_p), im_w),
     ]
     operands = [xg, w_packed]
     if bias is not None:
-        in_specs.append(pl.BlockSpec((1, block_p), lambda i, j, k: (0, j)))
+        in_specs.append(pl.BlockSpec((1, block_p), im_b))
         operands.append(bias.reshape(1, P))
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32,
                           has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((M, P), jnp.float32),
-        grid=(M // block_m, P // block_p, n_k),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m, block_p), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((block_m, block_p), im_o),
         interpret=interpret,
     )(*operands)
     return out.astype(x.dtype)

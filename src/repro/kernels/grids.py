@@ -1,0 +1,41 @@
+"""Shared grid-order plumbing for the tiled accumulate GEMM kernels.
+
+``column_gemm`` and ``pattern_conv_gemm`` share one grid shape: an
+(M-tiles × P-tiles × K-panels) iteration where k runs FASTEST (the fp32
+output tile is revisited on consecutive steps — the accumulate-in-place
+contract) and ``grid_order`` picks which of the two outer loops runs
+outermost. This helper keeps the grid tuple and BlockSpec index maps in
+one place so the two kernels cannot drift.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+GridMaps = Tuple[Tuple[int, int, int], Callable, Callable, Callable,
+                 Callable]
+
+
+def accum_gemm_grid(grid_order: str, n_m: int, n_p: int, n_k: int
+                    ) -> GridMaps:
+    """(grid, im_x, im_w, im_b, im_o) for one grid order.
+
+    ``mp``: row tiles outermost (output streams row-major); ``pm``:
+    column tiles outermost (one weight panel column stays resident while
+    row tiles stream past). k is innermost in both.
+    """
+    if grid_order not in ("mp", "pm"):
+        raise ValueError(f"grid_order {grid_order!r} not in ('mp', 'pm')")
+    if grid_order == "mp":
+        grid = (n_m, n_p, n_k)
+        im_x = lambda i, j, k: (i, k)
+        im_w = lambda i, j, k: (k, j)
+        im_b = lambda i, j, k: (0, j)
+        im_o = lambda i, j, k: (i, j)
+    else:
+        grid = (n_p, n_m, n_k)
+        im_x = lambda j, i, k: (i, k)
+        im_w = lambda j, i, k: (k, j)
+        im_b = lambda j, i, k: (0, j)
+        im_o = lambda j, i, k: (i, j)
+    return grid, im_x, im_w, im_b, im_o

@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.projections import canonical_patterns_3x3
 from repro.kernels.epilogue import apply_epilogue, check_activation
+from repro.kernels.grids import accum_gemm_grid
 
 
 def assign_channel_patterns(w4: jnp.ndarray, patterns: np.ndarray = None
@@ -122,7 +123,7 @@ def _kernel(*refs, n_k: int, f32_dot: bool = False, has_bias: bool = False,
 
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_a", "block_k", "interpret",
-                              "activation")
+                              "activation", "grid_order")
 )
 def pattern_conv_gemm(
     xg: jnp.ndarray,             # (M, keep·C) gathered taps
@@ -134,8 +135,16 @@ def pattern_conv_gemm(
     block_k: int = 512,
     interpret: bool = True,
     activation: Optional[str] = None,       # relu | silu | gelu | None
+    grid_order: str = "mp",                 # outer-loop order; k innermost
 ) -> jnp.ndarray:
-    """The packed-GEMM hot loop of the pattern conv (+ fused epilogue)."""
+    """The packed-GEMM hot loop of the pattern conv (+ fused epilogue).
+
+    Large-M regime knobs mirror ``column_gemm``: ``block_m`` sizes the
+    multi-row output panel (conv M = B·H·W is prefill-sized by nature),
+    ``block_k`` the k-panel prefetch granularity, and ``grid_order``
+    whether row tiles (``mp``) or filter tiles (``pm``) run outermost —
+    k always iterates fastest for the accumulate-in-place output tile.
+    """
     check_activation(activation)
     M, K = xg.shape
     K2, A = w_packed.shape
@@ -151,23 +160,25 @@ def pattern_conv_gemm(
     n_k = Kp // bk
 
     needs_f32 = interpret and xg.dtype == jnp.bfloat16
+    grid, im_x, im_w, im_b, im_o = accum_gemm_grid(
+        grid_order, Mp // bm, Ap // ba, n_k)
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, ba), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, bk), im_x),
+        pl.BlockSpec((bk, ba), im_w),
     ]
     operands = [xg, w_packed]
     if bias is not None:
         if pad_a:
             bias = jnp.pad(bias, (0, pad_a))
-        in_specs.append(pl.BlockSpec((1, ba), lambda i, j, k: (0, j)))
+        in_specs.append(pl.BlockSpec((1, ba), im_b))
         operands.append(bias.reshape(1, Ap))
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, f32_dot=needs_f32,
                           has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((Mp, Ap), jnp.float32),
-        grid=(Mp // bm, Ap // ba, n_k),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, ba), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((bm, ba), im_o),
         interpret=interpret,
     )(*operands)
     return out[:M, :A].astype(xg.dtype)

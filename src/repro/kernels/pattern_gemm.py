@@ -118,7 +118,8 @@ def _kernel(*refs, f32_dot: bool = False, blocked: bool = False,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_p", "interpret", "activation")
+    jax.jit, static_argnames=("block_m", "block_p", "interpret", "activation",
+                              "grid_order")
 )
 def pattern_gemm(
     x: jnp.ndarray,               # (M, Q)
@@ -130,12 +131,28 @@ def pattern_gemm(
     block_p: int = 128,
     interpret: bool = True,
     activation: Optional[str] = None,         # relu | silu | gelu | None
+    grid_order: str = "mp",                   # see below
 ) -> jnp.ndarray:
     """y = act(x @ W + bias) for tile-pattern sparse W, packed representation.
 
     Accepts either weight layout: the legacy flat (Kp, P) or the blocked
     (nb, Kp, block_p) dispatch layout (``pack_tile_pattern_blocked``) —
     blocked infers ``block_p`` from the panel shape.
+
+    Large-M (prefill) regime: ``block_m`` > 128 emits multi-row output
+    panels per grid cell (fewer grid steps, longer MXU runs), and
+    ``grid_order`` picks which operand stays VMEM-resident across the
+    inner loop:
+
+      mp — output-panel index fastest: the x row-tile is loaded once and
+           all nb weight panels stream past it (LRE over panels; the
+           decode-shaped default);
+      pm — row-tile index fastest: one weight panel is loaded once and
+           all M/block_m row tiles stream past it (weight-resident — wins
+           when M ≫ P and re-fetching panels per row tile dominates).
+
+    The autotuner (``sparse/tune.py``) picks (block_m, grid_order) per
+    M-bucket; the winner ships in the PackedTensor's meta.
     """
     check_activation(activation)
     M, Q = x.shape
@@ -150,24 +167,42 @@ def pattern_gemm(
         raise ValueError(f"lane_idx {lane_idx.shape} != {(nb, Kp)}")
     if M % block_m:
         raise ValueError(f"M={M} % block_m={block_m}")
+    if grid_order not in ("mp", "pm"):
+        raise ValueError(f"grid_order {grid_order!r} not in ('mp', 'pm')")
 
     needs_f32 = interpret and x.dtype == jnp.bfloat16
+    if grid_order == "mp":                       # panel index j fastest
+        grid = (M // block_m, nb)
+        im_lane = lambda i, j: (j, 0)
+        im_x = lambda i, j: (i, 0)
+        im_w3 = lambda i, j: (j, 0, 0)
+        im_w2 = lambda i, j: (0, j)
+        im_b = lambda i, j: (0, j)
+        im_o = lambda i, j: (i, j)
+    else:                                        # row-tile index i fastest
+        grid = (nb, M // block_m)
+        im_lane = lambda j, i: (j, 0)
+        im_x = lambda j, i: (i, 0)
+        im_w3 = lambda j, i: (j, 0, 0)
+        im_w2 = lambda j, i: (0, j)
+        im_b = lambda j, i: (0, j)
+        im_o = lambda j, i: (i, j)
     in_specs = [
-        pl.BlockSpec((1, Kp), lambda i, j: (j, 0)),           # lane table
-        pl.BlockSpec((block_m, Q), lambda i, j: (i, 0)),      # x row-tile
-        (pl.BlockSpec((1, Kp, block_p), lambda i, j: (j, 0, 0)) if blocked
-         else pl.BlockSpec((Kp, block_p), lambda i, j: (0, j))),
+        pl.BlockSpec((1, Kp), im_lane),                       # lane table
+        pl.BlockSpec((block_m, Q), im_x),                     # x row-tile
+        (pl.BlockSpec((1, Kp, block_p), im_w3) if blocked
+         else pl.BlockSpec((Kp, block_p), im_w2)),
     ]
     operands = [lane_idx, x, w_packed]
     if bias is not None:
-        in_specs.append(pl.BlockSpec((1, block_p), lambda i, j: (0, j)))
+        in_specs.append(pl.BlockSpec((1, block_p), im_b))
         operands.append(bias.reshape(1, P))
     return pl.pallas_call(
         functools.partial(_kernel, f32_dot=needs_f32, blocked=blocked,
                           has_bias=bias is not None, activation=activation),
         out_shape=jax.ShapeDtypeStruct((M, P), x.dtype),
-        grid=(M // block_m, nb),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m, block_p), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((block_m, block_p), im_o),
         interpret=interpret,
     )(*operands)

@@ -37,6 +37,23 @@ import numpy as np
 NEG_INF = -1e30
 
 
+def flash_prefill_supported(seq_len: int, num_heads: int, num_kv_heads: int,
+                            *, block_q: int = 512, block_k: int = 512) -> bool:
+    """Can ``kernels.flash_attention`` serve this prefill shape?
+
+    The Pallas kernel tiles S by min(block, S) and groups q heads onto kv
+    heads, so it needs S divisible by both (auto-true for S ≤ block) and an
+    exact GQA ratio. Callers that get ``False`` keep the XLA blockwise
+    path — the serve-path fallback contract (``LM.prefill``).
+    """
+    if seq_len <= 0 or num_kv_heads <= 0:
+        return False
+    bq = min(block_q, seq_len)
+    bk = min(block_k, seq_len)
+    return (seq_len % bq == 0 and seq_len % bk == 0
+            and num_heads % num_kv_heads == 0)
+
+
 def _chunk_pairs(
     num_q: int, num_kv: int, chunk: int, causal: bool, window: Optional[int]
 ) -> List[Tuple[int, int]]:

@@ -36,6 +36,7 @@ from repro.models.attention import (
     cache_capacity,
     cache_insert,
     decode_attention,
+    flash_prefill_supported,
 )
 from repro.models.layers import (
     dense_apply,
@@ -315,9 +316,13 @@ class LM:
         qe = constrain(qe, qa)
         ke = constrain(ke, qa)                 # expanded k/v shard like q
         ve = constrain(ve, qa)
-        if use_flash:
-            # §Perf iteration 4: Pallas flash kernel on the serving path
-            # (forward-only — training keeps the custom-VJP XLA path)
+        # §Perf iteration 4 + prefill rebuild: the Pallas flash kernel on
+        # the serving path (forward-only — training keeps the custom-VJP
+        # XLA path). use_flash is the REQUEST; shapes the kernel cannot
+        # tile (ragged S, inexact GQA ratio after TP head expansion) fall
+        # back to XLA blockwise per call, so serving never crashes on an
+        # unsupported prompt length.
+        if use_flash and flash_prefill_supported(S, qe.shape[2], ke.shape[2]):
             from repro.kernels import ops as kops
 
             out = kops.flash_attention(
@@ -412,8 +417,14 @@ class LM:
                 x, aux_i, kv = block_fn(x, bp)
                 return (x, aux + aux_i), kv
 
+            # serving path (collect_kv): unroll shallow stacks like decode
+            # does — per-layer weight slices become static, so baked lane
+            # tables (ServeEngine bake_weights) lower to constant-index
+            # gathers. Training keeps the O(1)-HLO scan.
+            unroll = min(cfg.num_layers, 4) if collect_kv else 1
             (x, aux), kv = jax.lax.scan(
-                scan_body, (x, jnp.float32(0)), params["blocks"]
+                scan_body, (x, jnp.float32(0)), params["blocks"],
+                unroll=unroll,
             )
 
         h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
@@ -554,8 +565,16 @@ class LM:
 
         return tree_map_with_path_str(axes, cache)
 
-    def prefill(self, params, inputs: jnp.ndarray, seq_len: int):
-        """Run the prompt, build the cache, return (cache, last-token logits)."""
+    def prefill(self, params, inputs: jnp.ndarray, seq_len: int,
+                *, flash: Optional[bool] = None):
+        """Run the prompt, build the cache, return (cache, last-token logits).
+
+        ``flash`` routes prefill attention through the Pallas flash kernel
+        (``kernels/flash_attention.py``): None = auto (on for real TPU
+        backends, off in interpret mode), True/False = force. Shapes the
+        kernel cannot tile fall back to XLA blockwise attention per block
+        — the request is an upper bound, never a crash.
+        """
         cfg = self.config
         B = inputs.shape[0]
         S = inputs.shape[1]
@@ -567,8 +586,11 @@ class LM:
             logits = self.lm_logits(params, h)
             return cache, logits
 
-        # serving path: the Pallas flash kernel engages on real TPU backends
-        use_flash = jax.default_backend() == "tpu"
+        # serving path: the Pallas flash kernel engages on real TPU
+        # backends by default (interpret-mode flash is a correctness tool,
+        # not a fast path)
+        use_flash = (jax.default_backend() == "tpu") if flash is None \
+            else bool(flash)
         h, _, kv = self.hidden_states(params, inputs, collect_kv=True,
                                       use_flash=use_flash)
         cache = self.init_cache(B, seq_len)

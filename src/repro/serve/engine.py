@@ -63,13 +63,33 @@ class ServeEngine:
         max_seq_len: int,
         sampler: Callable = greedy_sample,
         packed: bool = False,
+        flash: Optional[bool] = None,
+        bake_weights: Optional[bool] = None,
     ):
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
         only) the engine serves the compressed representation through the
         scheme→kernel registry. ``sampler`` must be jit-compatible
         (``logits (B, 1, V) -> (B, 1) int32``) — it runs on device inside
-        the decode scan."""
+        the decode scan. ``flash`` forwards to ``LM.prefill``: None = auto
+        (Pallas flash attention on real TPU backends, XLA blockwise
+        otherwise/for unsupported shapes), True/False = force.
+
+        ``bake_weights`` — close the bound params over the jitted PREFILL
+        closure as COMPILE-TIME constants instead of per-call arguments:
+        the weights of a serving engine never change, and specializing the
+        program for them is the paper's compiler-level deployment (static
+        lane/index tables lower to far better gather code than dynamic
+        ones; constants fold). Costs one baked copy of the weights PER
+        COMPILED PROMPT LENGTH — each distinct padded chunk length S
+        compiles its own prefill executable, so serving highly diverse
+        prompt lengths with a large model grows memory with the number of
+        distinct lengths (pass bake_weights=False there). Decode keeps
+        argument-passed params — its gathers are batch-sized and the
+        scan's in-place cache update matters more than constant folding.
+        None = auto: on for CPU backends (where the XLA gather lowering
+        gains the most and weights are host-resident anyway), off on
+        TPU."""
         from repro.core.pruner import PruneResult
         from repro.sparse import PrunedArtifact
 
@@ -87,31 +107,72 @@ class ServeEngine:
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.sampler = sampler
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, x: model.prefill(p, x, max_seq_len)
-        )
+        backend = jax.default_backend()
+        bake = (backend == "cpu") if bake_weights is None else bool(
+            bake_weights)
 
         def scan_decode(p, cache, tok, mask, num_steps):
             # empty pad slots decode deterministic zeros (mask is (B,))
             samp = lambda logits: sampler(logits) * mask[:, None]
             return model.decode_many(p, cache, tok, num_steps, sampler=samp)
 
+        if bake:
+            # weight-specialized prefill: keeps the (p, x) call signature
+            # but the bound tree is a compile-time constant inside the
+            # jitted program — guard against serving rebound params from
+            # the stale baked copy
+            bp = self.params
+            _jprefill = jax.jit(
+                lambda x: model.prefill(bp, x, max_seq_len, flash=flash))
+
+            def _prefill(p, x):
+                if p is not bp:
+                    raise ValueError(
+                        "this engine was built with bake_weights: the "
+                        "params are compiled into the prefill executable "
+                        "and cannot be swapped — construct a new "
+                        "ServeEngine to serve different weights"
+                    )
+                return _jprefill(x)
+
+            self._prefill = _prefill
+        else:
+            self._prefill = jax.jit(
+                lambda p, x: model.prefill(p, x, max_seq_len, flash=flash)
+            )
+        self._decode = jax.jit(model.decode_step)
         # donate the prefill cache into the scan: on TPU the decode loop
         # mutates the KV buffers in place (CPU has no donation — skip the
         # warning noise)
-        donate = (1,) if jax.default_backend() == "tpu" else ()
+        donate = (1,) if backend == "tpu" else ()
         self._decode_many = jax.jit(
             scan_decode, static_argnums=(4,), donate_argnums=donate
         )
 
     def generate(self, requests: List[Request]) -> List[Result]:
-        """Serve a list of requests in fixed-size batches."""
-        results: List[Result] = []
-        for i in range(0, len(requests), self.batch_size):
-            chunk = requests[i : i + self.batch_size]
-            results.extend(self._generate_batch(chunk))
-        return results
+        """Serve a list of requests in fixed-size batches.
+
+        Requests are BUCKETED by prompt length before chunking (stable
+        sort, so same-length requests keep their arrival order within a
+        bucket): every chunk prefills at its own longest prompt instead of
+        one long prompt padding the whole chunk — the prefill cost of a
+        chunk is max-in-chunk, and mixing lengths maximizes that max.
+        Note prefill has no pad mask: shorter prompts in a chunk are
+        left-padded with zero tokens the model attends to, so tokens
+        depend on chunk composition; bucketing MINIMIZES that padding
+        (equal-length chunks are pad-free and match solo serving) but a
+        mixed-length tail chunk still pads. Results are returned in the
+        ORIGINAL request order regardless of the serving order.
+        """
+        order = sorted(range(len(requests)),
+                       key=lambda i: int(requests[i].prompt.shape[0]))
+        results: List[Optional[Result]] = [None] * len(requests)
+        for i in range(0, len(order), self.batch_size):
+            idxs = order[i : i + self.batch_size]
+            out = self._generate_batch([requests[j] for j in idxs])
+            for j, res in zip(idxs, out):
+                results[j] = res
+        return results  # type: ignore[return-value]
 
     def _generate_batch(self, requests: List[Request]) -> List[Result]:
         B = self.batch_size

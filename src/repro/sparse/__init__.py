@@ -63,15 +63,36 @@ parts:
      layouts), the kernel tile sizes (``block_p``, ``block_k``), and the
      decode threshold (``small_m``). Buffers are laid out the way the
      kernels consume them (one contiguous panel per output block).
+     Optionally the AUTOTUNER runs here too (``pack(tune_for=Ms)`` /
+     ``PrunedArtifact.tune`` → ``sparse/tune.py``): it times the
+     candidate execution plans per M-bucket and records each winner in
+     meta as ``plan:<kind>:m<bucket>`` — a flat string like
+     ``pallas:bm=256:go=pm`` that rides the artifact manifest, so a
+     saved artifact ships its tuned plans and re-serving never searches.
 
   2. PLAN TIME — the first ``dispatch_matmul``/``dispatch_conv`` call for
      a given (scheme, shapes, dtype, M, epilogue) tuple builds ONE jitted
      closure with geometry, M-padding, and kernel choice baked in, then
-     memoizes it. M <= ``small_m`` (decode: M = batch) selects the fast
-     path — a fused XLA gather + batched dot over the SAME compressed
-     buffers, no Pallas grid, no M padding.
+     memoizes it. The implementation comes from the plan-resolution
+     chain: persisted meta plan → in-process tuned winner →
+     first-dispatch search (``REPRO_AUTOTUNE=1``) → heuristic default.
+     Two M regimes exist, both over the SAME compressed buffers and
+     bit-identical:
+
+       * M <= ``small_m`` (decode: M = batch) — the fused XLA gather +
+         dot fast path: no Pallas grid, no M padding;
+       * M > ``small_m`` (prefill: M = batch × prompt) — either the
+         large-M Pallas kernel (multi-row ``block_m`` output panels,
+         ``block_k`` k-panel prefetch granularity, and a rows-resident
+         ``mp`` vs weight-panel-resident ``pm`` grid order) or the same
+         gather+dot formulation — whichever the plan names. The
+         heuristic default is gather in interpret mode (the Pallas grid
+         is a correctness simulator off-TPU) and Pallas on real TPUs.
 
   3. CALL TIME — a dict lookup and the closure. Nothing else.
+     ``registry.DISPATCH_STATS`` counts the (kind, scheme, M-bucket)
+     of every traced dispatch and each built plan's resolved impl —
+     ``benchmarks/packed_serve.py --profile`` prints it.
 
 Fused epilogue API
 ------------------
@@ -89,6 +110,7 @@ dense and packed serving share one numeric contract (token identity).
 The packed FFN/conv never materializes its pre-activation intermediate.
 """
 
+from repro.sparse import tune
 from repro.sparse.artifact import PrunedArtifact
 from repro.sparse.packed import (
     PackedTensor,
@@ -101,5 +123,8 @@ from repro.sparse.registry import (
     SchemeHandler,
     dispatch_conv,
     dispatch_matmul,
+    dispatch_stats,
     handler_for,
+    reset_dispatch_stats,
 )
+from repro.sparse.tune import Plan

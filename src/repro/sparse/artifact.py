@@ -67,7 +67,9 @@ class PrunedArtifact:
         """
         return dataclasses.replace(self, params=params, packed=None)
 
-    def pack(self, *, verify: bool = False) -> "PrunedArtifact":
+    def pack(self, *, verify: bool = False,
+             tune_for: Optional[Any] = None,
+             tune_iters: int = 3) -> "PrunedArtifact":
         """Compress every packable leaf through the scheme registry.
 
         Leaves whose scheme has no packed form (irregular/filter), or whose
@@ -75,6 +77,13 @@ class PrunedArtifact:
         remains correct either way, packing only changes the execution path.
         With ``verify=True`` each packed leaf is unpacked and checked to be
         EXACTLY the dense leaf (cheap insurance when packing new schemes).
+
+        ``tune_for`` — optional iterable of GEMM row counts the artifact
+        will serve (decode: batch; prefill: batch × prompt_len): runs the
+        ``sparse.tune`` plan search per leaf per M-bucket and bakes the
+        winners into each ``PackedTensor.meta``, the paper's compile-time
+        tuned deployment. The plans ship in the saved manifest, so
+        re-serving a loaded artifact never repeats the search.
         """
 
         def pack_leaf(spec, w):
@@ -97,7 +106,28 @@ class PrunedArtifact:
 
         packed = jax.tree.map(pack_leaf, self.specs, self.params,
                               is_leaf=_spec_is_leaf)
-        return dataclasses.replace(self, packed=packed)
+        art = dataclasses.replace(self, packed=packed)
+        if tune_for is not None:
+            art = art.tune(tune_for, iters=tune_iters)
+        return art
+
+    def tune(self, ms: Any, *, iters: int = 3,
+             interpret: Optional[bool] = None) -> "PrunedArtifact":
+        """Autotune execution plans for the given M values (packs first
+        if needed). The per-leaf winners land in ``PackedTensor.meta``
+        (persisted by ``save`` through the packed manifest) and the full
+        search report in ``meta['tuned_plans']`` (persisted in
+        ``artifact.json``). Tuning never changes results — every candidate
+        plan is bit-identical — only which kernel geometry serves them.
+        """
+        from repro.sparse import tune as tune_mod
+
+        packed = self.packed if self.packed is not None else self.pack().packed
+        packed, report = tune_mod.tune_packed_tree(
+            packed, ms, iters=iters, interpret=interpret)
+        meta = dict(self.meta)
+        meta["tuned_plans"] = {k: v["plan"] for k, v in report.items()}
+        return dataclasses.replace(self, packed=packed, meta=meta)
 
     # -------------------------------------------------------------- binding
 

@@ -33,15 +33,40 @@ lookup — are made exactly once:
     that skips the Pallas grid entirely — a fused XLA gather + batched
     dot over the SAME compressed buffers, with no M padding.
 
+Large-M (prefill) regime + the tuner
+------------------------------------
+
+Requests with M > ``small_m`` pick ONE of two implementations per plan
+(both over the same compressed buffers, bit-identical results):
+
+  * ``pallas`` — the tiled kernel with a tunable (block_m, block_k,
+    grid order) geometry: multi-row output panels and a rows-resident
+    (``mp``) or weight-panel-resident (``pm``) streaming order;
+  * ``gather`` — a fused XLA gather + dense dot (no grid, no M padding;
+    the right call in interpret mode and for skinny shapes).
+
+Resolution order (``sparse.tune.resolve``): a plan persisted in
+``PackedTensor.meta`` (``plan:<kind>:m<bucket>`` — written by the
+autotuner at pack time and shipped in the artifact manifest) → an
+in-process tuned winner → a first-dispatch search when
+``REPRO_AUTOTUNE=1`` → the per-backend heuristic default (gather in
+interpret mode, Pallas on real TPU backends).
+
 All matmul plans accept activations of shape (M, I) for a dense leaf of
 shape (I, O) (the model's ``y = x @ w`` layout); an optional fused
 epilogue (bias + relu/silu/gelu, see ``kernels.epilogue``) runs on the
 fp32 accumulator before the result is cast back. ``interpret`` defaults
 to True off-TPU exactly like ``kernels.ops``.
+
+``DISPATCH_STATS`` counts plan-cache events per (kind, scheme, M-bucket)
+and each built plan's resolved implementation — trace-time counts (one
+per dispatch site per compiled graph), the per-scheme attribution that
+``benchmarks/packed_serve.py --profile`` prints.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -56,11 +81,15 @@ from repro.kernels.column_gemm import column_gemm as _column_gemm
 from repro.kernels.column_gemm import pack_columns as _pack_columns
 from repro.kernels.epilogue import apply_epilogue, check_activation
 from repro.kernels.ops import _default_interpret
-from repro.kernels.pattern_conv import pattern_conv as _pattern_conv_kernel
+from repro.kernels.pattern_conv import gather_taps as _gather_taps
+from repro.kernels.pattern_conv import (
+    pattern_conv_gemm as _pattern_conv_gemm,
+)
 from repro.kernels.pattern_gemm import (
     pack_tile_pattern_blocked as _pack_tile_blocked,
 )
 from repro.kernels.pattern_gemm import pattern_gemm as _pattern_gemm
+from repro.sparse import tune as _tune
 from repro.sparse.packed import PackedTensor
 from repro.utils.registry import Registry
 
@@ -112,7 +141,9 @@ class SchemeHandler:
     to_dense: Callable[[PackedTensor], jnp.ndarray]
     # conv(x (B, H, W, C), pt, bias=, activation=) -> (B, H, W, A)
     conv: Optional[Callable[..., jnp.ndarray]] = None
-    # plan(pt, M, has_bias, activation, interpret) -> fn(x, pt, bias)
+    # plan(pt, M, has_bias, activation, interpret, exec_plan=None)
+    #   -> fn(x, pt, bias); exec_plan (a tune.Plan) forces one candidate —
+    #   None resolves through tune.resolve / the heuristic default
     plan: Optional[Callable[..., Callable]] = None
 
 
@@ -128,6 +159,30 @@ def handler_for(scheme: str) -> SchemeHandler:
 # ---------------------------------------------------------------------------
 
 _PLAN_CACHE: Dict[Tuple, Callable] = {}
+
+# trace-time dispatch accounting: every dispatch increments its
+# (kind, scheme, M-bucket) counter; every plan BUILD also records the
+# resolved implementation. Since dispatch runs at trace time inside jitted
+# callers, counts are per compiled graph (dispatch sites), not per step —
+# exactly the attribution --profile wants.
+DISPATCH_STATS: "collections.Counter[str]" = collections.Counter()
+
+
+def dispatch_stats() -> Dict[str, int]:
+    return dict(DISPATCH_STATS)
+
+
+def reset_dispatch_stats():
+    DISPATCH_STATS.clear()
+
+
+def _count_dispatch(kind: str, pt: PackedTensor, M: int):
+    small = int(pt.meta_dict.get("small_m", SMALL_M))
+    DISPATCH_STATS[f"{kind}:{pt.scheme}:m{_tune.m_bucket(M, small)}"] += 1
+
+
+def _count_plan_build(kind: str, pt: PackedTensor, plan: "_tune.Plan"):
+    DISPATCH_STATS[f"plan_build:{kind}:{pt.scheme}:{plan.to_str()}"] += 1
 
 
 def _plan_key(pt: PackedTensor, M: int, dtype, has_bias: bool,
@@ -146,6 +201,7 @@ def dispatch_matmul(x: jnp.ndarray, pt: PackedTensor, *,
     if interpret is None:
         interpret = _default_interpret()
     check_activation(activation)
+    _count_dispatch("matmul", pt, x.shape[0])
     key = _plan_key(pt, x.shape[0], x.dtype, bias is not None, activation,
                     interpret, "matmul")
     fn = _PLAN_CACHE.get(key)
@@ -155,7 +211,13 @@ def dispatch_matmul(x: jnp.ndarray, pt: PackedTensor, *,
             raise TypeError(f"scheme {pt.scheme!r} has no matmul plan")
         fn = jax.jit(handler.plan(pt, x.shape[0], bias is not None,
                                   activation, interpret))
-        _PLAN_CACHE[key] = fn
+        # don't memoize a heuristic closure built while TRACING with
+        # autotune pending (tune.resolve skips its search on tracers) —
+        # a later eager dispatch of this geometry must still get to
+        # search and cache the tuned closure
+        if not _tune.resolution_deferred(pt, "matmul", x.shape[0],
+                                         interpret):
+            _PLAN_CACHE[key] = fn
     return fn(x, pt, bias)
 
 
@@ -167,6 +229,7 @@ def dispatch_conv(x: jnp.ndarray, pt: PackedTensor, *,
     if interpret is None:
         interpret = _default_interpret()
     check_activation(activation)
+    _count_dispatch("conv", pt, int(np.prod(x.shape[:-1])))
     handler = SPARSE_SCHEMES.get(pt.scheme)
     if handler.conv is None:
         raise TypeError(f"scheme {pt.scheme!r} has no conv dispatch")
@@ -185,7 +248,8 @@ def _dense_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     return None
 
 
-def _dense_plan(pt, M, has_bias, activation, interpret):
+def _dense_plan(pt, M, has_bias, activation, interpret, exec_plan=None):
+    # one implementation only: nothing to tune (exec_plan ignored)
     def fn(x, pt, bias):
         y = jnp.dot(x, pt.buf("w_packed"),
                     preferred_element_type=jnp.float32)
@@ -277,7 +341,7 @@ def _tile_wpb(pt) -> jnp.ndarray:
     return jnp.transpose(wp.reshape(Kp, nb, P // nb), (1, 0, 2))
 
 
-def _tile_plan(pt, M, has_bias, activation, interpret):
+def _tile_plan(pt, M, has_bias, activation, interpret, exec_plan=None):
     if pt.stacked:
         raise ValueError(
             "tile_pattern matmul wants per-layer buffers; scan over the "
@@ -288,30 +352,112 @@ def _tile_plan(pt, M, has_bias, activation, interpret):
     P = nb * bp
     small_m = int(pt.meta_dict.get("small_m", SMALL_M))
 
-    if M <= small_m:
-        # decode fast path: one fused gather + one batched dot over the
-        # blocked panels — no Pallas grid, no M padding, CWS preserved
-        # (only w_packed bytes are read)
+    resolved = exec_plan is None
+    if exec_plan is None:
+        exec_plan = _tune.resolve(pt, "matmul", M, interpret=interpret)
+    if exec_plan is None:
+        # heuristic default: the fused XLA gather+dot wins at decode M
+        # (no grid, no padding) and in interpret mode (the Pallas grid is
+        # a Python loop there); real TPU prefill defaults to the kernel
+        if M <= small_m or interpret:
+            exec_plan = _tune.Plan("gather")
+        else:
+            exec_plan = _tune.Plan("pallas", block_m=_row_block(M))
+    if resolved:
+        # count only dispatch-resolved builds, not tuner candidate probes
+        _count_plan_build("matmul", pt, exec_plan)
+
+    if exec_plan.impl in ("gather", "gather_t", "gather_tb", "gather_e"):
+        # fused XLA gather + dense dot over the blocked panels — no Pallas
+        # grid, no M padding, CWS preserved (only w_packed bytes are
+        # read). Valid at ANY M. The gather FORMULATIONS compete in the
+        # tuner because XLA lowers them very differently (all
+        # bit-identical — same kept values contracted in the same order):
+        #   gather    — column gather of x (axis=1) + row-major dot;
+        #   gather_t  — ROW gather of x.T (contiguous rows beat strided
+        #               columns on most backends) + a dot_general
+        #               contracting the leading axis (no materialized
+        #               transpose);
+        #   gather_tb — gather_t with the per-panel dots batched over nb;
+        #   gather_e  — NO indexed gather at all: the lane selection is
+        #               block-LOCAL (keep-of-group_q within each group),
+        #               so it runs as a tiny batched einsum against an
+        #               on-the-fly one-hot selector (M·nb·ng·group_q·keep
+        #               mul-adds — vectorized, which scalarized backend
+        #               gathers are not).
+        impl = exec_plan.impl
+        group_q = int(pt.meta_dict.get("group_q", 8))
+        keep = int(pt.meta_dict.get("keep", Kp))
+        Q = pt.shape[-2]
+        ng = Q // group_q if group_q else 0
+        if impl == "gather_e" and (not ng or ng * keep != Kp):
+            impl = "gather"               # defensive: odd geometry
+
         def fn(x, pt, bias):
             wpb = _tile_wpb(pt)
             li = pt.buf("lane_idx")
-            xg = jnp.take(x, li.reshape(-1), axis=1).reshape(M, nb, Kp)
-            y = jax.lax.dot_general(
-                xg, wpb, (((2,), (1,)), ((1,), (0,))),
-                preferred_element_type=jnp.float32)       # (nb, M, bp)
-            y = jnp.transpose(y, (1, 0, 2)).reshape(M, P)
+            if impl == "gather":
+                if nb == 1:
+                    xg = jnp.take(x, li[0], axis=1)
+                    y = jnp.dot(xg, wpb[0],
+                                preferred_element_type=jnp.float32)
+                else:
+                    xg = jnp.take(x, li.reshape(-1), axis=1)
+                    xg = xg.reshape(M, nb, Kp)
+                    y = jax.lax.dot_general(
+                        xg, wpb, (((2,), (1,)), ((1,), (0,))),
+                        preferred_element_type=jnp.float32)   # (nb, M, bp)
+                    y = jnp.transpose(y, (1, 0, 2)).reshape(M, P)
+            elif impl == "gather_e":
+                # lane_idx rows live in group g's [g·group_q, (g+1)·group_q)
+                # band; selecting them is a per-group (group_q → keep)
+                # projection: S[n,g,l,j] = 1 iff group-local lane l is the
+                # j-th kept lane of panel n — xg = x ⋅ S, one batched GEMM
+                loc = (li.reshape(nb, ng, keep)
+                       - (jnp.arange(ng, dtype=li.dtype) * group_q)[None, :,
+                                                                    None])
+                sel = jax.nn.one_hot(loc, group_q, dtype=x.dtype,
+                                     axis=-1)                # (nb,ng,keep,gq)
+                xg = jnp.einsum("mgl,ngjl->mngj",
+                                x.reshape(M, ng, group_q), sel)
+                if nb == 1:
+                    y = jnp.dot(xg.reshape(M, Kp), wpb[0],
+                                preferred_element_type=jnp.float32)
+                else:
+                    y = jax.lax.dot_general(
+                        xg.reshape(M, nb, Kp), wpb,
+                        (((2,), (1,)), ((1,), (0,))),
+                        preferred_element_type=jnp.float32)   # (nb, M, bp)
+                    y = jnp.transpose(y, (1, 0, 2)).reshape(M, P)
+            elif impl == "gather_t" or nb == 1:
+                xT = x.T
+                ys = [jax.lax.dot_general(
+                        jnp.take(xT, li[j], axis=0), wpb[j],
+                        (((0,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                      for j in range(nb)]
+                y = ys[0] if nb == 1 else jnp.concatenate(ys, axis=1)
+            else:                                         # gather_tb
+                g = jnp.take(x.T, li.reshape(-1), axis=0).reshape(nb, Kp, M)
+                y = jax.lax.dot_general(
+                    g, wpb, (((1,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32)       # (nb, M, bp)
+                y = jnp.transpose(y, (1, 0, 2)).reshape(M, P)
             return apply_epilogue(y, bias, activation).astype(x.dtype)
 
         return fn
 
-    bm = _row_block(M)
+    bm = exec_plan.block_m or _row_block(M)
+    if bm > M:                    # don't pad M past one row tile
+        bm = _row_block(M)
+    go = exec_plan.grid
     pad = (-M) % bm
 
     def fn(x, pt, bias):
         xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
         y = _pattern_gemm(xp, _tile_wpb(pt), pt.buf("lane_idx"), bias,
                           block_m=bm, interpret=interpret,
-                          activation=activation)
+                          activation=activation, grid_order=go)
         return y[:M] if pad else y
 
     return fn
@@ -401,7 +547,7 @@ def _column_pack(w: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     return _stack_packed(padded, lead, names, "column", tuple(w.shape), meta)
 
 
-def _column_plan(pt, M, has_bias, activation, interpret):
+def _column_plan(pt, M, has_bias, activation, interpret, exec_plan=None):
     wp = pt.buf("w_packed")
     if wp.ndim != 2:
         raise ValueError(
@@ -410,25 +556,53 @@ def _column_plan(pt, M, has_bias, activation, interpret):
         )
     small_m = int(pt.meta_dict.get("small_m", SMALL_M))
 
-    if M <= small_m:
-        # decode fast path: gather the surviving features, one dense dot
+    resolved = exec_plan is None
+    if exec_plan is None:
+        exec_plan = _tune.resolve(pt, "matmul", M, interpret=interpret)
+    if exec_plan is None:
+        if M <= small_m or interpret:
+            exec_plan = _tune.Plan("gather")
+        else:
+            exec_plan = _tune.Plan("pallas", block_m=_row_block(M))
+    if resolved:
+        _count_plan_build("matmul", pt, exec_plan)
+
+    if exec_plan.impl in ("gather", "gather_t"):
+        # gather the surviving features, one dense dot — valid at any M.
+        # gather_t gathers ROWS of x.T instead of columns of x (contiguous
+        # rows beat strided columns) and contracts the leading axis.
+        impl = exec_plan.impl
+
         def fn(x, pt, bias):
-            xg = jnp.take(x, pt.buf("kept_idx"), axis=1)
-            y = jnp.dot(xg, pt.buf("w_packed"),
-                        preferred_element_type=jnp.float32)
+            if impl == "gather":
+                xg = jnp.take(x, pt.buf("kept_idx"), axis=1)
+                y = jnp.dot(xg, pt.buf("w_packed"),
+                            preferred_element_type=jnp.float32)
+            else:
+                g = jnp.take(x.T, pt.buf("kept_idx"), axis=0)   # (K, M)
+                y = jax.lax.dot_general(
+                    g, pt.buf("w_packed"), (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
             return apply_epilogue(y, bias, activation).astype(x.dtype)
 
         return fn
 
-    bp = int(pt.meta_dict.get("block_p", 0)) or _block_of(wp.shape[-1])
-    bm = _row_block(M)
+    bp = (exec_plan.block_p
+          or int(pt.meta_dict.get("block_p", 0))
+          or _block_of(wp.shape[-1]))
+    bk = exec_plan.block_k or 512
+    bm = exec_plan.block_m or _row_block(M)
+    if bm > M:
+        bm = _row_block(M)
+    go = exec_plan.grid
     pad = (-M) % bm
 
     def fn(x, pt, bias):
         xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
         y = _column_gemm(xp, pt.buf("w_packed"), pt.buf("kept_idx"), bias,
-                         block_m=bm, block_p=bp, interpret=interpret,
-                         activation=activation)
+                         block_m=bm, block_p=bp, block_k=bk,
+                         interpret=interpret, activation=activation,
+                         grid_order=go)
         return y[:M] if pad else y
 
     return fn
@@ -497,12 +671,54 @@ def _pattern_pack(w4: jnp.ndarray, spec: Any) -> Optional[PackedTensor]:
     )
 
 
+def conv_gemm_runner(pt, plan, *, interpret: bool,
+                     activation: Optional[str] = None) -> Callable:
+    """fn(xg, w_packed) for one conv-GEMM plan (the tuner's timing unit).
+
+    ``xla`` runs the gathered-taps GEMM as one XLA dot (+ fp32 epilogue);
+    ``pallas`` runs ``pattern_conv_gemm`` with the plan's block_m. Both
+    contract the same K values in the same order — bit-identical.
+    """
+    if plan.impl == "xla":
+        def fn(xg, w, bias=None):
+            y = jnp.dot(xg, w, preferred_element_type=jnp.float32)
+            return apply_epilogue(y, bias, activation).astype(xg.dtype)
+
+        return fn
+
+    bm = plan.block_m or 256
+    bk = plan.block_k or 512
+    go = plan.grid
+
+    def fn(xg, w, bias=None):
+        return _pattern_conv_gemm(xg, w, bias, block_m=bm, block_k=bk,
+                                  interpret=interpret, activation=activation,
+                                  grid_order=go)
+
+    return fn
+
+
 def _pattern_conv(x, pt, bias=None, *, activation=None, interpret=None):
-    """Stride-1 SAME 3x3 pattern conv: x (B, H, W, C) -> (B, H, W, A)."""
+    """Stride-1 SAME 3x3 pattern conv: x (B, H, W, C) -> (B, H, W, A).
+
+    The tap gather (LRE) always runs in XLA; the hot GEMM resolves its
+    plan like the matmul path — persisted/tuned plan per M-bucket, else
+    XLA dot in interpret mode and the Pallas kernel on TPU.
+    """
     if interpret is None:
         interpret = _default_interpret()
-    return _pattern_conv_kernel(x, pt.buf("w_packed"), pt.buf("taps"), bias,
-                                interpret=interpret, activation=activation)
+    B, H, W, C = x.shape
+    M = B * H * W
+    plan = _tune.resolve(pt, "conv", M, interpret=interpret)
+    if plan is None:
+        plan = _tune.Plan("xla") if interpret else _tune.Plan("pallas")
+    # no conv plan cache exists: dispatch_conv's _count_dispatch already
+    # counts traced conv dispatches, so no plan_build event here
+    xg = _gather_taps(x, pt.buf("taps"))
+    run = conv_gemm_runner(pt, plan, interpret=interpret,
+                           activation=activation)
+    y = run(xg, pt.buf("w_packed"), bias)
+    return y.reshape(B, H, W, -1)
 
 
 def _pattern_matmul(x, pt, bias=None, *, activation=None, interpret=None):
