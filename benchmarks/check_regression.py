@@ -1,8 +1,9 @@
-"""CI gate: fail if the packed serving hot path regresses below dense.
+"""CI gate: fail if the serving hot path regresses below its contracts.
 
-Reads experiments/bench/BENCH_packed_serve.json (written by
-``benchmarks/packed_serve.py``) and enforces the deployment contract the
-paper's claims rest on:
+Two benchmark files feed it:
+
+``experiments/bench/BENCH_packed_serve.json`` (``benchmarks/packed_serve.py``)
+— the per-chunk packed-vs-dense contract the paper's claims rest on:
 
   * tokens_identical — packed decode must be token-identical to dense
     (a wrong-but-fast kernel is a correctness regression, full stop);
@@ -17,10 +18,25 @@ paper's claims rest on:
     at least the scheme's structural rate minus overhead (default 1.6 at
     4-of-8 lanes; ``--min-bytes-ratio`` / REPRO_MIN_BYTES_RATIO).
 
+``experiments/bench/BENCH_continuous_serve.json``
+(``benchmarks/continuous_serve.py``) — the continuous-batching contract
+under the Poisson mixed-length workload:
+
+  * tokens_match_solo — every CONTINUOUS request's tokens must equal
+    serving it alone: per-slot geometry removes the chunked engine's
+    mixed-length padding distortion, so any mismatch is a slot-isolation
+    bug (static rows are informational — their distortion is documented);
+  * tokens_identical — packed == dense within each engine;
+  * continuous_vs_static_ratio (packed) >= threshold — continuous
+    batching must not serve the mixed workload slower than fixed chunks
+    (default 1.0; ``--min-continuous-ratio`` /
+    REPRO_MIN_CONTINUOUS_RATIO; the bench acceptance target is 1.3).
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
-    PYTHONPATH=src:. python benchmarks/packed_serve.py   # regenerate
-    python benchmarks/check_regression.py                # gate
+    PYTHONPATH=src:. python benchmarks/packed_serve.py       # regenerate
+    PYTHONPATH=src:. python benchmarks/continuous_serve.py   # regenerate
+    python benchmarks/check_regression.py                    # gate
 """
 
 from __future__ import annotations
@@ -30,11 +46,12 @@ import json
 import os
 import sys
 
-DEFAULT_PATH = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    if "__file__" in globals() else ".",
-    "experiments", "bench", "BENCH_packed_serve.json",
-)
+_ROOT = (os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+         if "__file__" in globals() else ".")
+DEFAULT_PATH = os.path.join(_ROOT, "experiments", "bench",
+                            "BENCH_packed_serve.json")
+DEFAULT_CONTINUOUS_PATH = os.path.join(_ROOT, "experiments", "bench",
+                                       "BENCH_continuous_serve.json")
 
 
 def check(path: str, min_ratio: float, max_prefill_factor: float = 1.05,
@@ -81,7 +98,7 @@ def check(path: str, min_ratio: float, max_prefill_factor: float = 1.05,
         )
 
     if failures:
-        print("check_regression: FAIL")
+        print("check_regression: FAIL (packed_serve)")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
@@ -93,9 +110,62 @@ def check(path: str, min_ratio: float, max_prefill_factor: float = 1.05,
     return 0
 
 
+def check_continuous(path: str, min_continuous_ratio: float) -> int:
+    if not os.path.isfile(path):
+        print(f"check_regression: missing benchmark file {path} "
+              "(run benchmarks/continuous_serve.py first)")
+        return 2
+    with open(path) as f:
+        rows = json.load(f)
+    by_key = {(r.get("engine"), r.get("mode")): r for r in rows}
+    need = [("static", "packed"), ("continuous", "packed"),
+            ("continuous", "dense")]
+    if any(k not in by_key for k in need):
+        print(f"check_regression: {path} lacks static/continuous "
+              "dense/packed rows")
+        return 2
+    failures = []
+    for (engine, mode), r in by_key.items():
+        if not r.get("tokens_identical", False):
+            failures.append(f"{engine}/{mode}: tokens_identical is false")
+        if engine == "continuous" and not r.get("tokens_match_solo", False):
+            failures.append(
+                f"continuous/{mode}: tokens differ from solo serving — "
+                "slot isolation is broken (per-slot geometry must make "
+                "continuous batching bit-identical to serving alone)"
+            )
+    cp = by_key[("continuous", "packed")]
+    ratio = cp.get("continuous_vs_static_ratio")
+    if ratio is None:
+        failures.append("continuous/packed row lacks "
+                        "continuous_vs_static_ratio")
+    elif ratio < min_continuous_ratio:
+        failures.append(
+            f"continuous packed serves the mixed workload at {ratio:.3f}x "
+            f"static chunked throughput (gate: >= {min_continuous_ratio}) "
+            f"— {cp['tokens_per_s']} vs "
+            f"{by_key[('static', 'packed')]['tokens_per_s']} tok/s"
+        )
+
+    if failures:
+        print("check_regression: FAIL (continuous_serve)")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"check_regression: OK — continuous packed {ratio:.3f}x static "
+          f"chunked on the Poisson mixed workload "
+          f"(p50 {cp.get('p50_latency_ms', '?')}ms vs "
+          f"{by_key[('static', 'packed')].get('p50_latency_ms', '?')}ms, "
+          f"occupancy {cp.get('occupancy', '?')} vs "
+          f"{by_key[('static', 'packed')].get('occupancy', '?')}), "
+          f"continuous tokens identical to solo serving")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--path", default=DEFAULT_PATH)
+    ap.add_argument("--continuous-path", default=DEFAULT_CONTINUOUS_PATH)
     ap.add_argument("--min-ratio", type=float,
                     default=float(os.environ.get("REPRO_MIN_DECODE_RATIO",
                                                  "1.0")))
@@ -105,9 +175,14 @@ def main() -> int:
     ap.add_argument("--min-bytes-ratio", type=float,
                     default=float(os.environ.get("REPRO_MIN_BYTES_RATIO",
                                                  "1.6")))
+    ap.add_argument("--min-continuous-ratio", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_MIN_CONTINUOUS_RATIO", "1.0")))
     args = ap.parse_args()
-    return check(args.path, args.min_ratio, args.max_prefill_factor,
-                 args.min_bytes_ratio)
+    rc = check(args.path, args.min_ratio, args.max_prefill_factor,
+               args.min_bytes_ratio)
+    rc2 = check_continuous(args.continuous_path, args.min_continuous_ratio)
+    return max(rc, rc2)
 
 
 if __name__ == "__main__":

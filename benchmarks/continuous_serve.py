@@ -1,0 +1,254 @@
+"""BENCH_continuous_serve — continuous batching vs fixed chunks under load.
+
+Drives a Poisson-arrival, mixed-length, mixed-budget workload (the shape
+of real traffic: prompt lengths and ``max_new_tokens`` drawn from
+heavy-tailed palettes, exponential interarrival times) through four
+configurations: {dense, packed} × {static chunked ``ServeEngine``,
+``ContinuousEngine``}. The static engine pays the chunked-batch tax the
+ISSUE names: every chunk decodes to its LONGEST member's budget while
+finished slots idle masked, and new arrivals wait for the whole chunk to
+drain. The continuous engine retires each slot at its own stop and
+admits the next queued request into it mid-decode.
+
+Per configuration the bench records:
+
+  * ``tokens_per_s`` — emitted (useful) tokens / makespan; the headline.
+    ``continuous_vs_static_ratio`` on continuous rows is gated by
+    ``check_regression.py`` (>= 1.0x; the acceptance target is 1.3x);
+  * ``p50_latency_ms`` / ``p95_latency_ms`` — request completion minus
+    arrival; continuous lets short requests overtake long chunk-mates;
+  * ``occupancy`` — emitted tokens over decoded slot-steps (how much of
+    the batch did useful work);
+  * ``tokens_match_solo`` — every continuous request's tokens must equal
+    serving it ALONE (per-slot geometry removes the chunked engine's
+    mixed-length zero-pad distortion; static rows record their own match
+    as information, not a gate);
+  * ``tokens_identical`` — packed == dense within each engine.
+
+Engines are warmed (all prompt-length/scan-length programs compiled) on
+an arrival-free pass before timing; repetitions interleave
+configurations so box noise hits all four equally; medians are reported.
+
+    PYTHONPATH=src:. python benchmarks/continuous_serve.py
+    (REPRO_BENCH_FAST=1 for the CI smoke variant)
+
+Writes experiments/bench/BENCH_continuous_serve.json via common.emit.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.serve import ContinuousEngine, Request, ServeEngine
+
+from benchmarks import common
+
+BATCH = 8
+MAX_SEQ = 160
+CHUNK_STEPS = 8
+PROMPT_LENS = (4, 6, 8, 12, 16)
+MAX_NEW = (4, 8, 16, 32, 128)
+MAX_NEW_P = (0.25, 0.25, 0.2, 0.15, 0.15)
+
+
+def build_workload(n: int, seed: int = 0,
+                   mean_interarrival_s: float = 5e-4,
+                   ) -> Tuple[List[Request], List[float]]:
+    """Poisson arrivals (exponential interarrival), palette lengths and
+    budgets. Palettes bound the distinct compiled shapes while keeping
+    the mix heavy-tailed — one slow request per chunk is the norm, which
+    is exactly the case fixed chunking wastes a batch on."""
+    rng = np.random.default_rng(seed)
+    reqs, arrivals, t = [], [], 0.0
+    for i in range(n):
+        s = int(rng.choice(PROMPT_LENS))
+        m = int(rng.choice(MAX_NEW, p=MAX_NEW_P))
+        prompt = jnp.asarray(rng.integers(0, 512, size=(s,)), jnp.int32)
+        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=m))
+        t += float(rng.exponential(mean_interarrival_s))
+        arrivals.append(t)
+    return reqs, arrivals
+
+
+def drive_static(engine: ServeEngine, requests: List[Request],
+                 arrivals: List[float],
+                 batch_window_s: float = 0.05) -> Dict:
+    """Serve with fixed chunks under the arrival process: when the engine
+    is idle, take up to ``batch_size`` ARRIVED requests (FIFO) and serve
+    them as one chunk; arrivals during a chunk wait for it to drain.
+    A short batching window (standard serving practice) lets a forming
+    chunk fill to ``batch_size`` instead of dispatching on whoever beat
+    the clock — which also keeps chunk composition (and therefore the
+    compiled shapes) deterministic across repetitions."""
+    B = engine.batch_size
+    order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+    queue = [(arrivals[i], i) for i in order]
+    tokens: Dict[int, List[int]] = {}
+    latency: Dict[int, float] = {}
+    busy = total = 0
+    t0 = time.perf_counter()
+    qi = 0
+    while qi < len(queue):
+        now = time.perf_counter() - t0
+        if queue[qi][0] > now:
+            time.sleep(min(queue[qi][0] - now, 0.05))
+            continue
+        chunk = []
+        window_end = now + batch_window_s
+        while qi < len(queue) and len(chunk) < B:
+            now = time.perf_counter() - t0
+            if queue[qi][0] <= now:
+                chunk.append(queue[qi][1])
+                qi += 1
+            elif now >= window_end:
+                break
+            else:
+                time.sleep(min(queue[qi][0] - now, 1e-3))
+        out = engine.generate([requests[i] for i in chunk])
+        done = time.perf_counter() - t0
+        steps = max(requests[i].max_new_tokens for i in chunk)
+        busy += sum(len(r.tokens) for r in out)
+        total += B * steps
+        for i, r in zip(chunk, out):
+            tokens[i] = r.tokens
+            latency[i] = done - arrivals[i]
+    seconds = time.perf_counter() - t0
+    return {"tokens": tokens, "latency": latency, "seconds": seconds,
+            "occupancy": busy / max(total, 1)}
+
+
+def drive_continuous(engine: ContinuousEngine, requests: List[Request],
+                     arrivals: List[float]) -> Dict:
+    tokens: Dict[int, List[int]] = {}
+    latency: Dict[int, float] = {}
+    uid_to_idx = {r.uid: i for i, r in enumerate(requests)}
+    t0 = time.perf_counter()
+    for res in engine.stream(requests, arrivals=arrivals):
+        i = uid_to_idx[res.uid]
+        tokens[i] = res.tokens
+        latency[i] = (time.perf_counter() - t0) - arrivals[i]
+    seconds = time.perf_counter() - t0
+    return {"tokens": tokens, "latency": latency, "seconds": seconds,
+            "occupancy": engine.stats["occupancy"]}
+
+
+def bench(n_requests: int = 48) -> List[Dict]:
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 128, "tile_group_q": 8,
+                          "tile_keep": 4},
+                   r".*/(wk|wv)": {"tile_block_p": 64}},
+    )
+    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack(
+        tune_for=(1, BATCH, BATCH * max(PROMPT_LENS)),
+        tune_iters=2 if common.fast_mode() else 5)
+
+    if common.fast_mode():
+        n_requests = 16
+    reqs, arrivals = build_workload(n_requests)
+    total_budget = sum(r.max_new_tokens for r in reqs)
+
+    # solo reference: every request served alone (pad-free, the ground
+    # truth the continuous engine must match bit-for-bit)
+    solo_eng = ServeEngine(model, artifact, batch_size=1,
+                           max_seq_len=MAX_SEQ, packed=False)
+    solo = [solo_eng.generate([r])[0].tokens for r in reqs]
+
+    engines = {}
+    for mode, packed in (("dense", False), ("packed", True)):
+        engines[("static", mode)] = ServeEngine(
+            model, artifact, batch_size=BATCH, max_seq_len=MAX_SEQ,
+            packed=packed)
+        engines[("continuous", mode)] = ContinuousEngine(
+            model, artifact, batch_size=BATCH, max_seq_len=MAX_SEQ,
+            chunk_steps=CHUNK_STEPS, packed=packed)
+
+    def drive(kind, eng, arr):
+        if kind == "static":
+            return drive_static(eng, reqs, arr)
+        return drive_continuous(eng, reqs, arr)
+
+    # warm every compiled shape (untimed): an arrival-free pass compiles
+    # the bulk, then one pass under the REAL arrival process compiles any
+    # admission-timing-dependent shapes the timed runs will hit
+    zero = [0.0] * len(reqs)
+    for (kind, mode), eng in engines.items():
+        drive(kind, eng, zero)
+        drive(kind, eng, arrivals)
+
+    iters = 2 if common.fast_mode() else 5
+    runs: Dict[Tuple[str, str], List[Dict]] = {k: [] for k in engines}
+    for _ in range(iters):
+        for key, eng in engines.items():     # interleaved across configs
+            runs[key].append(drive(key[0], eng, arrivals))
+
+    rows = []
+    for (kind, mode), rs in runs.items():
+        toks = rs[0]["tokens"]
+        for r in rs[1:]:
+            assert r["tokens"] == toks, f"{kind}/{mode} nondeterministic"
+        emitted = sum(len(t) for t in toks.values())
+        tps = [emitted / r["seconds"] for r in rs]
+        p50 = [float(np.percentile(list(r["latency"].values()), 50))
+               for r in rs]
+        p95 = [float(np.percentile(list(r["latency"].values()), 95))
+               for r in rs]
+        rows.append({
+            "bench": "continuous_serve", "engine": kind, "mode": mode,
+            "batch": BATCH, "chunk_steps": CHUNK_STEPS,
+            "num_requests": len(reqs), "tokens_emitted": emitted,
+            "tokens_budget": total_budget,
+            "tokens_per_s": round(float(np.median(tps)), 1),
+            "p50_latency_ms": round(float(np.median(p50)) * 1e3, 2),
+            "p95_latency_ms": round(float(np.median(p95)) * 1e3, 2),
+            "occupancy": round(float(np.median(
+                [r["occupancy"] for r in rs])), 4),
+            "tokens_match_solo": all(
+                toks[i] == solo[i] for i in range(len(reqs))),
+        })
+
+    by_key = {(r["engine"], r["mode"]): r for r in rows}
+    # packed must emit exactly dense's tokens within each engine
+    tok_runs = {k: runs[k][0]["tokens"] for k in runs}
+    for kind in ("static", "continuous"):
+        identical = tok_runs[(kind, "dense")] == tok_runs[(kind, "packed")]
+        by_key[(kind, "dense")]["tokens_identical"] = identical
+        by_key[(kind, "packed")]["tokens_identical"] = identical
+    for mode in ("dense", "packed"):
+        st, ct = by_key[("static", mode)], by_key[("continuous", mode)]
+        ratio = ct["tokens_per_s"] / st["tokens_per_s"]
+        ct["continuous_vs_static_ratio"] = round(ratio, 3)
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = bench()
+    for r in rows:
+        extra = ""
+        if "continuous_vs_static_ratio" in r:
+            extra = f", {r['continuous_vs_static_ratio']}x vs static"
+        print(f"  continuous_serve {r['engine']:>10s}/{r['mode']:<6s}: "
+              f"{r['tokens_per_s']:8.1f} tok/s, "
+              f"p50 {r['p50_latency_ms']:7.2f}ms, "
+              f"p95 {r['p95_latency_ms']:7.2f}ms, "
+              f"occupancy {r['occupancy']:.2f}, "
+              f"solo-match {r['tokens_match_solo']}{extra}")
+    common.emit("BENCH_continuous_serve", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

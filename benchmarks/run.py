@@ -29,12 +29,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
-                         "packed_serve")
+                         "packed_serve,continuous_serve")
     args = ap.parse_args()
     want = None if args.only == "all" else set(args.only.split(","))
 
     from benchmarks import (
         common,
+        continuous_serve,
         fig3_kernels,
         packed_serve,
         table1_schemes,
@@ -50,6 +51,7 @@ def main() -> None:
         "table5": table5_greedy.run,
         "fig3": fig3_kernels.run,
         "packed_serve": packed_serve.run,
+        "continuous_serve": continuous_serve.run,
     }
 
     summary = {}

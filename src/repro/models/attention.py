@@ -419,6 +419,27 @@ def cache_capacity(seq_len: int, window: Optional[int]) -> CacheSpec:
     return CacheSpec(capacity=seq_len, ring=False)
 
 
+def slot_prompt_rows(capacity: int, prompt_len: int, ring: bool):
+    """Cache geometry for writing a fresh ``prompt_len``-token prompt.
+
+    Returns ``(rows, keep, slot_pos_row)``: the cache slot indices
+    ``(keep,)`` the prompt's LAST ``keep`` positions land in (ring caches
+    keep only the trailing window), and the full ``(capacity,)`` slot_pos
+    row for the slot — fresh positions where written, ``-1`` (empty →
+    masked by ``decode_attention``) everywhere else. Resetting a slot's
+    row to this is what invalidates a retired occupant's stale KV when a
+    batch slot is reused mid-decode: the bytes stay, the mask hides them.
+    """
+    S, C = prompt_len, capacity
+    if not ring and S > C:
+        raise ValueError(f"prompt_len={S} exceeds cache capacity={C}")
+    keep = min(C, S)
+    pos = jnp.arange(S - keep, S, dtype=jnp.int32)
+    rows = pos % C if ring else pos
+    slot_pos_row = jnp.full((C,), -1, jnp.int32).at[rows].set(pos)
+    return rows, keep, slot_pos_row
+
+
 def decode_attention(
     q: jnp.ndarray,                  # (B, 1, H, hd) — one new position
     k_cache: jnp.ndarray,            # (B, C, KV, hd)

@@ -37,6 +37,7 @@ from repro.models.attention import (
     cache_insert,
     decode_attention,
     flash_prefill_supported,
+    slot_prompt_rows,
 )
 from repro.models.layers import (
     dense_apply,
@@ -620,6 +621,69 @@ class LM:
         logits = self.lm_logits(params, h[:, -1:, :])
         return cache, logits
 
+    def prefill_into_slot(self, params, cache, prompt: jnp.ndarray,
+                          slot, *, flash: Optional[bool] = None):
+        """Prefill ONE prompt into ONE free slot of a LIVE decode cache.
+
+        ``prompt``: (1, S) ids (or (1, S, D) embeddings); ``slot``: scalar
+        int32 batch index — traced, so one compiled program per prompt
+        length serves EVERY slot. The prompt runs exactly like a solo
+        ``prefill`` (positions 0..S-1, no batch-mates, no padding — the
+        hidden states are bit-identical to serving the request alone),
+        and only the slot's rows of the cache are touched: its k/v rows,
+        its ``slot_pos`` row (reset via ``slot_prompt_rows`` — fresh
+        positions where written, -1 elsewhere, so a retired occupant's
+        stale KV is masked out, not read), and its ``pos`` entry. Every
+        other slot's buffers pass through UNTOUCHED, which is what makes
+        mid-decode admission safe for the live requests around it.
+        Returns ``(cache, last-token logits (1, 1, V))``.
+        """
+        cfg = self.config
+        if cfg.family == "ssm":
+            raise NotImplementedError(
+                "prefill_into_slot needs a KV-cache family; xLSTM "
+                "recurrent-state slot admission is not implemented"
+            )
+        S = prompt.shape[1]
+        use_flash = (jax.default_backend() == "tpu") if flash is None \
+            else bool(flash)
+        h, _, kv = self.hidden_states(params, prompt, collect_kv=True,
+                                      use_flash=use_flash)
+        if cfg.family == "hybrid":
+            k_all, v_all, mamba_states = kv     # (L, 1, S, KV, hd)
+        else:
+            k_all, v_all = kv
+        C = cache["k"].shape[2]
+        # mirror decode_step's ring rule: the buffer rings iff a sliding
+        # window bounds its capacity
+        ring = cfg.sliding_window is not None and C <= cfg.sliding_window
+        rows, keep, sp_row = slot_prompt_rows(C, S, ring)
+        slot = jnp.asarray(slot, jnp.int32)
+        kd = cache["k"].dtype
+        cache = dict(cache)
+        if ring:
+            cache["k"] = cache["k"].at[:, slot, rows].set(
+                k_all[:, 0, S - keep:].astype(kd))
+            cache["v"] = cache["v"].at[:, slot, rows].set(
+                v_all[:, 0, S - keep:].astype(kd))
+        else:
+            z = jnp.int32(0)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k_all.astype(kd), (z, slot, z, z, z))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v_all.astype(kd), (z, slot, z, z, z))
+        cache["slot_pos"] = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], sp_row[None, :], (slot, jnp.int32(0)))
+        cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((1,), S, jnp.int32), (slot,))
+        if cfg.family == "hybrid":
+            cache["mamba"] = jax.tree.map(
+                lambda buf, st: buf.at[:, slot].set(
+                    st[:, 0].astype(buf.dtype)),
+                cache["mamba"], mamba_states)
+        logits = self.lm_logits(params, h[:, -1:, :])
+        return cache, logits
+
     def _xlstm_prefill(self, params, inputs):
         cfg = self.config
         x = self.embed_inputs(params, inputs)
@@ -742,7 +806,8 @@ class LM:
         return cache, logits
 
     def decode_many(self, params, cache, tokens: jnp.ndarray,
-                    num_steps: int, sampler=None, unroll: int = 4):
+                    num_steps: int, sampler=None, unroll: int = 4,
+                    keys: Optional[jnp.ndarray] = None):
         """Device-resident multi-token decode: one ``lax.scan`` over steps.
 
         Samples on-device after every step and feeds the token back in, so
@@ -754,8 +819,12 @@ class LM:
         tokens: (B, 1) int32 — the first token of the block (e.g. sampled
         from the prefill logits). ``sampler``: jit-compatible
         ``logits (B, 1, V) -> (B, 1) int32`` (default: greedy argmax).
-        ``unroll`` trades compiled-code size for per-step while-loop
-        overhead (any ``num_steps`` is fine, jax handles remainders).
+        ``keys``: optional per-step PRNG keys, leading dim ``num_steps`` —
+        when given the sampler is called as ``sampler(logits, key)`` so
+        stochastic samplers (``temperature_sample``) draw a fresh key
+        every step without leaving the scan. ``unroll`` trades
+        compiled-code size for per-step while-loop overhead (any
+        ``num_steps`` is fine, jax handles remainders).
         Returns (final cache, tokens (B, num_steps)) where column 0 is the
         token sampled AFTER feeding ``tokens`` (i.e. the continuation).
         """
@@ -763,14 +832,14 @@ class LM:
             from repro.serve.sampler import greedy_sample
             sampler = greedy_sample
 
-        def step(carry, _):
+        def step(carry, key):
             cache, tok = carry
             cache, logits = self.decode_step(params, cache, tok)
-            nxt = sampler(logits)
+            nxt = sampler(logits) if key is None else sampler(logits, key)
             return (cache, nxt), nxt
 
         (cache, _), toks = jax.lax.scan(
-            step, (cache, tokens), xs=None, length=num_steps,
+            step, (cache, tokens), xs=keys, length=num_steps,
             unroll=min(unroll, num_steps),
         )
         return cache, jnp.swapaxes(toks[..., 0], 0, 1)   # (B, num_steps)

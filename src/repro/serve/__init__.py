@@ -1,2 +1,41 @@
-from repro.serve.engine import ServeEngine, Request, Result
+"""Serving: chunked (``ServeEngine``) and continuous (``ContinuousEngine``)
+engines over the same device-resident decode scan.
+
+Per-slot geometry contract (the continuous engine's correctness rests on
+it; the pieces live in the model, not the engine):
+
+  * ``cache["pos"]`` is ``(B,)`` — each batch slot decodes at ITS OWN
+    position: rope tables, the causal horizon, and the cache write
+    pointer all follow ``pos[slot]`` independently per row
+    (``LM.decode_step`` builds per-row rope from ``pos[:, None]``).
+  * ``cache["slot_pos"]`` is ``(B, C)`` — each row's per-cache-slot valid
+    positions; ``-1`` marks an empty slot and ``decode_attention`` masks
+    it, so a slot's visible context is exactly its own written history.
+    Ring caches (sliding window) reuse the same field with
+    ``slot = pos % C``.
+  * ``LM.prefill_into_slot(params, cache, prompt (1, S), slot)`` admits a
+    prompt into ONE row of a live cache: a solo forward (positions
+    0..S-1, no batch-mates, no padding — hidden states bit-identical to
+    serving the request alone), the row's k/v written in place, the
+    row's ``slot_pos`` RESET (fresh positions where written, -1
+    elsewhere — the retired occupant's stale KV is masked out, never
+    cleared), the row's ``pos`` set to S. All other rows pass through
+    untouched. One compiled program per prompt length; the slot index is
+    traced.
+
+Consequence: batch rows are fully independent — continuous-batching
+tokens are bit-identical to solo serving for ANY admission order, any
+chunk-mates, any retirement pattern. The chunked engine's mixed-length
+prefill padding (zero tokens the model attends to) is the one distortion
+this geometry removes.
+
+Host-side slot bookkeeping is ``serve/slots.py`` (free list, per-request
+emission, retire conditions); admission policy and micro-chunk sizing is
+``serve/scheduler.py``; samplers (vectorized per-slot temperature,
+``temperature <= 0`` → exact greedy) are ``serve/sampler.py``.
+"""
+
+from repro.serve.engine import ContinuousEngine, ServeEngine, Request, Result
 from repro.serve.sampler import greedy_sample, temperature_sample
+from repro.serve.scheduler import Scheduler
+from repro.serve.slots import SlotState, SlotTable, trim_at_eos

@@ -1,24 +1,34 @@
-"""Batched serving engine: fixed-size chunked batches, scan-decoded on device.
+"""Serving engines: chunked batches (``ServeEngine``) and continuous
+batching (``ContinuousEngine``).
 
-What is actually implemented (scope note): this engine serves requests in
-FIXED chunked batches — ``generate`` splits the request list into chunks of
-``batch_size``, and each chunk is prefilled together and decoded together
-to the chunk's longest ``max_new_tokens``. There is NO continuous batching:
-a finished slot idles (masked) until its chunk completes; new requests are
-not prefilled into freed slots mid-decode. Chunking is the single-program
-pjit-friendly shape — the whole batch steps together.
+Two engines share the device-resident hot path (one jitted
+``LM.decode_many`` scan per token block, on-device sampling, one
+device→host transfer) and differ in how requests map onto batch slots:
 
-The decode hot path is device-resident: after one prefill dispatch, the
-whole token block is produced by ONE jitted ``LM.decode_many`` call — a
-``lax.scan`` over decode steps that samples on-device and feeds tokens
-back without host round-trips. The host sees one dispatch and one
-device→host transfer per chunk (plus prefill), instead of one of each per
-token. On TPU the KV cache buffers are donated into the scan. Chunks
-shorter than ``batch_size`` pad with empty slots: zero prompts plus an
-empty-slot mask that pins their sampled tokens to 0 (no request data is
-duplicated into pad slots).
+``ServeEngine`` — FIXED chunked batches: ``generate`` splits the request
+list into chunks of ``batch_size``; each chunk is prefilled together and
+decoded together to the chunk's longest ``max_new_tokens``. A finished
+slot idles (masked) until its chunk completes, and mixed-length chunks
+left-pad prompts with zero tokens the model attends to (bucketing by
+prompt length minimizes this; equal-length chunks are pad-free). It is
+the single-compile, simplest-geometry path: best when requests arrive in
+homogeneous batches, and the bit-identical fallback the continuous
+engine is tested against.
 
-Pruned models serve two ways:
+``ContinuousEngine`` — SLOT-MANAGED continuous batching: each batch slot
+owns its KV rows (per-slot write position, per-slot valid-length mask,
+per-slot rotary offsets — see ``serve/slots.py``), decode runs in fixed
+micro-chunks of ``chunk_steps`` scanned steps, and BETWEEN chunks the
+scheduler retires slots that hit their own ``max_new_tokens``/``eos_id``
+and admits queued requests into freed slots via ``LM.prefill_into_slot``
+— a solo (1, S) prefill written into one row of the live cache, so
+admitted prompts are never distorted by chunk-mates' padding and live
+slots never notice the admission. Results stream per-request as they
+finish. Best under arrival processes and mixed-length/mixed-budget
+workloads — the batch stays full instead of draining to its slowest
+member.
+
+Pruned models serve two ways on either engine:
   * dense sparse — weights are already exactly sparse; no mask logic needed
     (the paper's baseline deployment: prune → retrain → deploy);
   * PACKED — pass a ``sparse.PrunedArtifact`` with ``packed=True`` and the
@@ -30,14 +40,17 @@ Pruned models serve two ways:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
-from repro.serve.sampler import greedy_sample
+from repro.serve.sampler import greedy_sample, temperature_sample
+from repro.serve.scheduler import Scheduler
+from repro.serve.slots import trim_at_eos
 
 
 @dataclasses.dataclass
@@ -45,12 +58,51 @@ class Request:
     uid: int
     prompt: jnp.ndarray              # (S,) int32 (or (S, D) embeddings)
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None     # stop after emitting this token
+    temperature: Optional[float] = None   # None or <= 0 → greedy
 
 
 @dataclasses.dataclass
 class Result:
     uid: int
     tokens: List[int]
+
+
+def _scan_decode_fns(model: LM, sampler: Callable):
+    """The masked decode-scan wrappers both engines jit: free/pad slots'
+    sampled tokens pin to 0 under ``mask``; the temp variant threads
+    per-slot temperatures and per-step keys (all traced arguments, so
+    new requests never retrace)."""
+
+    def scan_decode(p, cache, tok, mask, num_steps):
+        samp = lambda logits: sampler(logits) * mask[:, None]
+        return model.decode_many(p, cache, tok, num_steps, sampler=samp)
+
+    def scan_decode_temp(p, cache, tok, mask, temps, keys, num_steps):
+        samp = lambda logits, key: (
+            temperature_sample(logits, key, temps) * mask[:, None])
+        return model.decode_many(p, cache, tok, num_steps, sampler=samp,
+                                 keys=keys)
+
+    return scan_decode, scan_decode_temp
+
+
+def _resolve_params(model: LM, params: Any, packed: bool):
+    """Accept a raw params tree, a ``PruneResult``, or a ``PrunedArtifact``
+    and return bound serving params (packed or dense)."""
+    from repro.core.pruner import PruneResult
+    from repro.sparse import PrunedArtifact
+
+    if isinstance(params, PruneResult):
+        params = params.to_artifact()
+    if isinstance(params, PrunedArtifact):
+        return params.bind(model, packed=packed)
+    if packed:
+        raise TypeError(
+            "packed=True needs a PrunedArtifact (or PruneResult); got a "
+            "raw params tree — build one via PruneResult.to_artifact()"
+        )
+    return params
 
 
 class ServeEngine:
@@ -65,15 +117,20 @@ class ServeEngine:
         packed: bool = False,
         flash: Optional[bool] = None,
         bake_weights: Optional[bool] = None,
+        seed: int = 0,
     ):
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
         only) the engine serves the compressed representation through the
         scheme→kernel registry. ``sampler`` must be jit-compatible
         (``logits (B, 1, V) -> (B, 1) int32``) — it runs on device inside
-        the decode scan. ``flash`` forwards to ``LM.prefill``: None = auto
-        (Pallas flash attention on real TPU backends, XLA blockwise
-        otherwise/for unsupported shapes), True/False = force.
+        the decode scan. Requests that set ``temperature`` override it:
+        their chunk routes through the vectorized ``temperature_sample``
+        with a per-slot temperature array (requests without one sample
+        greedily there), keyed from ``seed``. ``flash`` forwards to
+        ``LM.prefill``: None = auto (Pallas flash attention on real TPU
+        backends, XLA blockwise otherwise/for unsupported shapes),
+        True/False = force.
 
         ``bake_weights`` — close the bound params over the jitted PREFILL
         closure as COMPILE-TIME constants instead of per-call arguments:
@@ -90,31 +147,17 @@ class ServeEngine:
         None = auto: on for CPU backends (where the XLA gather lowering
         gains the most and weights are host-resident anyway), off on
         TPU."""
-        from repro.core.pruner import PruneResult
-        from repro.sparse import PrunedArtifact
-
-        if isinstance(params, PruneResult):
-            params = params.to_artifact()
-        if isinstance(params, PrunedArtifact):
-            params = params.bind(model, packed=packed)
-        elif packed:
-            raise TypeError(
-                "packed=True needs a PrunedArtifact (or PruneResult); got a "
-                "raw params tree — build one via PruneResult.to_artifact()"
-            )
         self.model = model
-        self.params = params
+        self.params = _resolve_params(model, params, packed)
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.sampler = sampler
+        self._key = jax.random.PRNGKey(seed)
         backend = jax.default_backend()
         bake = (backend == "cpu") if bake_weights is None else bool(
             bake_weights)
 
-        def scan_decode(p, cache, tok, mask, num_steps):
-            # empty pad slots decode deterministic zeros (mask is (B,))
-            samp = lambda logits: sampler(logits) * mask[:, None]
-            return model.decode_many(p, cache, tok, num_steps, sampler=samp)
+        scan_decode, scan_decode_temp = _scan_decode_fns(model, sampler)
 
         if bake:
             # weight-specialized prefill: keeps the (p, x) call signature
@@ -148,6 +191,9 @@ class ServeEngine:
         self._decode_many = jax.jit(
             scan_decode, static_argnums=(4,), donate_argnums=donate
         )
+        self._decode_many_temp = jax.jit(
+            scan_decode_temp, static_argnums=(6,), donate_argnums=donate
+        )
 
     def generate(self, requests: List[Request]) -> List[Result]:
         """Serve a list of requests in fixed-size batches.
@@ -161,7 +207,12 @@ class ServeEngine:
         left-padded with zero tokens the model attends to, so tokens
         depend on chunk composition; bucketing MINIMIZES that padding
         (equal-length chunks are pad-free and match solo serving) but a
-        mixed-length tail chunk still pads. Results are returned in the
+        mixed-length tail chunk still pads — ``ContinuousEngine`` removes
+        the distortion entirely via per-slot solo prefill. Each request's
+        emitted tokens honor ITS stop conditions: trimmed to its own
+        ``max_new_tokens`` and (when ``eos_id`` is set) at the first eos,
+        eos included — the same contract the continuous engine enforces
+        at retirement, so both engines agree. Results are returned in the
         ORIGINAL request order regardless of the serving order.
         """
         order = sorted(range(len(requests)),
@@ -194,18 +245,236 @@ class ServeEngine:
         # scan length is trimmed per chunk: this chunk's longest request,
         # not a global engine-wide maximum
         max_new = max(r.max_new_tokens for r in requests)
-        tok0 = self.sampler(logits) * slot_mask[:, None]
-        if max_new > 1:
-            _, rest = self._decode_many(self.params, cache, tok0,
-                                        slot_mask, max_new - 1)
-            toks = jnp.concatenate([tok0, rest], axis=1)   # (B, max_new)
+        use_temp = any(r.temperature is not None for r in requests)
+        if use_temp:
+            temps = jnp.asarray(
+                [r.temperature if r.temperature is not None else 0.0
+                 for r in requests] + [0.0] * (B - n), jnp.float32)
+            self._key, k0, kd = jax.random.split(self._key, 3)
+            tok0 = temperature_sample(logits, k0, temps) \
+                * slot_mask[:, None]
+            if max_new > 1:
+                keys = jax.random.split(kd, max_new - 1)
+                _, rest = self._decode_many_temp(
+                    self.params, cache, tok0, slot_mask, temps, keys,
+                    max_new - 1)
+                toks = jnp.concatenate([tok0, rest], axis=1)
+            else:
+                toks = tok0
         else:
-            toks = tok0
+            tok0 = self.sampler(logits) * slot_mask[:, None]
+            if max_new > 1:
+                _, rest = self._decode_many(self.params, cache, tok0,
+                                            slot_mask, max_new - 1)
+                toks = jnp.concatenate([tok0, rest], axis=1)  # (B, max_new)
+            else:
+                toks = tok0
         # ONE device→host transfer for the whole token block (a per-token
         # int() loop on a device array would issue B·T blocking syncs)
         toks_np = np.asarray(jax.device_get(toks))
         return [
             Result(uid=r.uid,
-                   tokens=[int(t) for t in toks_np[j, : r.max_new_tokens]])
+                   tokens=trim_at_eos(
+                       [int(t) for t in toks_np[j, : r.max_new_tokens]],
+                       r.eos_id))
             for j, r in enumerate(requests)
         ]
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: slot-managed KV cache, in-flight
+    admission, streaming results.
+
+    The decode loop is the same device-resident scan as ``ServeEngine``
+    (one dispatch + one host transfer per micro-chunk of ``chunk_steps``
+    steps); between chunks the host-side ``Scheduler`` retires finished
+    slots and admits queued requests into them via
+    ``LM.prefill_into_slot`` — a solo (1, S) prefill whose KV lands in
+    one row of the LIVE cache. Per-slot geometry (each row's own ``pos``,
+    its own valid-length ``slot_pos`` mask, its own rope offsets) makes
+    every slot independent: tokens are bit-identical to serving each
+    request ALONE, for any admission order and any chunk-mates — the
+    chunked engine's mixed-length padding distortion cannot happen here.
+
+    Sampling is per-request: ``Request.temperature`` (None or <= 0 →
+    greedy). A chunk with any stochastic slot routes through the
+    vectorized ``temperature_sample`` whose per-slot temperature array is
+    a traced argument — admissions never retrace the decode program.
+
+    One compiled slot-prefill program per distinct prompt length (like
+    the chunked engine's per-chunk-shape prefill); decode compiles at
+    most ``chunk_steps`` scan lengths (the tail trims to the longest
+    remaining budget). ``family="ssm"`` recurrent caches are not
+    supported (no KV rows to manage); use ``ServeEngine``.
+    """
+
+    def __init__(
+        self,
+        model: LM,
+        params: Any,
+        *,
+        batch_size: int,
+        max_seq_len: int,
+        chunk_steps: int = 8,
+        packed: bool = False,
+        flash: Optional[bool] = None,
+        seed: int = 0,
+    ):
+        if model.config.family == "ssm":
+            raise NotImplementedError(
+                "ContinuousEngine manages KV-cache slots; xLSTM "
+                "recurrent-state admission is not implemented — use "
+                "ServeEngine"
+            )
+        if chunk_steps < 1:
+            raise ValueError("chunk_steps must be >= 1")
+        self.model = model
+        self.params = _resolve_params(model, params, packed)
+        self.batch_size = batch_size
+        self.max_seq_len = max_seq_len
+        self.chunk_steps = chunk_steps
+        self._key = jax.random.PRNGKey(seed)
+        spec = model.cache_spec(max_seq_len)
+        self._capacity, self._ring = spec.capacity, spec.ring
+        self.stats: Dict[str, Any] = {}
+
+        def admit_greedy(p, cache, tok, prompt, slot):
+            cache, logits = model.prefill_into_slot(p, cache, prompt, slot,
+                                                    flash=flash)
+            first = greedy_sample(logits)                      # (1, 1)
+            tok = jax.lax.dynamic_update_slice(
+                tok, first, (jnp.asarray(slot, jnp.int32), jnp.int32(0)))
+            return cache, tok, first
+
+        def admit_temp(p, cache, tok, prompt, slot, key, temp):
+            cache, logits = model.prefill_into_slot(p, cache, prompt, slot,
+                                                    flash=flash)
+            first = temperature_sample(logits, key, temp)
+            tok = jax.lax.dynamic_update_slice(
+                tok, first, (jnp.asarray(slot, jnp.int32), jnp.int32(0)))
+            return cache, tok, first
+
+        chunk_greedy, chunk_temp = _scan_decode_fns(model, greedy_sample)
+
+        donate = (1,) if jax.default_backend() == "tpu" else ()
+        # slot admission recompiles per prompt length S only (slot index,
+        # temperature, and key are traced)
+        self._admit_greedy = jax.jit(admit_greedy, donate_argnums=donate)
+        self._admit_temp = jax.jit(admit_temp, donate_argnums=donate)
+        self._chunk_greedy = jax.jit(
+            chunk_greedy, static_argnums=(4,), donate_argnums=donate)
+        self._chunk_temp = jax.jit(
+            chunk_temp, static_argnums=(6,), donate_argnums=donate)
+
+    # ---- public API --------------------------------------------------------
+
+    def generate(self, requests: List[Request], *,
+                 arrivals: Optional[Sequence[float]] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 ) -> List[Result]:
+        """Serve to completion; results in the ORIGINAL request order."""
+        results: List[Optional[Result]] = [None] * len(requests)
+        for order, res in self._run(requests, arrivals=arrivals,
+                                    clock=clock):
+            results[order] = res
+        return results  # type: ignore[return-value]
+
+    def stream(self, requests: List[Request], *,
+               arrivals: Optional[Sequence[float]] = None,
+               clock: Optional[Callable[[], float]] = None,
+               ) -> Iterator[Result]:
+        """Yield each request's ``Result`` the moment it finishes
+        (COMPLETION order — short requests overtake long chunk-mates).
+
+        ``arrivals``: optional per-request arrival offsets (seconds);
+        a request is only admitted once the clock passes its arrival.
+        ``clock``: elapsed-seconds callable (default: wall clock anchored
+        at the first call); an injected clock must advance on its own.
+        """
+        for _, res in self._run(requests, arrivals=arrivals, clock=clock):
+            yield res
+
+    # ---- the serve loop ----------------------------------------------------
+
+    def _run(self, requests: List[Request],
+             arrivals: Optional[Sequence[float]],
+             clock: Optional[Callable[[], float]],
+             ) -> Iterator[Tuple[int, Result]]:
+        n = len(requests)
+        arr = [0.0] * n if arrivals is None else [float(a) for a in arrivals]
+        if len(arr) != n:
+            raise ValueError("arrivals must match requests")
+        for r in requests:
+            S = int(r.prompt.shape[0])
+            if not self._ring and S + r.max_new_tokens - 1 > self._capacity:
+                raise ValueError(
+                    f"request uid={r.uid}: prompt {S} + max_new_tokens "
+                    f"{r.max_new_tokens} exceeds cache capacity "
+                    f"{self._capacity} — raise max_seq_len"
+                )
+
+        sched = Scheduler(self.batch_size, self.chunk_steps)
+        for i in sorted(range(n), key=lambda i: arr[i]):   # FIFO by arrival
+            sched.submit(i, requests[i], arr[i])
+
+        cache = self.model.init_cache(self.batch_size, self.max_seq_len)
+        tok = jnp.zeros((self.batch_size, 1), jnp.int32)
+        t0 = time.perf_counter()
+        now = clock if clock is not None \
+            else (lambda: time.perf_counter() - t0)
+
+        while not sched.done:
+            # ---- admit arrived requests into free slots -------------------
+            for st in sched.ready_admissions(now()):
+                r = st.request
+                prompt = r.prompt[None, ...]
+                if r.temperature is not None and r.temperature > 0:
+                    self._key, k = jax.random.split(self._key)
+                    cache, tok, first = self._admit_temp(
+                        self.params, cache, tok, prompt, st.slot, k,
+                        float(r.temperature))
+                else:
+                    cache, tok, first = self._admit_greedy(
+                        self.params, cache, tok, prompt, st.slot)
+                # the admission's one host sync: the first token (needed
+                # for the eos/max_new check before the next chunk)
+                if st.push([int(np.asarray(first)[0, 0])]):
+                    sched.table.retire(st.slot)
+                    yield st.order, Result(uid=r.uid, tokens=st.emitted)
+
+            if not sched.table.active:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                wait = nxt - now()
+                if wait > 0:
+                    # real clock: sleep toward the next arrival; injected
+                    # clock: yield briefly instead of busy-spinning (the
+                    # clock advances on its own)
+                    time.sleep(min(wait, 0.05) if clock is None else 1e-4)
+                continue
+
+            # ---- one decode micro-chunk -----------------------------------
+            K = sched.chunk_len()
+            mask = jnp.asarray(sched.table.active_mask())
+            if sched.table.any_stochastic():
+                temps = jnp.asarray(sched.table.temperatures())
+                self._key, kd = jax.random.split(self._key)
+                keys = jax.random.split(kd, K)
+                cache, toks = self._chunk_temp(
+                    self.params, cache, tok, mask, temps, keys, K)
+            else:
+                cache, toks = self._chunk_greedy(
+                    self.params, cache, tok, mask, K)
+            tok = toks[:, -1:]
+            # ONE device→host transfer per chunk
+            toks_np = np.asarray(jax.device_get(toks))
+            for st in sched.absorb_chunk(toks_np, K):
+                yield st.order, Result(uid=st.request.uid, tokens=st.emitted)
+
+        self.stats = {
+            "chunks": sched.chunks,
+            "occupancy": sched.occupancy(),
+            "busy_slot_steps": sched.busy_slot_steps,
+            "total_slot_steps": sched.total_slot_steps,
+        }

@@ -1,4 +1,18 @@
-"""Token samplers for the serving engine."""
+"""Token samplers for the serving engines.
+
+Samplers are jit-compatible ``logits (B, 1, V) -> (B, 1) int32`` and run
+ON DEVICE inside the decode scan (``LM.decode_many``). ``temperature_sample``
+is VECTORIZED over the batch: ``temperature`` may be a scalar (broadcast,
+the original behavior) or a per-slot ``(B,)`` array, which is how the
+engines serve per-request temperatures from ONE compiled decode program —
+the temperature array is a traced argument, so admitting a request with a
+different temperature never retraces.
+
+``temperature <= 0`` means GREEDY, exactly: those slots route to
+``greedy_sample``'s argmax instead of dividing by a tiny epsilon and
+sampling (which would be near-argmax with categorical noise — wrong for
+a user who asked for deterministic decoding).
+"""
 
 from __future__ import annotations
 
@@ -12,9 +26,19 @@ def greedy_sample(logits: jnp.ndarray, key=None) -> jnp.ndarray:
 
 
 def temperature_sample(logits: jnp.ndarray, key: jax.Array,
-                       temperature: float = 1.0) -> jnp.ndarray:
-    scaled = logits.astype(jnp.float32) / max(temperature, 1e-6)
+                       temperature=1.0) -> jnp.ndarray:
+    """logits: (B, 1, V) → (B, 1) int32.
+
+    ``temperature``: python float, scalar array, or per-slot ``(B,)``
+    array. Slots with ``temperature <= 0`` take the greedy argmax
+    (bit-identical to ``greedy_sample``); the rest divide by their own
+    temperature and sample categorically under ``key`` (one key per step
+    — rows draw independent samples from it).
+    """
     B = logits.shape[0]
-    flat = scaled.reshape(B, -1)
-    toks = jax.random.categorical(key, flat, axis=-1)
-    return toks[:, None].astype(jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    flat = logits.astype(jnp.float32).reshape(B, -1)
+    scaled = flat / jnp.maximum(t, 1e-6)[:, None]
+    toks = jax.random.categorical(key, scaled, axis=-1)[:, None]
+    return jnp.where(t[:, None] <= 0.0, greedy_sample(logits),
+                     toks.astype(jnp.int32))

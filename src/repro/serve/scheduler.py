@@ -1,0 +1,113 @@
+"""Continuous-batching scheduler: admission queue + retire/admit policy.
+
+Sits between the host request stream and the device-resident decode scan.
+The engine decodes in fixed micro-chunks of K scanned steps (one dispatch,
+one host transfer — the PR-2 property); BETWEEN chunks the scheduler:
+
+  * retires slots whose request hit its own ``max_new_tokens`` or emitted
+    its ``eos_id`` (``absorb_chunk``);
+  * admits queued requests into the freed slots (``ready_admissions`` —
+    FIFO among requests whose arrival time has passed);
+  * trims the NEXT chunk's scan length to the longest remaining budget
+    among live slots (``chunk_len`` — at most ``chunk_steps`` distinct
+    compiled lengths, so the tail of a workload never scans dead air).
+
+All of this is host-side bookkeeping over ``slots.SlotTable``; the device
+never sees the queue. Occupancy accounting (busy slot-steps over total
+slot-steps) rides along because it falls out of the same loop and is the
+number the continuous-vs-static benchmark gates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serve.slots import SlotState, SlotTable
+
+
+@dataclasses.dataclass
+class _Queued:
+    order: int
+    request: Any
+    arrival: float
+
+
+class Scheduler:
+    """FIFO admission over a ``SlotTable`` plus per-chunk retire logic."""
+
+    def __init__(self, batch_size: int, chunk_steps: int):
+        if chunk_steps < 1:
+            raise ValueError("chunk_steps must be >= 1")
+        self.table = SlotTable(batch_size)
+        self.chunk_steps = chunk_steps
+        self._queue: Deque[_Queued] = deque()
+        # occupancy accounting (slot-steps)
+        self.busy_slot_steps = 0
+        self.total_slot_steps = 0
+        self.chunks = 0
+
+    # ---- queue -------------------------------------------------------------
+
+    def submit(self, order: int, request: Any, arrival: float = 0.0) -> None:
+        self._queue.append(_Queued(order, request, arrival))
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def done(self) -> bool:
+        return not self._queue and not self.table.active
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival if self._queue else None
+
+    # ---- admission ---------------------------------------------------------
+
+    def ready_admissions(self, now: float) -> Iterator[SlotState]:
+        """Pop arrived requests into free slots, FIFO, until either runs
+        out. The caller runs the slot prefill for each yielded state."""
+        while self.table.num_free and self._queue \
+                and self._queue[0].arrival <= now:
+            q = self._queue.popleft()
+            yield self.table.admit(q.order, q.request, now)
+
+    # ---- micro-chunk -------------------------------------------------------
+
+    def chunk_len(self) -> int:
+        """Scan length for the next micro-chunk: the fixed ``chunk_steps``
+        trimmed to the longest remaining token budget among live slots,
+        rounded UP to a power of two — the tail never scans more than 2x
+        dead air, and the engine compiles at most log2(chunk_steps)+1
+        distinct scan lengths (each length is its own XLA program).
+        """
+        need = max(1, min(self.chunk_steps, self.table.max_remaining()))
+        k = 1
+        while k < need:
+            k *= 2
+        return min(k, self.chunk_steps)
+
+    def absorb_chunk(self, toks: np.ndarray, steps: int) -> List[SlotState]:
+        """Feed a decoded ``(B, steps)`` token block to the live slots;
+        retire and return the states that finished (any order)."""
+        finished = []
+        for slot in list(self.table.active):
+            st = self.table.active[slot]
+            before = len(st.emitted)
+            done = st.push(toks[slot, :steps])
+            self.busy_slot_steps += len(st.emitted) - before
+            if done:
+                finished.append(self.table.retire(slot))
+        self.total_slot_steps += self.table.batch_size * steps
+        self.chunks += 1
+        return finished
+
+    def occupancy(self) -> float:
+        """Mean fraction of decode slot-steps spent on live requests."""
+        if not self.total_slot_steps:
+            return 0.0
+        return self.busy_slot_steps / self.total_slot_steps

@@ -1,0 +1,211 @@
+"""Continuous-batching engine (ISSUE-4 acceptance paths).
+
+The correctness bar is BIT-IDENTITY TO SOLO SERVING: per-slot geometry
+(own pos, own valid-length mask, own rope offsets, solo slot prefill)
+makes every batch row independent, so the continuous engine must emit
+exactly the tokens each request would get served alone — for any
+admission order, any chunk-mates, any slot-reuse pattern, dense or
+packed. Mixed-length workloads are the discriminating case: the chunked
+engine's prefill left-pads them with zero tokens the model attends to
+(documented distortion); the continuous engine must not.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve.scheduler import Scheduler
+from repro.serve.slots import SlotTable, trim_at_eos
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256,
+                      vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def artifact(lm):
+    cfg, model, params = lm
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 64, "tile_group_q": 8,
+                          "tile_keep": 4}},
+    )
+    return greedy_prune(params, pcfg).to_artifact(arch="tiny").pack()
+
+
+def _solo(model, params, requests, max_seq_len=64):
+    """Reference: each request served ALONE (B=1 chunk, pad-free)."""
+    eng = ServeEngine(model, params, batch_size=1, max_seq_len=max_seq_len)
+    return [eng.generate([r])[0].tokens for r in requests]
+
+
+class TestContinuousIdentity:
+    @pytest.mark.parametrize("packed", [False, True])
+    def test_equal_length_continuous_static_solo(self, lm, artifact, packed):
+        """Equal-length workload: continuous ≡ static ≡ solo, dense and
+        packed (equal lengths are the static engine's pad-free case, so
+        all three must agree exactly)."""
+        cfg, model, params = lm
+        reqs = [Request(uid=i, prompt=(jnp.arange(8) + i) % cfg.vocab_size,
+                        max_new_tokens=5) for i in range(4)]
+        p = artifact.bind(model, packed=packed)
+        ref = _solo(model, p, reqs)
+        static = ServeEngine(model, artifact, batch_size=2, max_seq_len=64,
+                             packed=packed)
+        cont = ContinuousEngine(model, artifact, batch_size=2,
+                                max_seq_len=64, chunk_steps=3, packed=packed)
+        assert [r.tokens for r in static.generate(reqs)] == ref
+        assert [r.tokens for r in cont.generate(reqs)] == ref
+
+    @pytest.mark.parametrize("packed", [False, True])
+    def test_mixed_length_matches_solo(self, lm, artifact, packed):
+        """Mixed-length workload: continuous == solo EXACTLY — the
+        per-slot solo prefill removes the chunked engine's zero-pad
+        attention distortion."""
+        cfg, model, params = lm
+        reqs = [Request(uid=i,
+                        prompt=(jnp.arange(3 + 4 * i) + i) % cfg.vocab_size,
+                        max_new_tokens=4 + i) for i in range(5)]
+        p = artifact.bind(model, packed=packed)
+        ref = _solo(model, p, reqs)
+        cont = ContinuousEngine(model, artifact, batch_size=2,
+                                max_seq_len=64, chunk_steps=4, packed=packed)
+        out = cont.generate(reqs)
+        assert [r.tokens for r in out] == ref
+        assert [r.uid for r in out] == [r.uid for r in reqs]  # original order
+
+    def test_slot_reuse_unaffected_by_retired_occupant(self, lm):
+        """A request admitted into a freed slot sees NONE of the retired
+        occupant's KV: with batch_size=1 every request reuses the same
+        slot, so each must still match solo serving."""
+        cfg, model, params = lm
+        reqs = [Request(uid=i,
+                        prompt=(jnp.arange(4 + 3 * i) + 7 * i)
+                        % cfg.vocab_size,
+                        max_new_tokens=6) for i in range(3)]
+        ref = _solo(model, params, reqs)
+        cont = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                                chunk_steps=4)
+        assert [r.tokens for r in cont.generate(reqs)] == ref
+
+    def test_stream_yields_in_completion_order(self, lm):
+        """Short requests finish (and stream) before long chunk-mates;
+        generate still restores the original order."""
+        cfg, model, params = lm
+        reqs = [Request(uid=0, prompt=jnp.arange(6), max_new_tokens=12),
+                Request(uid=1, prompt=jnp.arange(6) + 1, max_new_tokens=2)]
+        cont = ContinuousEngine(model, params, batch_size=2, max_seq_len=64,
+                                chunk_steps=3)
+        streamed = list(cont.stream(reqs))
+        assert [r.uid for r in streamed] == [1, 0]
+        ordered = cont.generate(reqs)
+        assert [r.uid for r in ordered] == [0, 1]
+        assert {r.uid: r.tokens for r in streamed} \
+            == {r.uid: r.tokens for r in ordered}
+
+    def test_sliding_window_ring_cache(self, lm):
+        """Ring caches (sliding window < max_seq_len) keep per-slot
+        geometry: continuous == solo through wraparound."""
+        cfg = ModelConfig(name="tinyw", family="dense", num_layers=2,
+                          d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                          vocab_size=64, param_dtype="float32",
+                          sliding_window=8)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        reqs = [Request(uid=i, prompt=jnp.arange(3 + 5 * i) % 64,
+                        max_new_tokens=7) for i in range(3)]
+        ref = _solo(model, params, reqs, max_seq_len=32)
+        cont = ContinuousEngine(model, params, batch_size=2, max_seq_len=32,
+                                chunk_steps=3)
+        assert [r.tokens for r in cont.generate(reqs)] == ref
+
+
+class TestStopConditions:
+    def test_eos_agreement_static_continuous_solo(self, lm):
+        """Both engines stop after the request's own eos (eos emitted,
+        nothing past it) and agree with the solo-trimmed reference."""
+        cfg, model, params = lm
+        probe = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=10)
+        full = _solo(model, params, [probe])[0]
+        eos = full[2]                    # force a stop 3 tokens in
+        req = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=10,
+                      eos_id=eos)
+        want = trim_at_eos(full, eos)
+        static = ServeEngine(model, params, batch_size=4, max_seq_len=64)
+        cont = ContinuousEngine(model, params, batch_size=4, max_seq_len=64,
+                                chunk_steps=8)
+        assert static.generate([req])[0].tokens == want
+        assert cont.generate([req])[0].tokens == want
+        assert want[-1] == eos and len(want) < len(full)
+
+    def test_per_request_max_new_exact(self, lm):
+        """Every request gets exactly ITS max_new_tokens even when its
+        chunk-mates decode further (static discards; continuous retires
+        the slot)."""
+        cfg, model, params = lm
+        reqs = [Request(uid=i, prompt=jnp.arange(8), max_new_tokens=m)
+                for i, m in enumerate((2, 9, 5))]
+        ref = _solo(model, params, reqs)
+        static = ServeEngine(model, params, batch_size=4, max_seq_len=64)
+        cont = ContinuousEngine(model, params, batch_size=4, max_seq_len=64,
+                                chunk_steps=4)
+        for eng in (static, cont):
+            out = eng.generate(reqs)
+            assert [len(r.tokens) for r in out] == [2, 9, 5]
+            assert [r.tokens for r in out] == ref
+
+    def test_capacity_validation(self, lm):
+        cfg, model, params = lm
+        cont = ContinuousEngine(model, params, batch_size=2, max_seq_len=16,
+                                chunk_steps=4)
+        bad = Request(uid=0, prompt=jnp.arange(10), max_new_tokens=16)
+        with pytest.raises(ValueError, match="exceeds cache capacity"):
+            cont.generate([bad])
+
+
+class TestSchedulerTable:
+    def test_slot_table_free_list(self):
+        t = SlotTable(2)
+        a = t.admit(0, Request(uid=0, prompt=jnp.arange(2)))
+        b = t.admit(1, Request(uid=1, prompt=jnp.arange(2)))
+        assert t.num_free == 0 and {a.slot, b.slot} == {0, 1}
+        with pytest.raises(RuntimeError):
+            t.admit(2, Request(uid=2, prompt=jnp.arange(2)))
+        t.retire(a.slot)
+        c = t.admit(2, Request(uid=2, prompt=jnp.arange(2)))
+        assert c.slot == a.slot
+        assert list(t.active_mask()) == [1, 1]
+
+    def test_scheduler_fifo_and_arrival_gating(self):
+        s = Scheduler(batch_size=2, chunk_steps=4)
+        for i, arr in enumerate((0.0, 0.0, 1.0)):
+            s.submit(i, Request(uid=i, prompt=jnp.arange(2),
+                                max_new_tokens=4), arr)
+        admitted = [st.order for st in s.ready_admissions(now=0.0)]
+        assert admitted == [0, 1]            # FIFO; order 2 not arrived
+        assert s.pending == 1
+        assert s.next_arrival() == 1.0
+        # chunk_len trims to the longest remaining budget
+        assert s.chunk_len() == 4
+        toks = np.zeros((2, 4), np.int64)
+        done = s.absorb_chunk(toks, 4)        # both emitted 4 == max_new
+        assert sorted(st.order for st in done) == [0, 1]
+        assert [st.order for st in s.ready_admissions(now=2.0)] == [2]
+
+    def test_occupancy_accounting(self):
+        s = Scheduler(batch_size=4, chunk_steps=8)
+        s.submit(0, Request(uid=0, prompt=jnp.arange(2), max_new_tokens=8))
+        list(s.ready_admissions(0.0))
+        s.absorb_chunk(np.zeros((4, 8), np.int64), 8)
+        assert s.occupancy() == pytest.approx(8 / 32)

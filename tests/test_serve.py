@@ -51,6 +51,56 @@ def test_temperature_sampling_valid(setup):
     assert int(toks.max()) < cfg.vocab_size
 
 
+def test_temperature_zero_routes_to_greedy():
+    """temperature <= 0 must be EXACT argmax — not near-argmax with
+    categorical noise from dividing by an epsilon."""
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 1, 97))
+    want = greedy_sample(logits)
+    for t in (0.0, -1.0):
+        got = temperature_sample(logits, jax.random.PRNGKey(4), t)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_temperature_per_slot_array():
+    """Per-slot (B,) temperatures: zero slots take the greedy argmax,
+    positive slots sample; a scalar broadcasts to the same result as the
+    equivalent constant array (original behavior preserved)."""
+    logits = jax.random.normal(jax.random.PRNGKey(5), (3, 1, 97))
+    key = jax.random.PRNGKey(6)
+    temps = jnp.asarray([0.0, 0.7, 0.0])
+    got = np.asarray(temperature_sample(logits, key, temps))
+    greedy = np.asarray(greedy_sample(logits))
+    assert got.shape == (3, 1)
+    assert got[0, 0] == greedy[0, 0] and got[2, 0] == greedy[2, 0]
+    scalar = np.asarray(temperature_sample(logits, key, 0.7))
+    arr = np.asarray(temperature_sample(logits, key,
+                                        jnp.full((3,), 0.7)))
+    assert np.array_equal(scalar, arr)
+
+
+def test_static_engine_eos_and_per_request_temperature(setup):
+    """Static path: eos_id trims post-hoc (eos emitted, nothing past it);
+    a greedy-slot request in a stochastic chunk still matches pure-greedy
+    serving (temperature routes per slot, not per chunk)."""
+    cfg, model, params = setup
+    eng = ServeEngine(model, params, batch_size=2, max_seq_len=64)
+    base = Request(uid=0, prompt=jnp.arange(8), max_new_tokens=8)
+    full = eng.generate([base])[0].tokens
+    eos = full[3]
+    trimmed = eng.generate([Request(uid=0, prompt=jnp.arange(8),
+                                    max_new_tokens=8, eos_id=eos)])[0]
+    cut = full.index(eos)                  # greedy tokens may repeat
+    assert trimmed.tokens == full[: cut + 1] and trimmed.tokens[-1] == eos
+
+    mixed = [Request(uid=0, prompt=jnp.arange(8), max_new_tokens=8,
+                     temperature=0.9),
+             Request(uid=1, prompt=jnp.arange(8), max_new_tokens=8)]
+    out = eng.generate(mixed)
+    assert out[1].tokens == full          # greedy slot unaffected
+    assert len(out[0].tokens) == 8
+    assert all(0 <= t < cfg.vocab_size for t in out[0].tokens)
+
+
 def test_pruned_model_serves(setup):
     """The paper's deployment story: serve the exactly-sparse pruned model."""
     cfg, model, params = setup
