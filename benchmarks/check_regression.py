@@ -1,188 +1,270 @@
 """CI gate: fail if the serving hot path regresses below its contracts.
 
-Two benchmark files feed it:
+One TABLE-DRIVEN gate spec per benchmark file (``GATES``): each
+``GateSpec`` names the JSON it reads, the rows that must exist, an
+optional ``derive`` step for cross-row metrics, and a list of ``Check``
+rows — a metric, a comparison, and where its threshold comes from
+(default < env var < CLI flag). Adding a gate for the next bench is one
+``GateSpec`` entry; the runner below never changes.
 
-``experiments/bench/BENCH_packed_serve.json`` (``benchmarks/packed_serve.py``)
-— the per-chunk packed-vs-dense contract the paper's claims rest on:
+The current contracts:
 
-  * tokens_identical — packed decode must be token-identical to dense
-    (a wrong-but-fast kernel is a correctness regression, full stop);
-  * decode_ratio_vs_dense >= threshold — the compressed representation
-    must not decode slower than dense (default 1.0; override with
-    ``--min-ratio`` / REPRO_MIN_DECODE_RATIO, e.g. 0.95 to tolerate
-    measurement noise on shared CI boxes);
-  * cpu_ms_prefill(packed) <= cpu_ms_prefill(dense) × factor — the
-    large-M half of the hot path must not regress either (default factor
-    1.05; ``--max-prefill-factor`` / REPRO_MAX_PREFILL_FACTOR);
-  * weight_bytes_ratio >= threshold — packed weights must be smaller by
-    at least the scheme's structural rate minus overhead (default 1.6 at
-    4-of-8 lanes; ``--min-bytes-ratio`` / REPRO_MIN_BYTES_RATIO).
+``BENCH_packed_serve.json`` (``benchmarks/packed_serve.py``) — the
+per-chunk packed-vs-dense contract the paper's claims rest on: packed
+decode must be token-identical to dense and not slower
+(``REPRO_MIN_DECODE_RATIO``), packed prefill within a factor of dense
+(``REPRO_MAX_PREFILL_FACTOR``), packed weights structurally smaller
+(``REPRO_MIN_BYTES_RATIO``).
 
-``experiments/bench/BENCH_continuous_serve.json``
-(``benchmarks/continuous_serve.py``) — the continuous-batching contract
-under the Poisson mixed-length workload:
+``BENCH_continuous_serve.json`` (``benchmarks/continuous_serve.py``) —
+continuous batching under the Poisson mixed workload: continuous tokens
+bit-identical to solo serving (slot isolation), packed == dense within
+each engine, continuous packed throughput >= static chunked
+(``REPRO_MIN_CONTINUOUS_RATIO``).
 
-  * tokens_match_solo — every CONTINUOUS request's tokens must equal
-    serving it alone: per-slot geometry removes the chunked engine's
-    mixed-length padding distortion, so any mismatch is a slot-isolation
-    bug (static rows are informational — their distortion is documented);
-  * tokens_identical — packed == dense within each engine;
-  * continuous_vs_static_ratio (packed) >= threshold — continuous
-    batching must not serve the mixed workload slower than fixed chunks
-    (default 1.0; ``--min-continuous-ratio`` /
-    REPRO_MIN_CONTINUOUS_RATIO; the bench acceptance target is 1.3).
+``BENCH_speculative_serve.json`` (``benchmarks/speculative_serve.py``) —
+draft/verify serving: greedy speculative tokens bit-identical to dense
+greedy (ANY drafter — the verifier certifies every token, so a miss is a
+rollback/lockstep bug), and the packed-drafter row at least as fast as
+dense decoding (``REPRO_MIN_SPEC_RATIO``).
 
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
-    PYTHONPATH=src:. python benchmarks/packed_serve.py       # regenerate
-    PYTHONPATH=src:. python benchmarks/continuous_serve.py   # regenerate
-    python benchmarks/check_regression.py                    # gate
+    PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
+    PYTHONPATH=src:. python benchmarks/continuous_serve.py    # regenerate
+    PYTHONPATH=src:. python benchmarks/speculative_serve.py   # regenerate
+    python benchmarks/check_regression.py                     # gate
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
+from typing import Any, Callable, Dict, Optional, Tuple
 
 _ROOT = (os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
          if "__file__" in globals() else ".")
-DEFAULT_PATH = os.path.join(_ROOT, "experiments", "bench",
-                            "BENCH_packed_serve.json")
-DEFAULT_CONTINUOUS_PATH = os.path.join(_ROOT, "experiments", "bench",
-                                       "BENCH_continuous_serve.json")
+_BENCH_DIR = os.path.join(_ROOT, "experiments", "bench")
+
+RowKey = Tuple[str, ...]
 
 
-def check(path: str, min_ratio: float, max_prefill_factor: float = 1.05,
-          min_bytes_ratio: float = 1.6) -> int:
+@dataclasses.dataclass(frozen=True)
+class Check:
+    """One gated metric: ``row[metric] op threshold`` (or truthy)."""
+
+    metric: str
+    op: str                          # ">=" | "<=" | "truthy"
+    row: Optional[RowKey] = None     # None → every row
+    default: Optional[float] = None  # threshold (None for "truthy")
+    env: Optional[str] = None        # env var overriding the threshold
+    flag: Optional[str] = None       # CLI flag overriding env/default
+    why: str = ""                    # one line shown on failure
+
+
+@dataclasses.dataclass(frozen=True)
+class GateSpec:
+    """Everything the runner needs to gate one benchmark file."""
+
+    name: str                        # bench stem, e.g. "packed_serve"
+    path_flag: str                   # CLI flag for the JSON path
+    key_fields: RowKey               # row fields forming the row key
+    required: Tuple[RowKey, ...]     # row keys that must exist
+    checks: Tuple[Check, ...]
+    derive: Optional[Callable[[Dict[RowKey, dict]], None]] = None
+    summary: Optional[Callable[[Dict[RowKey, dict]], str]] = None
+
+    @property
+    def default_path(self) -> str:
+        return os.path.join(_BENCH_DIR, f"BENCH_{self.name}.json")
+
+
+def _derive_packed(by_key: Dict[RowKey, dict]) -> None:
+    pk, de = by_key[("packed",)], by_key[("dense",)]
+    pf_p, pf_d = pk.get("cpu_ms_prefill"), de.get("cpu_ms_prefill")
+    if pf_p is not None and pf_d:
+        pk["prefill_factor_vs_dense"] = pf_p / pf_d
+
+
+GATES: Tuple[GateSpec, ...] = (
+    GateSpec(
+        name="packed_serve",
+        path_flag="--path",
+        key_fields=("mode",),
+        required=(("dense",), ("packed",)),
+        derive=_derive_packed,
+        checks=(
+            Check(metric="tokens_identical", op="truthy",
+                  why="packed decode must be token-identical to dense — a "
+                      "wrong-but-fast kernel is a correctness regression"),
+            Check(metric="decode_ratio_vs_dense", op=">=", row=("packed",),
+                  default=1.0, env="REPRO_MIN_DECODE_RATIO",
+                  flag="--min-ratio",
+                  why="the compressed representation must not decode "
+                      "slower than dense"),
+            Check(metric="prefill_factor_vs_dense", op="<=", row=("packed",),
+                  default=1.05, env="REPRO_MAX_PREFILL_FACTOR",
+                  flag="--max-prefill-factor",
+                  why="the large-M half of the hot path must not regress"),
+            Check(metric="weight_bytes_ratio", op=">=", row=("packed",),
+                  default=1.6, env="REPRO_MIN_BYTES_RATIO",
+                  flag="--min-bytes-ratio",
+                  why="packed weights must be smaller by the scheme's "
+                      "structural rate minus overhead"),
+        ),
+        summary=lambda bk: (
+            f"packed decode {bk[('packed',)].get('decode_ratio_vs_dense')}x "
+            f"dense, prefill "
+            f"{bk[('packed',)].get('prefill_ratio_vs_dense', '?')}x dense, "
+            f"weights {bk[('packed',)].get('weight_bytes_ratio')}x smaller, "
+            f"tokens identical"),
+    ),
+    GateSpec(
+        name="continuous_serve",
+        path_flag="--continuous-path",
+        key_fields=("engine", "mode"),
+        required=(("static", "packed"), ("continuous", "packed"),
+                  ("continuous", "dense")),
+        checks=(
+            Check(metric="tokens_identical", op="truthy",
+                  why="packed must emit exactly dense's tokens within "
+                      "each engine"),
+            Check(metric="tokens_match_solo", op="truthy",
+                  row=("continuous", "packed"),
+                  why="continuous tokens must equal serving alone — a "
+                      "mismatch is a slot-isolation bug"),
+            Check(metric="tokens_match_solo", op="truthy",
+                  row=("continuous", "dense"),
+                  why="continuous tokens must equal serving alone — a "
+                      "mismatch is a slot-isolation bug"),
+            Check(metric="continuous_vs_static_ratio", op=">=",
+                  row=("continuous", "packed"), default=1.0,
+                  env="REPRO_MIN_CONTINUOUS_RATIO",
+                  flag="--min-continuous-ratio",
+                  why="continuous batching must not serve the mixed "
+                      "workload slower than fixed chunks"),
+        ),
+        summary=lambda bk: (
+            f"continuous packed "
+            f"{bk[('continuous', 'packed')].get('continuous_vs_static_ratio')}x "
+            f"static chunked (p50 "
+            f"{bk[('continuous', 'packed')].get('p50_latency_ms', '?')}ms vs "
+            f"{bk[('static', 'packed')].get('p50_latency_ms', '?')}ms), "
+            f"tokens identical to solo serving"),
+    ),
+    GateSpec(
+        name="speculative_serve",
+        path_flag="--speculative-path",
+        key_fields=("mode",),
+        required=(("dense",), ("speculative",)),
+        checks=(
+            Check(metric="tokens_identical", op="truthy",
+                  why="greedy speculative output must be bit-identical to "
+                      "dense greedy for ANY drafter — the verifier "
+                      "certifies every committed token, so a miss is a "
+                      "rollback/lockstep bug"),
+            Check(metric="spec_vs_dense_ratio", op=">=",
+                  row=("speculative",), default=1.0,
+                  env="REPRO_MIN_SPEC_RATIO", flag="--min-spec-ratio",
+                  why="drafting with the packed artifact must not serve "
+                      "slower than plain dense decoding"),
+        ),
+        summary=lambda bk: (
+            f"speculative {bk[('speculative',)].get('spec_vs_dense_ratio')}x "
+            f"dense at acceptance "
+            f"{bk[('speculative',)].get('acceptance_rate')} "
+            f"(draft_k {bk[('speculative',)].get('draft_k')}), "
+            f"tokens identical"),
+    ),
+)
+
+
+def _threshold(check: Check, args: argparse.Namespace) -> Optional[float]:
+    if check.flag is not None:
+        v = getattr(args, check.flag.lstrip("-").replace("-", "_"), None)
+        if v is not None:
+            return float(v)
+    if check.env is not None and check.env in os.environ:
+        return float(os.environ[check.env])
+    return check.default
+
+
+def run_gate(spec: GateSpec, path: str, args: argparse.Namespace) -> int:
     if not os.path.isfile(path):
         print(f"check_regression: missing benchmark file {path} "
-              "(run benchmarks/packed_serve.py first)")
+              f"(run benchmarks/{spec.name}.py first)")
         return 2
     with open(path) as f:
         rows = json.load(f)
-    by_mode = {r.get("mode"): r for r in rows}
-    if "dense" not in by_mode or "packed" not in by_mode:
-        print(f"check_regression: {path} lacks dense/packed rows")
+    by_key: Dict[RowKey, dict] = {
+        tuple(r.get(f) for f in spec.key_fields): r for r in rows
+    }
+    missing = [k for k in spec.required if k not in by_key]
+    if missing:
+        print(f"check_regression: {path} lacks rows {missing}")
         return 2
-    pk = by_mode["packed"]
+    if spec.derive is not None:
+        spec.derive(by_key)
+
     failures = []
-    for mode, r in by_mode.items():
-        if not r.get("tokens_identical", False):
-            failures.append(f"{mode}: tokens_identical is false")
-    ratio = pk.get("decode_ratio_vs_dense")
-    if ratio is None:
-        failures.append("packed row lacks decode_ratio_vs_dense")
-    elif ratio < min_ratio:
-        failures.append(
-            f"packed decode is {ratio:.3f}x dense speed "
-            f"(gate: >= {min_ratio}) — "
-            f"{pk['cpu_ms_decode_step']}ms/step vs "
-            f"{by_mode['dense']['cpu_ms_decode_step']}ms/step"
-        )
-    pf_packed = pk.get("cpu_ms_prefill")
-    pf_dense = by_mode["dense"].get("cpu_ms_prefill")
-    if pf_packed is None or pf_dense is None:
-        failures.append("rows lack cpu_ms_prefill")
-    elif pf_packed > pf_dense * max_prefill_factor:
-        failures.append(
-            f"packed prefill is {pf_packed}ms vs dense {pf_dense}ms "
-            f"(gate: <= {max_prefill_factor}x dense)"
-        )
-    wr = pk.get("weight_bytes_ratio", 0)
-    if wr < min_bytes_ratio:
-        failures.append(
-            f"packed weights only {wr}x smaller than dense "
-            f"(gate: >= {min_bytes_ratio}x)"
-        )
+    for check in spec.checks:
+        targets = ([check.row] if check.row is not None
+                   else list(by_key.keys()))
+        for key in targets:
+            row = by_key.get(key)
+            if row is None:
+                continue
+            label = "/".join(str(p) for p in key)
+            value = row.get(check.metric)
+            if check.op == "truthy":
+                if not value:
+                    failures.append(
+                        f"{label}: {check.metric} is false — {check.why}")
+                continue
+            thr = _threshold(check, args)
+            if value is None:
+                failures.append(f"{label}: row lacks {check.metric}")
+            elif check.op == ">=" and value < thr:
+                failures.append(
+                    f"{label}: {check.metric} {value:.3f} < {thr} — "
+                    f"{check.why}")
+            elif check.op == "<=" and value > thr:
+                failures.append(
+                    f"{label}: {check.metric} {value:.3f} > {thr} — "
+                    f"{check.why}")
 
     if failures:
-        print("check_regression: FAIL (packed_serve)")
+        print(f"check_regression: FAIL ({spec.name})")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
-    print(f"check_regression: OK — packed decode {ratio:.3f}x dense, "
-          f"prefill {pk.get('prefill_ratio_vs_dense', '?')}x dense, "
-          f"weights {wr}x smaller, "
-          f"scan {pk.get('scan_speedup', '?')}x over per-token loop, "
-          f"tokens identical")
-    return 0
-
-
-def check_continuous(path: str, min_continuous_ratio: float) -> int:
-    if not os.path.isfile(path):
-        print(f"check_regression: missing benchmark file {path} "
-              "(run benchmarks/continuous_serve.py first)")
-        return 2
-    with open(path) as f:
-        rows = json.load(f)
-    by_key = {(r.get("engine"), r.get("mode")): r for r in rows}
-    need = [("static", "packed"), ("continuous", "packed"),
-            ("continuous", "dense")]
-    if any(k not in by_key for k in need):
-        print(f"check_regression: {path} lacks static/continuous "
-              "dense/packed rows")
-        return 2
-    failures = []
-    for (engine, mode), r in by_key.items():
-        if not r.get("tokens_identical", False):
-            failures.append(f"{engine}/{mode}: tokens_identical is false")
-        if engine == "continuous" and not r.get("tokens_match_solo", False):
-            failures.append(
-                f"continuous/{mode}: tokens differ from solo serving — "
-                "slot isolation is broken (per-slot geometry must make "
-                "continuous batching bit-identical to serving alone)"
-            )
-    cp = by_key[("continuous", "packed")]
-    ratio = cp.get("continuous_vs_static_ratio")
-    if ratio is None:
-        failures.append("continuous/packed row lacks "
-                        "continuous_vs_static_ratio")
-    elif ratio < min_continuous_ratio:
-        failures.append(
-            f"continuous packed serves the mixed workload at {ratio:.3f}x "
-            f"static chunked throughput (gate: >= {min_continuous_ratio}) "
-            f"— {cp['tokens_per_s']} vs "
-            f"{by_key[('static', 'packed')]['tokens_per_s']} tok/s"
-        )
-
-    if failures:
-        print("check_regression: FAIL (continuous_serve)")
-        for f_ in failures:
-            print(f"  - {f_}")
-        return 1
-    print(f"check_regression: OK — continuous packed {ratio:.3f}x static "
-          f"chunked on the Poisson mixed workload "
-          f"(p50 {cp.get('p50_latency_ms', '?')}ms vs "
-          f"{by_key[('static', 'packed')].get('p50_latency_ms', '?')}ms, "
-          f"occupancy {cp.get('occupancy', '?')} vs "
-          f"{by_key[('static', 'packed')].get('occupancy', '?')}), "
-          f"continuous tokens identical to solo serving")
+    extra = f" — {spec.summary(by_key)}" if spec.summary else ""
+    print(f"check_regression: OK ({spec.name}){extra}")
     return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--path", default=DEFAULT_PATH)
-    ap.add_argument("--continuous-path", default=DEFAULT_CONTINUOUS_PATH)
-    ap.add_argument("--min-ratio", type=float,
-                    default=float(os.environ.get("REPRO_MIN_DECODE_RATIO",
-                                                 "1.0")))
-    ap.add_argument("--max-prefill-factor", type=float,
-                    default=float(os.environ.get("REPRO_MAX_PREFILL_FACTOR",
-                                                 "1.05")))
-    ap.add_argument("--min-bytes-ratio", type=float,
-                    default=float(os.environ.get("REPRO_MIN_BYTES_RATIO",
-                                                 "1.6")))
-    ap.add_argument("--min-continuous-ratio", type=float,
-                    default=float(os.environ.get(
-                        "REPRO_MIN_CONTINUOUS_RATIO", "1.0")))
+    seen = set()
+    for spec in GATES:
+        ap.add_argument(spec.path_flag, dest=f"path_{spec.name}",
+                        default=spec.default_path)
+        for check in spec.checks:
+            if check.flag and check.flag not in seen:
+                seen.add(check.flag)
+                ap.add_argument(check.flag, type=float, default=None,
+                                help=f"threshold for {check.metric} "
+                                     f"(env {check.env}, "
+                                     f"default {check.default})")
     args = ap.parse_args()
-    rc = check(args.path, args.min_ratio, args.max_prefill_factor,
-               args.min_bytes_ratio)
-    rc2 = check_continuous(args.continuous_path, args.min_continuous_ratio)
-    return max(rc, rc2)
+    rc = 0
+    for spec in GATES:
+        rc = max(rc, run_gate(spec, getattr(args, f"path_{spec.name}"),
+                              args))
+    return rc
 
 
 if __name__ == "__main__":

@@ -25,12 +25,22 @@ import os
 import time
 
 
+SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
-                         "packed_serve,continuous_serve")
+                         "packed_serve,continuous_serve,speculative_serve")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: REPRO_BENCH_FAST=1 and only the "
+                         "serving suites check_regression.py gates on")
     args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        if args.only == "all":
+            args.only = ",".join(SERVE_SUITES)
     want = None if args.only == "all" else set(args.only.split(","))
 
     from benchmarks import (
@@ -38,6 +48,7 @@ def main() -> None:
         continuous_serve,
         fig3_kernels,
         packed_serve,
+        speculative_serve,
         table1_schemes,
         table2_pattern,
         table4_formulations,
@@ -52,6 +63,7 @@ def main() -> None:
         "fig3": fig3_kernels.run,
         "packed_serve": packed_serve.run,
         "continuous_serve": continuous_serve.run,
+        "speculative_serve": speculative_serve.run,
     }
 
     summary = {}

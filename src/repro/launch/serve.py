@@ -4,6 +4,8 @@
         --requests 8 --max-new 16 [--ckpt /tmp/pruned_qwen2/pruned]
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --artifact /tmp/qwen2_artifact --packed
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --speculative /tmp/qwen2_artifact --draft-k 4
 
 Loads either a raw checkpoint (``--ckpt``, e.g. the output of
 launch/prune.py after client retraining) or a saved ``PrunedArtifact``
@@ -13,6 +15,12 @@ the compressed representation: every block GEMM runs through the
 scheme→kernel registry instead of dense matmuls. The decode step is the
 same program the dry-run's decode_32k/long_500k cells lower; on TPU
 backends the prefill path routes attention through the Pallas flash kernel.
+
+``--speculative <artifact-dir>`` serves SPECULATIVELY: the saved pruned
+artifact drafts ``--draft-k`` tokens per round (packed) and the engine's
+own params verify them in one chunked dispatch — greedy output is
+bit-identical to serving the engine params alone, and the acceptance
+numbers print after the run (see ``serve/speculative.py``).
 """
 
 from __future__ import annotations
@@ -40,6 +48,13 @@ def main():
                     help="saved PrunedArtifact directory (see sparse/)")
     ap.add_argument("--packed", action="store_true",
                     help="serve the packed representation (needs --artifact)")
+    ap.add_argument("--speculative", default=None, metavar="DRAFT_ARTIFACT",
+                    help="saved PrunedArtifact directory to DRAFT with: the "
+                         "packed drafter proposes --draft-k tokens/round, "
+                         "the engine params verify (output bit-identical "
+                         "to serving without it)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="draft tokens per speculative round")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -69,8 +84,17 @@ def main():
             params = restore_pytree(args.ckpt, params)
             log.info("restored %s", args.ckpt)
 
+    draft = None
+    if args.speculative:
+        from repro.sparse import PrunedArtifact
+
+        draft = PrunedArtifact.load(args.speculative)
+        log.info("loaded draft artifact %s: %s", args.speculative,
+                 draft.summary())
+
     engine = ServeEngine(model, params, batch_size=args.batch,
-                         max_seq_len=args.max_seq, packed=args.packed)
+                         max_seq_len=args.max_seq, packed=args.packed,
+                         speculative=draft, draft_k=args.draft_k)
     key = jax.random.PRNGKey(7)
     reqs = [
         Request(uid=i,
@@ -85,8 +109,15 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(r.tokens) for r in results)
     mode = "packed" if args.packed else "dense"
+    if args.speculative:
+        mode += f"+speculative(k={args.draft_k})"
     print(f"{len(results)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, batch={args.batch}, {mode})")
+    if args.speculative:
+        st = engine.speculative.stats
+        print(f"  speculative: {st['rounds']} rounds, acceptance "
+              f"{st['acceptance_rate']:.3f} "
+              f"({st['accepted']}/{st['drafted']} drafts)")
     for r in results[:4]:
         print(f"  uid={r.uid}: {r.tokens[:12]}{'...' if len(r.tokens) > 12 else ''}")
 

@@ -513,6 +513,126 @@ def decode_attention(
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def chunk_rows(pos: jnp.ndarray, K: int, capacity: int, ring: bool
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cache slot indices for the next ``K`` positions of every batch row.
+
+    Returns ``(idx, rows)``: ``idx (B, K)`` are the absolute positions
+    ``pos[b] .. pos[b]+K-1`` and ``rows (B, K)`` the cache slots they land
+    in (``idx % C`` for ring buffers, ``idx`` otherwise — non-ring rows
+    past capacity are left unclamped so scatters DROP them, which is the
+    documented overflow behavior for slots that decode past their budget).
+    """
+    idx = pos[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+    rows = idx % capacity if ring else idx
+    return idx, rows
+
+
+def chunk_attention(
+    q: jnp.ndarray,                  # (B, K, H, hd) — K new positions
+    k_cache: jnp.ndarray,            # (B, C, KV, hd), chunk KV already inserted
+    v_cache: jnp.ndarray,
+    slot_pos: jnp.ndarray,           # (B, C) int32 position per slot, -1=empty
+    q_pos: jnp.ndarray,              # (B, K) int32 per-query positions
+    *,
+    window: Optional[int] = None,
+    chunk: int = 2048,
+    softmax_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """K decode positions against the cache in ONE attention call.
+
+    The chunked-verify generalization of ``decode_attention``: the caller
+    inserts all K positions' k/v into the cache FIRST (``cache_insert_chunk``)
+    and per-query causal masking over ``slot_pos`` then covers intra-chunk
+    causality for free — chunk query i sees chunk key j iff
+    ``slot_pos = pos+j <= pos+i``. Same fp32 online-softmax formulation
+    (and the same single-tile fast path) as ``decode_attention``, with an
+    extra query axis.
+    """
+    B, C, KV, hd = k_cache.shape
+    K, H = q.shape[1], q.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(hd)
+    chunk = min(chunk, C)
+    pad = (-C) % chunk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nC = k_cache.shape[1] // chunk
+
+    qg = q.reshape(B, K, KV, G, hd)
+
+    def tile_mask(sp):                                # sp (B, c) → (B, K, c)
+        ok = (sp[:, None, :] >= 0) & (sp[:, None, :] <= q_pos[:, :, None])
+        if window is not None:
+            ok &= q_pos[:, :, None] - sp[:, None, :] < window
+        return ok
+
+    if nC == 1:
+        s = jnp.einsum("bqkgd,bpkd->bqkgp", qg, k_cache,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(tile_mask(slot_pos)[:, :, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqkgp,bpkd->bqkgd", p.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+        return out.reshape(B, K, H, hd).astype(q.dtype)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k_cache, j * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v_cache, j * chunk, chunk, axis=1)
+        sp = jax.lax.dynamic_slice_in_dim(slot_pos, j * chunk, chunk, axis=1)
+
+        s = jnp.einsum("bqkgd,bpkd->bqkgp", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(tile_mask(sp)[:, :, None, None, :], s, NEG_INF)
+
+        s_max = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, s_max)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgp,bpkd->bqkgd", p.astype(vc.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, K, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nC))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, K, H, hd).astype(q.dtype)
+
+
+def cache_insert_chunk(
+    k_cache: jnp.ndarray,            # (B, C, KV, hd)
+    v_cache: jnp.ndarray,
+    slot_pos: jnp.ndarray,           # (B, C)
+    k_new: jnp.ndarray,              # (B, K, KV, hd)
+    v_new: jnp.ndarray,
+    pos: jnp.ndarray,                # (B,) int32 — first position of the chunk
+    *,
+    ring: bool,
+):
+    """Insert K consecutive positions per batch row (chunked verify path).
+
+    Ring caches require ``K <= C`` so the chunk's rows are distinct per
+    batch row (a verify chunk longer than the sliding window could not
+    sit in the cache at once anyway — ``LM.verify_chunk`` validates).
+    Non-ring rows past capacity scatter-drop, matching ``chunk_rows``.
+    """
+    C = k_cache.shape[1]
+    idx, rows = chunk_rows(pos, k_new.shape[1], C, ring)
+    b = jnp.arange(k_cache.shape[0])[:, None]
+    k_cache = k_cache.at[b, rows].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[b, rows].set(v_new.astype(v_cache.dtype))
+    slot_pos = slot_pos.at[b, rows].set(idx)
+    return k_cache, v_cache, slot_pos
+
+
 def cache_insert(
     k_cache: jnp.ndarray,            # (B, C, KV, hd)
     v_cache: jnp.ndarray,

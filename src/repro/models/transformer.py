@@ -35,6 +35,8 @@ from repro.models.attention import (
     blockwise_attention,
     cache_capacity,
     cache_insert,
+    chunk_attention,
+    chunk_rows,
     decode_attention,
     flash_prefill_supported,
     slot_prompt_rows,
@@ -843,6 +845,178 @@ class LM:
             unroll=min(unroll, num_steps),
         )
         return cache, jnp.swapaxes(toks[..., 0], 0, 1)   # (B, num_steps)
+
+    # ------------------------------------------------- chunked verify path
+
+    def _require_kv_family(self, what: str) -> None:
+        if self.config.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                f"{what} needs per-position KV rows to rewind; "
+                f"family={self.config.family!r} carries recurrent state "
+                "(rollback would need per-step state stacking) — serve it "
+                "without speculation"
+            )
+
+    def _cache_ring(self, cache) -> bool:
+        """Mirror decode_step's rule: ring iff a sliding window bounds C."""
+        C = cache["k"].shape[2]
+        return self.config.sliding_window is not None and \
+            C <= self.config.sliding_window
+
+    def verify_chunk(self, params, cache: Dict[str, Any],
+                     tokens: jnp.ndarray):
+        """K-token chunked decode: per-position logits in ONE dispatch.
+
+        ``tokens``: (B, K) ids (or (B, K, D) embeddings) — the last
+        committed token followed by K-1 draft continuations. Every batch
+        row runs at ITS OWN positions ``pos[b] .. pos[b]+K-1`` (per-row
+        rope, per-row causal horizon — the same per-slot geometry the
+        continuous engine rests on). The chunk's k/v are inserted into the
+        cache FIRST (``cache_insert_chunk``), then ``chunk_attention``
+        masks by ``slot_pos <= q_pos`` so intra-chunk causality falls out
+        of the cache mask. Returns ``(cache, logits (B, K, V))`` with
+        ``pos`` advanced by K — callers that may reject a suffix take a
+        ``cache_snapshot`` BEFORE the call and ``cache_rollback`` after.
+
+        Compared to K ``decode_step`` calls this is one dispatch whose
+        GEMMs run at M = B*K instead of K sequential M = B dispatches —
+        the verifier-side half of the speculative hot path.
+        """
+        cfg = self.config
+        self._require_kv_family("verify_chunk")
+        x = self.embed_inputs(params, tokens)           # (B, K, D)
+        B, K = x.shape[0], x.shape[1]
+        pos = cache["pos"]                              # (B,)
+        C = cache["k"].shape[2]
+        ring = self._cache_ring(cache)
+        if ring and K > C:
+            raise ValueError(
+                f"verify chunk of {K} tokens exceeds the ring cache's "
+                f"window capacity {C} — lower draft_k"
+            )
+        q_pos, rows = chunk_rows(pos, K, C, ring)       # (B, K) positions
+        r_sin, r_cos = rope_tables(q_pos, cfg.head_dim, cfg.rope_theta)
+        # slot_pos is layer-invariant: the post-chunk row set is one
+        # scatter, computed ONCE — layers must all mask against the same
+        # (pre-chunk for ring, post-insert for non-ring) view, never a
+        # mid-scan mixture of another layer's inserts and their own bytes
+        bidx = jnp.arange(x.shape[0])[:, None]
+        sp_new = cache["slot_pos"].at[bidx, rows].set(q_pos)
+        sp_attn = (jnp.concatenate([cache["slot_pos"], q_pos], axis=1)
+                   if ring else sp_new)
+
+        def block_step(x, xs):
+            bp, kc, vc = xs
+            h = rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            attn_p = bp["attn"]
+            q = dense_apply(h, attn_p["wq"],
+                            bias=attn_p["bq"] if cfg.qkv_bias else None)
+            k = dense_apply(h, attn_p["wk"],
+                            bias=attn_p["bk"] if cfg.qkv_bias else None)
+            v = dense_apply(h, attn_p["wv"],
+                            bias=attn_p["bv"] if cfg.qkv_bias else None)
+            q = q.reshape(B, K, cfg.num_heads, cfg.head_dim)
+            k = k.reshape(B, K, cfg.num_kv_heads, cfg.head_dim)
+            v = v.reshape(B, K, cfg.num_kv_heads, cfg.head_dim)
+            q = apply_rope_tables(q, r_sin, r_cos)
+            k = apply_rope_tables(k, r_sin, r_cos)
+
+            if ring:
+                # two-part attention: the chunk's keys ride ALONGSIDE the
+                # unmodified cache. Inserting first would overwrite window
+                # history the chunk's earlier queries still see (a ring
+                # insert at pos+j evicts pos+j-W, which is inside query
+                # pos+i's window whenever i < j) — position masks over
+                # the concatenated slots give exact sequential semantics.
+                k_ext = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+                v_ext = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+                attn = chunk_attention(q, k_ext, v_ext, sp_attn, q_pos,
+                                       window=cfg.sliding_window)
+                kc = kc.at[bidx, rows].set(k.astype(kc.dtype))
+                vc = vc.at[bidx, rows].set(v.astype(vc.dtype))
+            else:
+                # fresh slots only (slot index == position): insert first,
+                # then one attention over the cache — intra-chunk
+                # causality falls out of the slot_pos <= q_pos mask
+                kc = kc.at[bidx, rows].set(k.astype(kc.dtype))
+                vc = vc.at[bidx, rows].set(v.astype(vc.dtype))
+                attn = chunk_attention(q, kc, vc, sp_attn, q_pos,
+                                       window=cfg.sliding_window)
+            attn = dense_apply(attn.reshape(B, K, cfg.attn_dim),
+                               bp["attn"]["wo"])
+            x = x + attn
+            h2 = rmsnorm(bp["norm2"], x, cfg.norm_eps)
+            if cfg.num_experts:
+                y, _ = moe_apply(bp["moe"], h2, top_k=cfg.moe_top_k,
+                                 capacity_factor=cfg.capacity_factor)
+            elif cfg.d_ff:
+                y = ffn_apply(bp["mlp"], h2, cfg.ffn_type)
+            else:
+                y = jnp.zeros_like(x)
+            x = x + y
+            return x, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            block_step, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=min(cfg.num_layers, 4))
+        cache = {**cache, "k": new_k, "v": new_v, "slot_pos": sp_new,
+                 "pos": pos + K}
+        h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return cache, self.lm_logits(params, h)
+
+    def cache_snapshot(self, cache: Dict[str, Any], K: int) -> Dict[str, Any]:
+        """Snapshot the cache rows the NEXT ``K`` inserted positions will
+        overwrite, so ``cache_rollback`` can rewind exactly.
+
+        Non-ring caches would survive a rewind with masking alone (stale
+        future rows are causally masked and re-inserted in place), but
+        ring caches cannot: a rejected insert that wrapped has OVERWRITTEN
+        live window history, and only restoring the saved rows brings it
+        back. Saving both geometries' rows makes rollback produce a cache
+        BIT-IDENTICAL to one that never saw the rejected tokens — the
+        invariant the speculative engine's lockstep tests assert.
+        """
+        self._require_kv_family("cache_snapshot")
+        pos = cache["pos"]
+        C = cache["k"].shape[2]
+        idx, rows = chunk_rows(pos, K, C, self._cache_ring(cache))
+        grows = jnp.minimum(rows, C - 1)      # clamp gathers; scatters drop
+        b = jnp.arange(pos.shape[0])[:, None]
+        return {
+            "k": cache["k"][:, b, grows],          # (L, B, K, KV, hd)
+            "v": cache["v"][:, b, grows],
+            "slot_pos": cache["slot_pos"][b, grows],   # (B, K)
+            "rows": rows,
+            "idx": idx,
+            "pos": pos,
+        }
+
+    def cache_rollback(self, cache: Dict[str, Any], snap: Dict[str, Any],
+                       keep: jnp.ndarray) -> Dict[str, Any]:
+        """Rewind a cache to ``snap``'s position plus ``keep`` accepted
+        inserts per row.
+
+        ``keep``: (B,) int32 in ``[0, K]`` — row ``b`` keeps its first
+        ``keep[b]`` post-snapshot positions; everything after is restored
+        from the snapshot (k/v bytes AND ``slot_pos``) and ``pos`` rewinds
+        to ``snap["pos"] + keep``. Per-row ``keep`` is what lets one
+        speculative round accept different prefix lengths per batch row.
+        """
+        self._require_kv_family("cache_rollback")
+        K = snap["rows"].shape[1]
+        rows = snap["rows"]
+        grows = jnp.minimum(rows, cache["k"].shape[2] - 1)
+        b = jnp.arange(rows.shape[0])[:, None]
+        rej = jnp.arange(K, dtype=jnp.int32)[None, :] >= keep[:, None]
+        sel = rej[None, :, :, None, None]
+        new_k = cache["k"].at[:, b, rows].set(
+            jnp.where(sel, snap["k"], cache["k"][:, b, grows]))
+        new_v = cache["v"].at[:, b, rows].set(
+            jnp.where(sel, snap["v"], cache["v"][:, b, grows]))
+        new_sp = cache["slot_pos"].at[b, rows].set(
+            jnp.where(rej, snap["slot_pos"], snap["idx"]))
+        return {**cache, "k": new_k, "v": new_v, "slot_pos": new_sp,
+                "pos": snap["pos"] + keep}
 
     def _xlstm_decode(self, params, cache, tokens):
         cfg = self.config

@@ -29,13 +29,39 @@ chunk-mates, any retirement pattern. The chunked engine's mixed-length
 prefill padding (zero tokens the model attends to) is the one distortion
 this geometry removes.
 
+Dual-cache + rollback contract (the speculative engine's correctness
+rests on it; ``serve/speculative.py``):
+
+  * ``LM.verify_chunk(params, cache, tokens (B, K))`` decodes K tokens
+    per row in ONE dispatch: each row at its own ``pos[b] .. pos[b]+K-1``
+    (per-row rope, per-row causal horizon), the chunk's k/v inserted
+    into the cache first so ``slot_pos <= q_pos`` masking covers
+    intra-chunk causality. Returns per-position logits; ``pos`` advances
+    by K.
+  * ``LM.cache_snapshot(cache, K)`` saves the rows the next K inserts
+    will overwrite; ``LM.cache_rollback(cache, snap, keep (B,))`` rewinds
+    row ``b`` to ``snap pos + keep[b]`` accepted inserts, restoring the
+    rejected rows' k/v bytes AND ``slot_pos`` from the snapshot. The
+    restore is what makes rollback exact on RING caches too: a rejected
+    insert that wrapped has overwritten live window history, which
+    masking alone cannot bring back. After rollback the cache is
+    bit-identical to one that only ever saw the accepted tokens.
+  * The speculative engine keeps the drafter and target caches in
+    LOCKSTEP: the drafter's K draft steps insert positions
+    ``pending, d_1 .. d_{K-1}`` and the target's verify chunk inserts
+    exactly the same K, and both roll back to the same per-row
+    ``keep = min(accepted + 1, K)`` — so
+    ``draft_cache["pos"] == target_cache["pos"]`` between rounds, always.
+
 Host-side slot bookkeeping is ``serve/slots.py`` (free list, per-request
 emission, retire conditions); admission policy and micro-chunk sizing is
 ``serve/scheduler.py``; samplers (vectorized per-slot temperature,
-``temperature <= 0`` → exact greedy) are ``serve/sampler.py``.
+``temperature <= 0`` → exact greedy, per-request key streams via
+``Request.seed``) are ``serve/sampler.py``.
 """
 
 from repro.serve.engine import ContinuousEngine, ServeEngine, Request, Result
 from repro.serve.sampler import greedy_sample, temperature_sample
 from repro.serve.scheduler import Scheduler
 from repro.serve.slots import SlotState, SlotTable, trim_at_eos
+from repro.serve.speculative import SpeculativeEngine, shallow_drafter

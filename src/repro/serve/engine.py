@@ -48,7 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
-from repro.serve.sampler import greedy_sample, temperature_sample
+from repro.serve.sampler import (
+    fold_key_grid,
+    greedy_sample,
+    request_key,
+    temperature_sample,
+)
 from repro.serve.scheduler import Scheduler
 from repro.serve.slots import trim_at_eos
 
@@ -60,12 +65,78 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None     # stop after emitting this token
     temperature: Optional[float] = None   # None or <= 0 → greedy
+    seed: Optional[int] = None       # per-request PRNG stream: token i draws
+    # from fold_in(PRNGKey(seed), i) on every engine, so a stochastic
+    # request reproduces regardless of engine seed or batch-mates
 
 
 @dataclasses.dataclass
 class Result:
     uid: int
     tokens: List[int]
+
+
+def _bucketed_generate(requests: List[Request], batch_size: int,
+                       generate_batch: Callable[[List[Request]],
+                                                List["Result"]]
+                       ) -> List["Result"]:
+    """The chunking loop the chunked AND speculative engines share:
+    bucket by prompt length (stable sort — same-length requests keep
+    arrival order), serve ``batch_size`` chunks, restore results to the
+    ORIGINAL request order. One implementation, because the speculative
+    engine's bit-identity guarantee rests on composing chunks exactly
+    like ``ServeEngine`` does."""
+    order = sorted(range(len(requests)),
+                   key=lambda i: int(requests[i].prompt.shape[0]))
+    results: List[Optional[Result]] = [None] * len(requests)
+    for i in range(0, len(order), batch_size):
+        idxs = order[i : i + batch_size]
+        out = generate_batch([requests[j] for j in idxs])
+        for j, res in zip(idxs, out):
+            results[j] = res
+    return results  # type: ignore[return-value]
+
+
+def _pad_prompts(requests: List[Request], batch_size: int):
+    """Left-pad a chunk's prompts to its longest and stack to a full
+    ``(B, S)`` batch (empty slots get zero prompts). Returns
+    ``(prompts, slot_mask)`` — the shared prefill geometry of the chunked
+    and speculative engines (identical padding ⇒ identical tokens)."""
+    n = len(requests)
+    S = max(int(r.prompt.shape[0]) for r in requests)
+
+    def pad(r: Request):
+        p = r.prompt
+        if p.shape[0] < S:
+            pad_width = [(S - p.shape[0], 0)] + [(0, 0)] * (p.ndim - 1)
+            p = jnp.pad(p, pad_width)
+        return p
+
+    padded = [pad(r) for r in requests]
+    prompts = jnp.stack(padded
+                        + [jnp.zeros_like(padded[0])] * (batch_size - n))
+    slot_mask = jnp.asarray([1] * n + [0] * (batch_size - n), jnp.int32)
+    return prompts, slot_mask
+
+
+def _stochastic_rows(requests: List[Request], batch_size: int,
+                     engine_key: jax.Array):
+    """Per-slot temperatures and per-REQUEST base keys for a chunk:
+    ``(temps (B,), row_keys (B, 2), new_engine_key)``. Shared by the
+    chunked and speculative engines so ``Request.seed`` reproduces
+    identically on both (request_key per row, 0.0-temp and PRNGKey(0)
+    fill for empty slots)."""
+    n = len(requests)
+    temps = jnp.asarray(
+        [r.temperature if r.temperature is not None else 0.0
+         for r in requests] + [0.0] * (batch_size - n), jnp.float32)
+    keys = []
+    for r in requests:
+        k, engine_key = request_key(r.seed, engine_key)
+        keys.append(k)
+    row_keys = jnp.stack(
+        keys + [jax.random.PRNGKey(0)] * (batch_size - n))
+    return temps, row_keys, engine_key
 
 
 def _scan_decode_fns(model: LM, sampler: Callable):
@@ -118,6 +189,9 @@ class ServeEngine:
         flash: Optional[bool] = None,
         bake_weights: Optional[bool] = None,
         seed: int = 0,
+        speculative: Optional[Any] = None,
+        draft_k: int = 4,
+        draft_model: Optional[LM] = None,
     ):
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
@@ -146,13 +220,30 @@ class ServeEngine:
         scan's in-place cache update matters more than constant folding.
         None = auto: on for CPU backends (where the XLA gather lowering
         gains the most and weights are host-resident anyway), off on
-        TPU."""
+        TPU.
+
+        ``speculative`` — a drafter (``PrunedArtifact``/``PruneResult``,
+        bound packed, or a raw params tree for ``draft_model``): route
+        ``generate`` through a ``serve.SpeculativeEngine`` that drafts
+        ``draft_k`` tokens per round with it and verifies them against
+        THIS engine's params in one chunked dispatch. Greedy output stays
+        bit-identical to this engine's own; ``engine.speculative.stats``
+        has the acceptance numbers."""
         self.model = model
         self.params = _resolve_params(model, params, packed)
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.sampler = sampler
         self._key = jax.random.PRNGKey(seed)
+        self.speculative = None
+        if speculative is not None:
+            from repro.serve.speculative import SpeculativeEngine
+
+            self.speculative = SpeculativeEngine(
+                model, self.params, speculative, batch_size=batch_size,
+                max_seq_len=max_seq_len, draft_k=draft_k,
+                draft_model=draft_model, flash=flash, seed=seed,
+            )
         backend = jax.default_backend()
         bake = (backend == "cpu") if bake_weights is None else bool(
             bake_weights)
@@ -215,49 +306,34 @@ class ServeEngine:
         at retirement, so both engines agree. Results are returned in the
         ORIGINAL request order regardless of the serving order.
         """
-        order = sorted(range(len(requests)),
-                       key=lambda i: int(requests[i].prompt.shape[0]))
-        results: List[Optional[Result]] = [None] * len(requests)
-        for i in range(0, len(order), self.batch_size):
-            idxs = order[i : i + self.batch_size]
-            out = self._generate_batch([requests[j] for j in idxs])
-            for j, res in zip(idxs, out):
-                results[j] = res
-        return results  # type: ignore[return-value]
+        if self.speculative is not None:
+            return self.speculative.generate(requests)
+        return _bucketed_generate(requests, self.batch_size,
+                                  self._generate_batch)
 
     def _generate_batch(self, requests: List[Request]) -> List[Result]:
         B = self.batch_size
         n = len(requests)
-        S = max(int(r.prompt.shape[0]) for r in requests)
-        # left-pad prompts to a common length; empty slots get zero prompts
-        def pad(r: Request):
-            p = r.prompt
-            if p.shape[0] < S:
-                pad_width = [(S - p.shape[0], 0)] + [(0, 0)] * (p.ndim - 1)
-                p = jnp.pad(p, pad_width)
-            return p
-
-        padded = [pad(r) for r in requests]
-        prompts = jnp.stack(padded + [jnp.zeros_like(padded[0])] * (B - n))
-        slot_mask = jnp.asarray([1] * n + [0] * (B - n),
-                                dtype=jnp.int32)      # 1 = real request
+        prompts, slot_mask = _pad_prompts(requests, B)
         cache, logits = self._prefill(self.params, prompts)
         # scan length is trimmed per chunk: this chunk's longest request,
         # not a global engine-wide maximum
         max_new = max(r.max_new_tokens for r in requests)
         use_temp = any(r.temperature is not None for r in requests)
         if use_temp:
-            temps = jnp.asarray(
-                [r.temperature if r.temperature is not None else 0.0
-                 for r in requests] + [0.0] * (B - n), jnp.float32)
-            self._key, k0, kd = jax.random.split(self._key, 3)
-            tok0 = temperature_sample(logits, k0, temps) \
+            # per-request key streams: token i of row b draws from
+            # fold_in(row_key_b, i) — a seeded request reproduces across
+            # engines and (same-shape) chunks
+            temps, row_keys, self._key = _stochastic_rows(requests, B,
+                                                          self._key)
+            step_keys = fold_key_grid(row_keys, jnp.zeros((B,), jnp.int32),
+                                      max_new)
+            tok0 = temperature_sample(logits, step_keys[0], temps) \
                 * slot_mask[:, None]
             if max_new > 1:
-                keys = jax.random.split(kd, max_new - 1)
                 _, rest = self._decode_many_temp(
-                    self.params, cache, tok0, slot_mask, temps, keys,
-                    max_new - 1)
+                    self.params, cache, tok0, slot_mask, temps,
+                    step_keys[1:], max_new - 1)
                 toks = jnp.concatenate([tok0, rest], axis=1)
             else:
                 toks = tok0
@@ -334,6 +410,10 @@ class ContinuousEngine:
         self.max_seq_len = max_seq_len
         self.chunk_steps = chunk_steps
         self._key = jax.random.PRNGKey(seed)
+        # per-slot request key streams (seeded requests reproduce exactly:
+        # slot logits are batch-independent, and token i always draws from
+        # fold_in(row_key, i) no matter the admission timing)
+        self._slot_keys = np.zeros((batch_size, 2), np.uint32)
         spec = model.cache_spec(max_seq_len)
         self._capacity, self._ring = spec.capacity, spec.ring
         self.stats: Dict[str, Any] = {}
@@ -429,7 +509,9 @@ class ContinuousEngine:
                 r = st.request
                 prompt = r.prompt[None, ...]
                 if r.temperature is not None and r.temperature > 0:
-                    self._key, k = jax.random.split(self._key)
+                    row_key, self._key = request_key(r.seed, self._key)
+                    self._slot_keys[st.slot] = np.asarray(row_key)
+                    k = jax.random.fold_in(row_key, 0)   # token index 0
                     cache, tok, first = self._admit_temp(
                         self.params, cache, tok, prompt, st.slot, k,
                         float(r.temperature))
@@ -459,8 +541,14 @@ class ContinuousEngine:
             mask = jnp.asarray(sched.table.active_mask())
             if sched.table.any_stochastic():
                 temps = jnp.asarray(sched.table.temperatures())
-                self._key, kd = jax.random.split(self._key)
-                keys = jax.random.split(kd, K)
+                # step s of slot b draws from fold_in(row_key_b, e_b + s)
+                # where e_b is the slot's own emitted count — the stream
+                # follows the REQUEST, not the engine's chunk clock
+                offsets = np.zeros((self.batch_size,), np.int32)
+                for slot, st in sched.table.active.items():
+                    offsets[slot] = len(st.emitted)
+                keys = fold_key_grid(jnp.asarray(self._slot_keys),
+                                     jnp.asarray(offsets), K)
                 cache, toks = self._chunk_temp(
                     self.params, cache, tok, mask, temps, keys, K)
             else:

@@ -12,9 +12,21 @@ different temperature never retraces.
 ``greedy_sample``'s argmax instead of dividing by a tiny epsilon and
 sampling (which would be near-argmax with categorical noise — wrong for
 a user who asked for deterministic decoding).
+
+Keys are per-REQUEST: ``key`` may be one ``(2,)`` PRNG key (all rows draw
+from it, the original behavior) or a per-row ``(B, 2)`` stack — each row
+then draws from ITS OWN key stream. The engines build per-row streams
+with ``request_key``/``fold_key_grid``: a request that sets
+``Request.seed`` gets ``PRNGKey(seed)`` folded with its own token index,
+so its sampled tokens are reproducible regardless of engine seed, batch
+composition, or admission timing (exactly reproducible on the continuous
+engine, whose per-slot geometry makes row logits batch-independent).
 """
 
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,13 +44,43 @@ def temperature_sample(logits: jnp.ndarray, key: jax.Array,
     ``temperature``: python float, scalar array, or per-slot ``(B,)``
     array. Slots with ``temperature <= 0`` take the greedy argmax
     (bit-identical to ``greedy_sample``); the rest divide by their own
-    temperature and sample categorically under ``key`` (one key per step
-    — rows draw independent samples from it).
+    temperature and sample categorically under ``key`` — one ``(2,)`` key
+    shared by the batch (rows draw independent samples from it) or a
+    ``(B, 2)`` per-row stack (each row draws from its own stream).
     """
     B = logits.shape[0]
     t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
     flat = logits.astype(jnp.float32).reshape(B, -1)
     scaled = flat / jnp.maximum(t, 1e-6)[:, None]
-    toks = jax.random.categorical(key, scaled, axis=-1)[:, None]
+    if key.ndim == 2:                    # (B, 2): per-request key streams
+        toks = jax.vmap(jax.random.categorical)(key, scaled)[:, None]
+    else:
+        toks = jax.random.categorical(key, scaled, axis=-1)[:, None]
     return jnp.where(t[:, None] <= 0.0, greedy_sample(logits),
                      toks.astype(jnp.int32))
+
+
+def request_key(seed: Optional[int], engine_key: jax.Array):
+    """One row's base key: ``PRNGKey(Request.seed)`` when the request pins
+    one (reproducible across engines/batches), else a split of the engine
+    key. Returns ``(row_key, new_engine_key)``."""
+    if seed is not None:
+        return jax.random.PRNGKey(seed), engine_key
+    engine_key, sub = jax.random.split(engine_key)
+    return sub, engine_key
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def fold_key_grid(row_keys: jnp.ndarray, offsets: jnp.ndarray,
+                  steps: int) -> jnp.ndarray:
+    """(B, 2) row keys × per-row token offsets → (steps, B, 2) step keys.
+
+    Step ``s`` of row ``b`` is ``fold_in(row_keys[b], offsets[b] + s)`` —
+    keyed by the row's OWN token index, not the engine's step counter, so
+    a seeded request's stream doesn't depend on when it was admitted or
+    what shares its batch.
+    """
+    def one(step):
+        return jax.vmap(jax.random.fold_in)(row_keys, offsets + step)
+
+    return jax.vmap(one)(jnp.arange(steps, dtype=jnp.int32))

@@ -165,6 +165,27 @@ class TestStopConditions:
             assert [len(r.tokens) for r in out] == [2, 9, 5]
             assert [r.tokens for r in out] == ref
 
+    def test_request_seed_independent_of_admission_timing(self, lm):
+        """A seeded stochastic request emits the SAME tokens served solo
+        or in a busy batch: per-slot geometry makes its logits
+        batch-independent, and its keys fold (request seed, own token
+        index) — not the engine's chunk clock."""
+        cfg, model, params = lm
+        seeded = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=7,
+                         temperature=0.9, seed=77)
+        mates = [Request(uid=i, prompt=(jnp.arange(4 + 3 * i)) %
+                         cfg.vocab_size, max_new_tokens=5 + i,
+                         temperature=1.1)
+                 for i in range(1, 4)]
+        solo_eng = ContinuousEngine(model, params, batch_size=1,
+                                    max_seq_len=64, chunk_steps=3, seed=0)
+        solo = solo_eng.generate([seeded])[0].tokens
+        busy_eng = ContinuousEngine(model, params, batch_size=2,
+                                    max_seq_len=64, chunk_steps=4, seed=5)
+        busy = busy_eng.generate(mates[:1] + [seeded] + mates[1:])
+        assert busy[1].tokens == solo
+        assert len(solo) == 7
+
     def test_capacity_validation(self, lm):
         cfg, model, params = lm
         cont = ContinuousEngine(model, params, batch_size=2, max_seq_len=16,

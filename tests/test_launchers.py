@@ -21,7 +21,8 @@ def pruned_dir(tmp_path_factory):
 
     _run(main, ["prune", "--arch", "qwen2-1.5b", "--reduced",
                 "--scheme", "irregular", "--rate", "2", "--iters", "2",
-                "--batch", "4", "--seq", "32", "--out", out])
+                "--batch", "4", "--seq", "32", "--out", out,
+                "--artifact-out", out + "/artifact"])
     return out
 
 
@@ -48,3 +49,17 @@ def test_serve_from_pruned_ckpt(pruned_dir):
                 "--ckpt", pruned_dir + "/pruned", "--requests", "2",
                 "--batch", "2", "--prompt-len", "4", "--max-new", "2",
                 "--max-seq", "64"])
+
+
+def test_serve_speculative_from_artifact(pruned_dir):
+    """--speculative <artifact-dir> --draft-k N: the saved artifact
+    drafts, the engine params verify (smoke: runs end to end and prints
+    acceptance stats)."""
+    from repro.launch.serve import main
+
+    _run(main, ["serve", "--arch", "qwen2-1.5b", "--reduced",
+                "--ckpt", pruned_dir + "/pruned", "--requests", "2",
+                "--batch", "2", "--prompt-len", "4", "--max-new", "4",
+                "--max-seq", "64",
+                "--speculative", pruned_dir + "/artifact",
+                "--draft-k", "2"])
