@@ -28,6 +28,14 @@ greedy (ANY drafter — the verifier certifies every token, so a miss is a
 rollback/lockstep bug), and the packed-drafter row at least as fast as
 dense decoding (``REPRO_MIN_SPEC_RATIO``).
 
+``BENCH_privacy_mia.json`` (``benchmarks/privacy_mia.py`` or
+``launch/pipeline.py``) — the privacy claim: the membership-inference
+AUC against the synthetic-data-pruned model must not exceed the
+real-data ADMM† baseline's or the dense teacher's by more than
+``REPRO_MAX_MIA_AUC_DELTA`` — pruning on random data must not make
+membership MORE inferable than the services it replaces. CNN rows are
+required (the pipeline acceptance path); LM rows gate when present.
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
     PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
@@ -87,6 +95,33 @@ def _derive_packed(by_key: Dict[RowKey, dict]) -> None:
     pf_p, pf_d = pk.get("cpu_ms_prefill"), de.get("cpu_ms_prefill")
     if pf_p is not None and pf_d:
         pk["prefill_factor_vs_dense"] = pf_p / pf_d
+
+
+def _derive_privacy(by_key: Dict[RowKey, dict]) -> None:
+    """Per model family, stamp the synthetic row with its MIA-AUC deltas
+    against the real-data ADMM† baseline and the dense teacher."""
+    for model in ("cnn", "lm"):
+        syn = by_key.get((model, "admm_synthetic"))
+        if syn is None or syn.get("mia_auc") is None:
+            continue
+        for ref_method, field in (("admm_real", "mia_auc_delta_vs_real"),
+                                  ("dense", "mia_auc_delta_vs_dense")):
+            ref = by_key.get((model, ref_method))
+            if ref is not None and ref.get("mia_auc") is not None:
+                syn[field] = round(syn["mia_auc"] - ref["mia_auc"], 4)
+
+
+def _privacy_summary(bk: Dict[RowKey, dict]) -> str:
+    parts = []
+    for model in ("cnn", "lm"):
+        syn = bk.get((model, "admm_synthetic"))
+        if syn is None:
+            continue
+        parts.append(
+            f"{model} synthetic MIA auc {syn.get('mia_auc')} "
+            f"(Δreal {syn.get('mia_auc_delta_vs_real', '?')}, "
+            f"Δdense {syn.get('mia_auc_delta_vs_dense', '?')})")
+    return "; ".join(parts) or "no synthetic rows"
 
 
 GATES: Tuple[GateSpec, ...] = (
@@ -178,6 +213,43 @@ GATES: Tuple[GateSpec, ...] = (
             f"{bk[('speculative',)].get('acceptance_rate')} "
             f"(draft_k {bk[('speculative',)].get('draft_k')}), "
             f"tokens identical"),
+    ),
+    GateSpec(
+        name="privacy_mia",
+        path_flag="--privacy-path",
+        key_fields=("model", "method"),
+        # the CNN triple is the pipeline acceptance path and must exist;
+        # LM rows (benchmarks/privacy_mia.py emits them) gate when present
+        required=(("cnn", "dense"), ("cnn", "admm_real"),
+                  ("cnn", "admm_synthetic")),
+        derive=_derive_privacy,
+        checks=(
+            Check(metric="mia_auc_delta_vs_real", op="<=",
+                  row=("cnn", "admm_synthetic"), default=0.05,
+                  env="REPRO_MAX_MIA_AUC_DELTA", flag="--max-mia-auc-delta",
+                  why="pruning on synthetic data must not leak more "
+                      "membership signal than the real-data ADMM "
+                      "baseline it replaces"),
+            Check(metric="mia_auc_delta_vs_dense", op="<=",
+                  row=("cnn", "admm_synthetic"), default=0.15,
+                  env="REPRO_MAX_MIA_AUC_DELTA", flag="--max-mia-auc-delta",
+                  why="the privacy-preserving service must not make the "
+                      "client's model MORE attackable than the dense "
+                      "teacher she submitted"),
+            Check(metric="mia_auc_delta_vs_real", op="<=",
+                  row=("lm", "admm_synthetic"), default=0.05,
+                  env="REPRO_MAX_MIA_AUC_DELTA", flag="--max-mia-auc-delta",
+                  why="pruning on synthetic data must not leak more "
+                      "membership signal than the real-data ADMM "
+                      "baseline it replaces"),
+            Check(metric="mia_auc_delta_vs_dense", op="<=",
+                  row=("lm", "admm_synthetic"), default=0.15,
+                  env="REPRO_MAX_MIA_AUC_DELTA", flag="--max-mia-auc-delta",
+                  why="the privacy-preserving service must not make the "
+                      "client's model MORE attackable than the dense "
+                      "teacher she submitted"),
+        ),
+        summary=_privacy_summary,
     ),
 )
 

@@ -1,0 +1,38 @@
+"""Membership-inference benchmark — the paper's privacy claim, measured.
+
+Three-way comparison per model family (reduced CNN + reduced LM): the
+dense teacher, ``admm_task_prune`` fed the REAL confidential batches
+(ADMM†, the conventional service a client would otherwise use), and
+``PrivacyPreservingPruner`` fed only synthetic data. Each target gets the
+confidence-threshold and shadow-model attacks from ``repro.privacy.mia``
+over the same member/non-member pools; rows land in
+``experiments/bench/BENCH_privacy_mia.json`` for ``check_regression.py``,
+which gates that the synthetic-data service does not make membership
+MORE inferable than the real-data baseline or the dense teacher.
+
+    PYTHONPATH=src:. python benchmarks/privacy_mia.py
+    REPRO_BENCH_FAST=1 PYTHONPATH=src:. python benchmarks/privacy_mia.py
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.privacy.report import (
+    ReportConfig,
+    print_rows,
+    run_report,
+    write_bench,
+)
+
+
+def run():
+    cfg = ReportConfig.for_mode(quick=common.fast_mode())
+    rows = run_report(cfg)
+    path = write_bench(rows)
+    print_rows(rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

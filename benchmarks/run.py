@@ -13,6 +13,8 @@ Paper-table map (DESIGN.md §6):
     table4  — problem (3) layer-wise vs problem (2) whole-model (+runtime)
     table5  — greedy ("Uniform") vs ADMM on synthetic data
     fig3    — sparse kernel acceleration (CPU measured + TPU roofline est.)
+    privacy_mia — membership-inference attacks on dense / ADMM†-real /
+            privacy-preserving-synthetic targets (the privacy claim)
     (table3 — ImageNet ResNet-18 — is covered by the scheme sweep of
      table1/table2 at matching compression rates; no ImageNet on the box.)
 """
@@ -26,21 +28,24 @@ import time
 
 
 SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
+# quick mode runs the gated suites: serving + the privacy MIA report
+GATED_SUITES = SERVE_SUITES + ("privacy_mia",)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
-                         "packed_serve,continuous_serve,speculative_serve")
+                         "packed_serve,continuous_serve,speculative_serve,"
+                         "privacy_mia")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: REPRO_BENCH_FAST=1 and only the "
-                         "serving suites check_regression.py gates on")
+                         "suites check_regression.py gates on")
     args = ap.parse_args()
     if args.quick:
         os.environ["REPRO_BENCH_FAST"] = "1"
         if args.only == "all":
-            args.only = ",".join(SERVE_SUITES)
+            args.only = ",".join(GATED_SUITES)
     want = None if args.only == "all" else set(args.only.split(","))
 
     from benchmarks import (
@@ -48,6 +53,7 @@ def main() -> None:
         continuous_serve,
         fig3_kernels,
         packed_serve,
+        privacy_mia,
         speculative_serve,
         table1_schemes,
         table2_pattern,
@@ -64,6 +70,7 @@ def main() -> None:
         "packed_serve": packed_serve.run,
         "continuous_serve": continuous_serve.run,
         "speculative_serve": speculative_serve.run,
+        "privacy_mia": privacy_mia.run,
     }
 
     summary = {}

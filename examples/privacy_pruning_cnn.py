@@ -8,7 +8,10 @@ Compares three pruning paths at the chosen (scheme, rate):
     traditional ADMM†        (baseline: needs the real dataset)
     greedy one-shot          (baseline: "Uniform" in Table V)
 then masked-retrains each on the client's confidential data and prints a
-Table-I-style comparison row for each method.
+Table-I-style comparison row for each method — including the measured
+membership-inference AUC (``repro.privacy``): how well an attacker
+thresholding the true-class posterior can tell the retraining batches
+from fresh draws. 0.5 is chance; higher means more leakage.
 """
 
 from __future__ import annotations
@@ -31,6 +34,7 @@ from repro.core.retrain import retrain
 from repro.data import ClassificationPipeline, DataConfig
 from repro.models.cnn import resnet18, vgg16
 from repro.optim import adamw
+from repro.privacy import confidence_attack, posterior_features
 
 
 def build(network: str):
@@ -51,6 +55,23 @@ def accuracy(model, params, pipe, batches=4):
         hits += int(jnp.sum(jnp.argmax(apply(params, x), -1) == y))
         total += int(y.shape[0])
     return hits / total
+
+
+def mia_auc(model, params, pipe, member_steps, batches=4):
+    """Confidence-threshold MIA AUC: member (training) batches vs fresh
+    draws from the same distribution at far-away step indices."""
+    import numpy as np
+
+    apply = jax.jit(model.apply)
+
+    def feats(steps):
+        fs = [posterior_features(apply(params, pipe.batch_at(s)[0]),
+                                 pipe.batch_at(s)[1]) for s in steps]
+        return np.concatenate(fs, axis=0)
+
+    member = feats(list(member_steps)[:batches])
+    nonmember = feats([50_000_000 + i for i in range(batches)])
+    return confidence_attack(member, nonmember, n_boot=50).auc
 
 
 def main():
@@ -114,9 +135,14 @@ def main():
     print("greedy one-shot pruning:         0.0s (magnitude only)")
 
     # ---- client retrains each with its mask --------------------------------
+    # MIA members: the early-step batches the teacher + retraining consumed
+    member_steps = range(4)
     hdr = (f"{'method':>20s} | {'rate':>6s} | {'base':>6s} | "
-           f"{'pruned':>6s} | {'loss':>6s}")
+           f"{'pruned':>6s} | {'loss':>6s} | {'mia_auc':>7s}")
     print("\n" + hdr + "\n" + "-" * len(hdr))
+    dense_mia = mia_auc(model, params, pipe, member_steps)
+    print(f"{'dense_teacher':>20s} | {1.0:>5.1f}x | {base:>6.3f} | "
+          f"{base:>6.3f} | {0.0:>+6.3f} | {dense_mia:>7.3f}")
     for name, result in jobs.items():
         retrained, _ = retrain(
             jax.random.PRNGKey(2), result.params, result.masks,
@@ -124,8 +150,10 @@ def main():
             steps=args.retrain_steps,
         )
         acc = accuracy(model, retrained, pipe)
+        m = mia_auc(model, retrained, pipe, member_steps)
         print(f"{name:>20s} | {compression_rate(result.masks):>5.1f}x | "
-              f"{base:>6.3f} | {acc:>6.3f} | {base-acc:>+6.3f}")
+              f"{base:>6.3f} | {acc:>6.3f} | {base-acc:>+6.3f} | "
+              f"{m:>7.3f}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,12 @@ Public surface:
   greedy         — one-shot magnitude baseline (Table V)
   admm_traditional — ADMM† with real data (Table I)
   retrain        — client-side masked retraining
+
+Every prune entry point stamps ``PruneResult.provenance`` with the data
+lineage it consumed (synthetic / real / none); ``to_artifact`` forwards it
+into the manifest's ``privacy`` block, and ``per_example_cross_entropy`` +
+``LMAdapter.per_example_loss`` expose the unreduced losses/posteriors the
+``repro.privacy`` membership-inference harness attacks.
 """
 
 from repro.core.admm import (
@@ -23,7 +29,11 @@ from repro.core.admm import (
     primal_step,
     proximal_step,
 )
-from repro.core.admm_traditional import admm_task_prune, cross_entropy
+from repro.core.admm_traditional import (
+    admm_task_prune,
+    cross_entropy,
+    per_example_cross_entropy,
+)
 from repro.core.distill import frobenius_distance, layerwise_loss, whole_model_loss
 from repro.core.greedy import greedy_prune
 from repro.core.masks import (

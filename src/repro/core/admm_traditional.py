@@ -20,10 +20,20 @@ from repro.core.pruner import PruneResult, PrivacyPreservingPruner, rho_schedule
 from repro.core.schemes import PruneConfig, build_specs, project_tree
 
 
-def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+def per_example_cross_entropy(logits: jnp.ndarray,
+                              labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example NLL, no reduction: (..., C) logits + (...) labels → (...).
+
+    The membership-inference harness (``repro.privacy``) consumes this —
+    MIA attacks threshold per-EXAMPLE losses/posteriors, so the prune/eval
+    path must expose them unreduced.
+    """
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
-    return jnp.mean(nll)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(per_example_cross_entropy(logits, labels))
 
 
 def admm_task_prune(
@@ -68,4 +78,6 @@ def admm_task_prune(
 
     pruned = project_tree(params, specs)
     masks = PrivacyPreservingPruner._masks(pruned, specs)
-    return PruneResult(pruned, masks, specs, history, secs)
+    return PruneResult(pruned, masks, specs, history, secs,
+                       provenance={"data": "real",
+                                   "method": "admm_traditional"})

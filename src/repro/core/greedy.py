@@ -24,5 +24,7 @@ def greedy_prune(teacher_params: Any, config: PruneConfig) -> PruneResult:
     specs = build_specs(params, config)
     pruned = project_tree(params, specs)
     masks = PrivacyPreservingPruner._masks(pruned, specs)
-    return PruneResult(pruned, masks, specs, history={"loss": [], "residual": [],
-                                                      "rho": []})
+    return PruneResult(pruned, masks, specs,
+                       history={"loss": [], "residual": [], "rho": []},
+                       provenance={"data": "none",
+                                   "method": "greedy_magnitude"})

@@ -51,6 +51,12 @@ class LMAdapter:
     def config(self) -> ModelConfig:
         return self.model.config
 
+    @property
+    def synthetic_kind(self) -> str:
+        """Which no-prior-knowledge generator feeds the pruner (provenance)."""
+        return ("uniform_tokens" if self.config.input_kind == "tokens"
+                else "normal_embeddings")
+
     # ---- SequentialAdapter protocol ----------------------------------------
 
     def synthetic_batch(self, key: jax.Array, batch_size: int) -> jnp.ndarray:
@@ -81,3 +87,14 @@ class LMAdapter:
         """Soft outputs (logits) for problem (2) / evaluation probes."""
         h, _aux, _ = self.model.hidden_states(params, batch)
         return self.model.lm_logits(params, h)
+
+    # ---- privacy-evaluation hooks ------------------------------------------
+
+    def per_example_loss(self, params, inputs, labels) -> jnp.ndarray:
+        """Per-SEQUENCE mean NLL, (B,) — the membership signal MIA attacks
+        threshold. Unreduced on purpose: ``model.train_loss`` only exposes
+        the batch mean, which is useless to a per-example attack."""
+        from repro.core.admm_traditional import per_example_cross_entropy
+
+        return per_example_cross_entropy(
+            self.apply(params, inputs), labels).mean(axis=-1)

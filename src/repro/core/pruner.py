@@ -76,12 +76,21 @@ class PruneResult:
     specs: Any                        # LayerSpec pytree used
     history: Dict[str, List[float]]   # per-iteration diagnostics
     seconds_per_iter: float = 0.0
+    # Data-lineage record for the artifact manifest's ``privacy`` block:
+    # which data the prune path consumed ("synthetic" | "real" | "none"),
+    # the generator/method that produced it. Every prune entry point in
+    # ``core`` stamps this; ``to_artifact`` forwards it so a served
+    # artifact can always answer "did pruning ever see client data?".
+    provenance: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_artifact(self, **meta):
         """Package for deployment: ``result.to_artifact().pack()``.
 
         ``meta`` key/values are recorded in the artifact manifest (e.g.
-        arch name, compression target).
+        arch name, compression target). The prune path's data-lineage
+        ``provenance`` lands under ``meta['privacy']`` (extend it with
+        ``PrunedArtifact.with_privacy`` as the model moves through
+        retraining / MIA evaluation).
         """
         from repro.sparse.artifact import PrunedArtifact
 
@@ -90,6 +99,8 @@ class PruneResult:
             "iterations": len(self.history.get("loss", [])),
             **meta,
         }
+        if self.provenance:
+            info.setdefault("privacy", dict(self.provenance))
         return PrunedArtifact(params=self.params, masks=self.masks,
                               specs=self.specs, meta=info)
 
@@ -216,7 +227,8 @@ class PrivacyPreservingPruner:
         specs_full = build_specs(params, cfg)
         pruned = project_tree(params, specs_full)
         masks = self._masks(pruned, specs_full)
-        return PruneResult(pruned, masks, specs_full, history, secs)
+        return PruneResult(pruned, masks, specs_full, history, secs,
+                           provenance=self._provenance("layerwise"))
 
     # -- whole-model (problem 2) -------------------------------------------
 
@@ -269,7 +281,8 @@ class PrivacyPreservingPruner:
 
         pruned = project_tree(params, specs)
         masks = self._masks(pruned, specs)
-        return PruneResult(pruned, masks, specs, history, secs)
+        return PruneResult(pruned, masks, specs, history, secs,
+                           provenance=self._provenance("whole_model"))
 
     def run(self, key: jax.Array, teacher_params: Any, **kw) -> PruneResult:
         if self.config.layerwise:
@@ -277,6 +290,15 @@ class PrivacyPreservingPruner:
         return self.run_whole_model(key, teacher_params, **kw)
 
     # -- helpers -------------------------------------------------------------
+
+    def _provenance(self, formulation: str) -> Dict[str, Any]:
+        """Data-lineage stamp: this path only ever saw synthetic inputs."""
+        return {
+            "data": "synthetic",
+            "generator": getattr(self.adapter, "synthetic_kind", "synthetic"),
+            "method": "privacy_preserving_admm",
+            "formulation": formulation,
+        }
 
     @staticmethod
     def _masks(pruned: Any, specs: Any) -> Any:

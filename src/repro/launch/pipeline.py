@@ -1,0 +1,224 @@
+"""The complete privacy-preserving pruning SERVICE, one command.
+
+This is the paper's product (Fig. 2, both boxes): a non-expert client
+submits a pre-trained checkpoint; the system designer prunes it on
+randomly generated synthetic data (never the client's dataset), hands the
+mask function back for client-side masked retraining, packs the result
+into a tuned servable ``PrunedArtifact``, and — new here — MEASURES the
+privacy claim with the membership-inference harness before shipping.
+
+    PYTHONPATH=src python -m repro.launch.pipeline \\
+        --arch vgg16 --reduced --quick                 # one arch
+    PYTHONPATH=src python -m repro.launch.pipeline \\
+        --arch all --reduced --quick                   # the configs/ zoo
+
+Per arch the pipeline runs, in process (reusing ``launch/prune.py`` /
+``launch/train.py`` internals, no subprocesses):
+
+  1. client checkpoint in (``--teacher-ckpt``; else a demo teacher is
+     trained on the deterministic "confidential" pipeline);
+  2. synthetic ADMM prune (``PrivacyPreservingPruner`` on
+     ``core/synthetic.py`` data);
+  3. client-side masked retraining on the confidential data;
+  4. ``PruneResult.to_artifact().with_params(retrained).pack(tune_for=…)``
+     — a packed, autotuned artifact saved under ``--out``, its manifest
+     carrying the ``privacy`` provenance block (data lineage: synthetic
+     prune → real retrain);
+  5. the three-way MIA report (dense / ADMM-real / ADMM-synthetic, with
+     THIS run's pruned model as the synthetic arm) merged into
+     ``experiments/bench/BENCH_privacy_mia.json`` and summarized into the
+     manifest (``--no-mia`` skips).
+
+The saved artifact serves directly:
+``launch/serve.py --artifact <out>/<arch>/artifact --packed``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.configs import ARCHS
+from repro.core import compression_rate, sparsity
+from repro.privacy import report as privacy_report
+from repro.privacy.report import CNN_ARCHS, ReportConfig
+
+log = logging.getLogger(__name__)
+
+
+def run_arch(
+    arch: str,
+    *,
+    cfg: ReportConfig,
+    out_dir: str,
+    teacher_ckpt: Optional[str] = None,
+    run_mia: bool = True,
+    tune: bool = True,
+    bench_path: Optional[str] = None,
+) -> Dict[str, Any]:
+    """The full service loop for one architecture; returns a summary."""
+    t0 = time.perf_counter()
+    ops = privacy_report.make_ops(arch, cfg)
+
+    # -- 1. client checkpoint ------------------------------------------------
+    if teacher_ckpt:
+        from repro.checkpoint import restore_pytree
+
+        template = ops.model.init(jax.random.PRNGKey(0))
+        teacher = restore_pytree(teacher_ckpt, template)
+        log.info("[%s] restored client checkpoint from %s", arch,
+                 teacher_ckpt)
+    else:
+        log.info("[%s] no --teacher-ckpt: training a demo teacher on the "
+                 "confidential pipeline (%d steps)", arch, cfg.teacher_steps)
+        teacher = ops.train(ops.member_steps, cfg.seed)
+
+    # -- 2. synthetic ADMM prune (the system designer; no client data) -------
+    log.info("[%s] privacy-preserving ADMM prune (%s @ %.1fx, %d iters, "
+             "synthetic data only)", arch, ops.prune_cfg.scheme, cfg.rate,
+             cfg.prune_iters)
+    result = ops.prune_synthetic(teacher)
+    log.info("[%s] pruned %.2fx (sparsity %.1f%%) — client data never "
+             "touched", arch, compression_rate(result.masks),
+             100 * sparsity(result.masks))
+
+    # -- 3. client-side masked retraining ------------------------------------
+    log.info("[%s] masked retraining on the client's confidential data "
+             "(%d steps)", arch, cfg.retrain_steps)
+    retrained = ops.retrain(result.params, result.masks)
+
+    # -- 4. pack + tune the deployment artifact ------------------------------
+    artifact = (result.to_artifact(arch=arch, scheme=ops.prune_cfg.scheme,
+                                   rate=cfg.rate)
+                .with_params(retrained)
+                .with_privacy(retrained_on="client_confidential",
+                              pipeline="repro.launch.pipeline"))
+    tune_ms = (8,) if cfg.quick else (8, 256)
+    artifact = artifact.pack(
+        tune_for=tune_ms if tune else None,
+        tune_iters=1 if cfg.quick else 3,
+    )
+
+    # -- 5. measure the privacy claim ----------------------------------------
+    rows: List[Dict[str, Any]] = []
+    if run_mia:
+        rows = privacy_report.three_way(
+            ops, cfg, teacher=teacher, synthetic=(result, retrained))
+        path = privacy_report.write_bench(rows, path=bench_path)
+        log.info("[%s] MIA report merged into %s", arch, path)
+        syn_row = next(r for r in rows if r["method"] == "admm_synthetic")
+        artifact = artifact.with_privacy(mia={
+            "attack_auc": syn_row["mia_auc"],
+            "attack_acc": syn_row["mia_acc"],
+            "attack_auc_shadow": syn_row["mia_auc_shadow"],
+            "auc_delta_vs_real": round(
+                syn_row["mia_auc"]
+                - next(r for r in rows
+                       if r["method"] == "admm_real")["mia_auc"], 4),
+            "auc_delta_vs_dense": round(
+                syn_row["mia_auc"]
+                - next(r for r in rows
+                       if r["method"] == "dense")["mia_auc"], 4),
+            "n_member": syn_row["n_member"],
+            "n_nonmember": syn_row["n_nonmember"],
+        })
+
+    artifact_dir = os.path.join(out_dir, arch, "artifact")
+    artifact.save(artifact_dir)
+    s = artifact.summary()
+    log.info("[%s] packed tuned artifact -> %s (%d/%d leaves packed, "
+             "%.2fx weight bytes)", arch, artifact_dir, s["packed_leaves"],
+             s["total_leaves"], s["bytes_ratio"])
+
+    return {
+        "arch": arch,
+        "kind": ops.kind,
+        "scheme": ops.prune_cfg.scheme,
+        "comp_rate": round(compression_rate(result.masks), 3),
+        "bytes_ratio": round(s["bytes_ratio"], 3),
+        "packed_leaves": s["packed_leaves"],
+        "artifact_dir": artifact_dir,
+        "privacy": artifact.privacy,
+        "mia_rows": len(rows),
+        "seconds": round(time.perf_counter() - t0, 1),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="end-to-end privacy-preserving pruning service")
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {CNN_ARCHS + tuple(sorted(ARCHS))}, or "
+                         f"'all' for the configs/ zoo")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced configs (the only mode this "
+                         "box runs; zoo archs are always reduced here)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale budgets for every stage")
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override ADMM prune iterations")
+    ap.add_argument("--teacher-ckpt", default=None,
+                    help="client checkpoint dir (else demo teacher)")
+    ap.add_argument("--out", default=os.path.join("experiments", "pipeline"))
+    ap.add_argument("--no-mia", action="store_true",
+                    help="skip the membership-inference report")
+    ap.add_argument("--no-tune", action="store_true",
+                    help="skip the pack-time autotune search")
+    ap.add_argument("--bench-path", default=None,
+                    help="override BENCH_privacy_mia.json location")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO)
+    if not args.reduced:
+        log.warning("full-scale configs don't fit this box; running the "
+                    "reduced variants (as --reduced)")
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    overrides: Dict[str, Any] = {"rate": args.rate}
+    if args.iters is not None:
+        overrides["prune_iters"] = args.iters
+    cfg = ReportConfig.for_mode(args.quick, **overrides)
+
+    summaries = []
+    for arch in archs:
+        try:
+            summaries.append(run_arch(
+                arch, cfg=cfg, out_dir=args.out,
+                teacher_ckpt=args.teacher_ckpt,
+                run_mia=not args.no_mia, tune=not args.no_tune,
+                bench_path=args.bench_path,
+            ))
+        except Exception:
+            if args.arch != "all":
+                raise
+            # zoo batch mode: one arch failing must not strand the rest
+            log.exception("[%s] pipeline failed; continuing the batch", arch)
+            summaries.append({"arch": arch, "error": True})
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "pipeline_summary.json"), "w") as f:
+        json.dump(summaries, f, indent=1)
+    for s in summaries:
+        if s.get("error"):
+            print(f"{s['arch']}: FAILED")
+            continue
+        mia = (s.get("privacy") or {}).get("mia")
+        mia_txt = (f", MIA auc {mia['attack_auc']:.3f} "
+                   f"(Δreal {mia['auc_delta_vs_real']:+.3f}, "
+                   f"Δdense {mia['auc_delta_vs_dense']:+.3f})"
+                   if mia else "")
+        print(f"{s['arch']}: {s['comp_rate']}x pruned, "
+              f"{s['bytes_ratio']}x weight bytes, artifact -> "
+              f"{s['artifact_dir']}{mia_txt} [{s['seconds']}s]")
+    return 1 if any(s.get("error") for s in summaries) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,37 @@ from repro.models import build_model
 log = logging.getLogger(__name__)
 
 
+def prune_config_for(
+    *,
+    scheme: str,
+    rate: float,
+    iters: int,
+    batch: int = 16,
+    tile_block: int = 128,
+    layerwise: bool = True,
+    exclude=None,
+) -> PruneConfig:
+    """The service's PruneConfig policy, shared by this CLI and
+    ``launch/pipeline.py``: tile_pattern lanes quantize the rate to
+    keep-of-8, ρ steps three times over the run."""
+    overrides = {}
+    if scheme == "tile_pattern":
+        keep = max(1, min(7, round(8 / rate)))
+        if abs(8 / keep - rate) > 1e-9:
+            log.warning(
+                "tile_pattern lanes quantize to keep %d-of-8 (%.2fx), not "
+                "the requested %.2fx", keep, 8 / keep, rate)
+        overrides = {".*": {"tile_block_p": tile_block, "tile_keep": keep}}
+    return PruneConfig(
+        scheme=scheme, alpha=1.0 / rate,
+        exclude=tuple(DEFAULT_EXCLUDE) if exclude is None else tuple(exclude),
+        iterations=iters, batch_size=batch, lr=1e-3,
+        rho_every_iters=max(iters // 3, 1),
+        layerwise=layerwise,
+        overrides=overrides,
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -71,22 +102,10 @@ def main():
     else:
         log.warning("no --teacher-ckpt: using random init (demo mode)")
 
-    overrides = {}
-    if args.scheme == "tile_pattern":
-        keep = max(1, min(7, round(8 / args.rate)))
-        if abs(8 / keep - args.rate) > 1e-9:
-            log.warning(
-                "tile_pattern lanes quantize to keep %d-of-8 (%.2fx), not "
-                "the requested %.2fx", keep, 8 / keep, args.rate)
-        overrides = {".*": {"tile_block_p": args.tile_block,
-                            "tile_keep": keep}}
-    config = PruneConfig(
-        scheme=args.scheme, alpha=1.0 / args.rate,
-        exclude=tuple(DEFAULT_EXCLUDE),
-        iterations=args.iters, batch_size=args.batch, lr=1e-3,
-        rho_every_iters=max(args.iters // 3, 1),
+    config = prune_config_for(
+        scheme=args.scheme, rate=args.rate, iters=args.iters,
+        batch=args.batch, tile_block=args.tile_block,
         layerwise=args.layerwise,
-        overrides=overrides,
     )
     adapter = LMAdapter(model, seq_len=args.seq)
     t0 = time.time()

@@ -84,6 +84,9 @@ class VGG:
     num_classes: int = 10
     image_hwc: Tuple[int, int, int] = (32, 32, 3)
 
+    # provenance tag: the pruner's synthetic batches are Uniform[0,255] pixels
+    synthetic_kind = "uniform_pixels"
+
     # VGG-16 conv plan (13 conv layers; the paper prunes the 12 CONV layers
     # after the first — N=12 in Table IV)
     VGG16_PLAN = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
@@ -177,6 +180,8 @@ class ResNet:
     blocks_per_stage: Sequence[int] = (2, 2, 2, 2)     # resnet-18
     num_classes: int = 10
     image_hwc: Tuple[int, int, int] = (32, 32, 3)
+
+    synthetic_kind = "uniform_pixels"
 
     def __post_init__(self):
         # layer plan: stem conv + per-block (conv1, conv2 [+ proj])

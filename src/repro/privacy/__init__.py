@@ -1,0 +1,46 @@
+"""Privacy subsystem: measured membership-inference resistance.
+
+The paper's product is a pruning SERVICE whose selling point is privacy —
+the system designer prunes on randomly generated synthetic data and never
+touches the client's confidential dataset. This package supplies the
+missing evidence surface for that claim:
+
+  mia      — the attack harness: confidence-threshold and shadow-model
+             membership-inference attacks, attack accuracy + AUC with
+             bootstrap CIs, over per-example posteriors/losses exposed by
+             the ``core`` hooks;
+  report   — the three-way comparison (dense / ADMM-on-real /
+             ADMM-on-synthetic) on a reduced CNN + LM pair, emitting
+             ``experiments/bench/BENCH_privacy_mia.json`` for the
+             regression gate: synthetic-data pruning must not degrade MIA
+             resistance.
+
+The end-to-end service loop lives in ``launch/pipeline.py`` (checkpoint in
+→ synthetic ADMM prune → masked retrain → packed tuned artifact + MIA
+report out); the artifact manifest's ``privacy`` block
+(``PrunedArtifact.with_privacy``) records the data lineage and measured
+attack numbers.
+"""
+
+from repro.privacy.mia import (
+    FEATURE_NAMES,
+    AttackResult,
+    auc,
+    best_threshold,
+    bootstrap_ci,
+    confidence_attack,
+    fit_logistic,
+    posterior_features,
+    sequence_features,
+    shadow_attack,
+    shadow_model_attack,
+    threshold_accuracy,
+)
+from repro.privacy.report import (
+    BENCH_PATH,
+    ReportConfig,
+    make_ops,
+    run_for_arch,
+    run_report,
+    write_bench,
+)

@@ -1,0 +1,490 @@
+"""Three-way MIA report: dense vs ADMM-on-real vs ADMM-on-synthetic.
+
+This is the paper's privacy claim made measurable. Three models of the same
+architecture, same client data, same compression target:
+
+  ``dense``           the client's pre-trained model, never pruned;
+  ``admm_real``       ADMM† pruned WITH the confidential data (the
+                      no-privacy baseline), then masked-retrained;
+  ``admm_synthetic``  the paper's ``PrivacyPreservingPruner`` — pruned on
+                      ``core/synthetic.py`` data only — then
+                      masked-retrained on the client side.
+
+Each is attacked with the ``privacy/mia.py`` harness (confidence-threshold
++ shadow-model attacks) on the SAME member/non-member pools, and the rows
+land in ``experiments/bench/BENCH_privacy_mia.json``. The gated contract
+(``benchmarks/check_regression.py``): synthetic-data pruning must not
+degrade MIA resistance versus real-data pruning or the dense baseline.
+
+Experimental design notes:
+
+* The client's "confidential dataset" is a FINITE window of the
+  deterministic pipelines (``member_batches`` batches, replayed each
+  epoch) — a finite training set is what makes membership a meaningful
+  question; the attack's non-member pool draws fresh examples from the
+  same distribution at far-away step indices.
+* Shadow models use the attacker's own disjoint step windows with the
+  same recipe — the standard "attacker mimics the training procedure"
+  assumption. One shadow ensemble is fit per architecture and transferred
+  to all three targets (per-target shadow ensembles triple the cost and
+  measure the same contrast at this scale).
+* Everything is seeded; rows carry bootstrap CIs so reduced-scale runs
+  show their own error bars.
+
+The same machinery backs ``launch/pipeline.py`` (which passes its own
+already-pruned model in as the ``admm_synthetic`` arm) and
+``benchmarks/privacy_mia.py`` (which runs the canonical reduced CNN + LM
+pair).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced_config
+from repro.core import (
+    DEFAULT_EXCLUDE,
+    LMAdapter,
+    PruneConfig,
+    PrivacyPreservingPruner,
+    admm_task_prune,
+    compression_rate,
+    cross_entropy,
+)
+from repro.core.pruner import PruneResult
+from repro.core.retrain import retrain as masked_retrain
+from repro.data import ClassificationPipeline, DataConfig, TokenPipeline
+from repro.models import build_model
+from repro.models.cnn import resnet18, resnet50_basic, vgg16
+from repro.optim import adamw
+from repro.privacy import mia
+
+log = logging.getLogger(__name__)
+
+METHODS = ("dense", "admm_real", "admm_synthetic")
+CNN_ARCHS = ("vgg16", "resnet18", "resnet50")
+
+# step-index geometry of the deterministic pipelines: member window at 0,
+# non-members far away, one disjoint stride per shadow model
+_NONMEMBER_BASE = 50_000_000
+_SHADOW_STRIDE = 1_000_000
+_SHADOW_HOLDOUT = 500_000
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+BENCH_PATH = os.path.join(_ROOT, "experiments", "bench",
+                          "BENCH_privacy_mia.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportConfig:
+    """Budget knobs for the three-way report (reduced, CPU-feasible)."""
+
+    quick: bool = False
+    teacher_steps: int = 400        # dense/shadow training steps
+    prune_iters: int = 40           # ADMM iterations (both arms)
+    retrain_steps: int = 200        # client-side masked retraining
+    member_batches: int = 4         # finite confidential set, in batches
+    shadows: int = 3                # shadow models in the attack ensemble
+    cnn_batch: int = 64
+    lm_batch: int = 16
+    seq_len: int = 32
+    rate: float = 4.0               # compression target
+    # channel-shared library patterns: same accuracy story as per-kernel
+    # "pattern" but ALWAYS packable, so the pipeline's artifact compresses
+    cnn_scheme: str = "pattern_shared"
+    lm_scheme: str = "tile_pattern"
+    tile_block: int = 32            # reduced GEMM dims tile at 32
+    n_boot: int = 200               # bootstrap resamples for CIs
+    seed: int = 0
+
+    @classmethod
+    def for_mode(cls, quick: bool, **overrides) -> "ReportConfig":
+        base = (dict(quick=True, teacher_steps=120, prune_iters=8,
+                     retrain_steps=60, shadows=2, n_boot=100)
+                if quick else {})
+        base.update(overrides)
+        return cls(**base)
+
+
+# ---------------------------------------------------------------------------
+# BenchOps: everything family-specific, closed over once per arch
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BenchOps:
+    """Family-specific operations the three-way comparison drives.
+
+    ``train`` runs the client's (or attacker's) dense recipe over a finite
+    step window; ``retrain`` is the client's masked retraining from pruned
+    weights; ``features`` maps (params, step window) → (N, 4) MIA feature
+    rows via the ``core`` per-example hooks.
+    """
+
+    kind: str                                          # "cnn" | "lm"
+    arch: str
+    model: Any                                         # has .init / .apply
+    prune_cfg: PruneConfig
+    member_steps: Sequence[int]
+    nonmember_steps: Sequence[int]
+    train: Callable[[Sequence[int], int], Any]         # (window, seed)
+    retrain: Callable[[Any, Any], Any]                 # (params, masks)
+    prune_real: Callable[[Any], PruneResult]
+    prune_synthetic: Callable[[Any], PruneResult]
+    features: Callable[[Any, Sequence[int]], np.ndarray]
+    mean_loss: Callable[[Any, Sequence[int]], float]
+
+    def shadow_windows(self, i: int) -> Tuple[List[int], List[int]]:
+        base = _SHADOW_STRIDE * (i + 1)
+        k = len(self.member_steps)
+        return ([base + j for j in range(k)],
+                [base + _SHADOW_HOLDOUT + j for j in range(k)])
+
+
+def _cycle(batch_at: Callable[[int], Any], window: Sequence[int]):
+    i = 0
+    while True:
+        yield batch_at(window[i % len(window)])
+        i += 1
+
+
+# -- CNN family --------------------------------------------------------------
+
+def _make_cnn_ops(arch: str, cfg: ReportConfig) -> BenchOps:
+    builders = {"vgg16": vgg16, "resnet18": resnet18,
+                "resnet50": resnet50_basic}
+    model = builders[arch](10, width_mult=0.125, image_hwc=(16, 16, 3))
+    pipe = ClassificationPipeline(
+        DataConfig(kind="classification", num_classes=10,
+                   global_batch=cfg.cnn_batch, image_hwc=(16, 16, 3),
+                   seed=7),
+        noise=0.35,
+    )
+    from repro.launch.prune import prune_config_for
+
+    prune_cfg = prune_config_for(
+        scheme=cfg.cnn_scheme, rate=cfg.rate, iters=cfg.prune_iters,
+        batch=32, layerwise=False,  # one jit for the whole report arm
+        exclude=tuple(DEFAULT_EXCLUDE) + (r".*head.*",),
+    )
+
+    opt = adamw(3e-3)
+
+    @jax.jit
+    def _step(p, s, batch):
+        x, y = batch
+        loss, grads = jax.value_and_grad(
+            lambda q: cross_entropy(model.apply(q, x), y))(p)
+        upd, s = opt.update(grads, s, p)
+        return jax.tree.map(lambda a, u: (a + u).astype(a.dtype), p, upd), s
+
+    def train(window: Sequence[int], seed: int):
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+        for t in range(cfg.teacher_steps):
+            params, opt_state = _step(
+                params, opt_state, pipe.batch_at(window[t % len(window)]))
+        return params
+
+    member = list(range(cfg.member_batches))
+
+    def retrain_fn(params, masks):
+        out, _ = masked_retrain(
+            jax.random.PRNGKey(cfg.seed + 2), params, masks, model.apply,
+            cross_entropy, adamw(2e-3), _cycle(pipe.batch_at, member),
+            steps=cfg.retrain_steps,
+        )
+        return out
+
+    apply_jit = jax.jit(model.apply)
+
+    def features(params, steps: Sequence[int]) -> np.ndarray:
+        rows = []
+        for s in steps:
+            x, y = pipe.batch_at(s)
+            rows.append(mia.posterior_features(apply_jit(params, x), y))
+        return np.concatenate(rows, axis=0)
+
+    def mean_loss(params, steps: Sequence[int]) -> float:
+        vals = []
+        for s in steps:
+            x, y = pipe.batch_at(s)
+            vals.append(float(cross_entropy(apply_jit(params, x), y)))
+        return float(np.mean(vals))
+
+    return BenchOps(
+        kind="cnn", arch=arch, model=model, prune_cfg=prune_cfg,
+        member_steps=member,
+        nonmember_steps=[_NONMEMBER_BASE + j
+                         for j in range(cfg.member_batches)],
+        train=train,
+        retrain=retrain_fn,
+        prune_real=lambda teacher: admm_task_prune(
+            jax.random.PRNGKey(cfg.seed + 1), teacher, model.apply,
+            _cycle(pipe.batch_at, member), prune_cfg),
+        prune_synthetic=lambda teacher: PrivacyPreservingPruner(
+            model, prune_cfg).run(jax.random.PRNGKey(cfg.seed + 1), teacher),
+        features=features,
+        mean_loss=mean_loss,
+    )
+
+
+# -- LM family ---------------------------------------------------------------
+
+def _make_lm_ops(arch: str, cfg: ReportConfig) -> BenchOps:
+    mcfg = reduced_config(arch)
+    model = build_model(mcfg)
+    adapter = LMAdapter(model, seq_len=cfg.seq_len)
+    pipe = TokenPipeline(
+        DataConfig(kind="lm", seq_len=cfg.seq_len, global_batch=cfg.lm_batch,
+                   vocab_size=mcfg.vocab_size, seed=5))
+
+    from repro.launch.prune import prune_config_for
+
+    prune_cfg = prune_config_for(
+        scheme=cfg.lm_scheme, rate=cfg.rate, iters=cfg.prune_iters,
+        batch=8, tile_block=cfg.tile_block, layerwise=False,
+    )
+
+    # dense training reuses the launch/train.py step (grads → clip → adamw);
+    # masked retraining is the SAME step with the mask function plumbed in —
+    # the client-side loop the service hands its masks to.
+    from repro.launch.train import make_train_step
+
+    opt = adamw(3e-3)
+    steps_cache: Dict[int, Callable] = {}
+
+    def _loop(params, masks, window: Sequence[int], num_steps: int):
+        key = id(masks) if masks is not None else 0
+        if key not in steps_cache:
+            steps_cache[key] = jax.jit(
+                make_train_step(model, opt, masks=masks))
+        jit_step = steps_cache[key]
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        for t in range(num_steps):
+            state, _m = jit_step(state,
+                                 pipe.batch_at(window[t % len(window)]))
+        return state["params"]
+
+    def train(window: Sequence[int], seed: int):
+        return _loop(model.init(jax.random.PRNGKey(seed)), None, window,
+                     cfg.teacher_steps)
+
+    member = list(range(cfg.member_batches))
+
+    def retrain_fn(params, masks):
+        return _loop(params, masks, member, cfg.retrain_steps)
+
+    def _tuple_iter(window: Sequence[int]):
+        for b in _cycle(pipe.batch_at, window):
+            yield b["inputs"], b["labels"]
+
+    apply_jit = jax.jit(adapter.apply)
+
+    def features(params, steps: Sequence[int]) -> np.ndarray:
+        rows = []
+        for s in steps:
+            b = pipe.batch_at(s)
+            rows.append(mia.sequence_features(
+                apply_jit(params, b["inputs"]), b["labels"]))
+        return np.concatenate(rows, axis=0)
+
+    per_seq = jax.jit(adapter.per_example_loss)
+
+    def mean_loss(params, steps: Sequence[int]) -> float:
+        vals = []
+        for s in steps:
+            b = pipe.batch_at(s)
+            vals.append(float(jnp.mean(
+                per_seq(params, b["inputs"], b["labels"]))))
+        return float(np.mean(vals))
+
+    return BenchOps(
+        kind="lm", arch=arch, model=model, prune_cfg=prune_cfg,
+        member_steps=member,
+        nonmember_steps=[_NONMEMBER_BASE + j
+                         for j in range(cfg.member_batches)],
+        train=train,
+        retrain=retrain_fn,
+        prune_real=lambda teacher: admm_task_prune(
+            jax.random.PRNGKey(cfg.seed + 1), teacher, adapter.apply,
+            _tuple_iter(member), prune_cfg),
+        prune_synthetic=lambda teacher: PrivacyPreservingPruner(
+            adapter, prune_cfg).run(jax.random.PRNGKey(cfg.seed + 1),
+                                    teacher),
+        features=features,
+        mean_loss=mean_loss,
+    )
+
+
+def make_ops(arch: str, cfg: ReportConfig) -> BenchOps:
+    if arch in CNN_ARCHS:
+        return _make_cnn_ops(arch, cfg)
+    if arch in ARCHS:
+        return _make_lm_ops(arch, cfg)
+    raise ValueError(
+        f"unknown arch '{arch}' — CNNs: {CNN_ARCHS}; zoo: {sorted(ARCHS)}")
+
+
+# ---------------------------------------------------------------------------
+# the three-way comparison
+# ---------------------------------------------------------------------------
+
+def three_way(
+    ops: BenchOps,
+    cfg: ReportConfig,
+    *,
+    teacher: Any = None,
+    synthetic: Optional[Tuple[PruneResult, Any]] = None,
+) -> List[Dict[str, Any]]:
+    """Run the comparison; returns one bench row per method.
+
+    ``teacher`` short-circuits dense training (the pipeline's restored or
+    demo-trained checkpoint); ``synthetic`` = (PruneResult, retrained
+    params) makes the pipeline's OWN pruned model the ``admm_synthetic``
+    arm, so the manifest's MIA numbers describe the shipped weights.
+    """
+    t0 = time.perf_counter()
+    if teacher is None:
+        log.info("[%s/%s] training dense teacher (%d steps)", ops.kind,
+                 ops.arch, cfg.teacher_steps)
+        teacher = ops.train(ops.member_steps, cfg.seed)
+
+    log.info("[%s/%s] ADMM† pruning on REAL member data", ops.kind, ops.arch)
+    real = ops.prune_real(teacher)
+    real_rt = ops.retrain(real.params, real.masks)
+
+    if synthetic is None:
+        log.info("[%s/%s] privacy-preserving ADMM on SYNTHETIC data",
+                 ops.kind, ops.arch)
+        syn = ops.prune_synthetic(teacher)
+        syn_rt = ops.retrain(syn.params, syn.masks)
+    else:
+        syn, syn_rt = synthetic
+
+    log.info("[%s/%s] training %d shadow model(s)", ops.kind, ops.arch,
+             cfg.shadows)
+    shadow_feats = []
+    for i in range(cfg.shadows):
+        mw, nw = ops.shadow_windows(i)
+        sp = ops.train(mw, cfg.seed + 101 + i)
+        shadow_feats.append((ops.features(sp, mw), ops.features(sp, nw)))
+
+    targets = {
+        "dense": (teacher, None),
+        "admm_real": (real_rt, real),
+        "admm_synthetic": (syn_rt, syn),
+    }
+    rows = []
+    for method, (params, result) in targets.items():
+        fm = ops.features(params, ops.member_steps)
+        fn = ops.features(params, ops.nonmember_steps)
+        conf = mia.confidence_attack(fm, fn, n_boot=cfg.n_boot,
+                                     seed=cfg.seed)
+        sh = mia.shadow_model_attack(
+            fm, fn, shadow_features=lambda i: shadow_feats[i],
+            num_shadows=cfg.shadows, n_boot=cfg.n_boot, seed=cfg.seed)
+        member_loss = ops.mean_loss(params, ops.member_steps)
+        nonmember_loss = ops.mean_loss(params, ops.nonmember_steps)
+        rows.append({
+            "model": ops.kind,
+            "arch": ops.arch,
+            "method": method,
+            "prune_data": (result.provenance.get("data")
+                           if result is not None else None),
+            "comp_rate": (round(compression_rate(result.masks), 3)
+                          if result is not None else 1.0),
+            "mia_auc": round(conf.auc, 4),
+            "mia_acc": round(conf.accuracy, 4),
+            "mia_auc_ci": [round(v, 4) for v in conf.auc_ci],
+            "mia_acc_ci": [round(v, 4) for v in conf.accuracy_ci],
+            "mia_auc_shadow": round(sh.auc, 4),
+            "mia_acc_shadow": round(sh.accuracy, 4),
+            "mia_auc_shadow_ci": [round(v, 4) for v in sh.auc_ci],
+            "member_loss": round(member_loss, 4),
+            "nonmember_loss": round(nonmember_loss, 4),
+            "loss_gap": round(nonmember_loss - member_loss, 4),
+            "n_member": int(fm.shape[0]),
+            "n_nonmember": int(fn.shape[0]),
+            "shadows": cfg.shadows,
+            "quick": cfg.quick,
+        })
+    log.info("[%s/%s] three-way report done in %.1fs", ops.kind, ops.arch,
+             time.perf_counter() - t0)
+    return rows
+
+
+def run_for_arch(
+    arch: str,
+    cfg: ReportConfig,
+    *,
+    teacher: Any = None,
+    synthetic: Optional[Tuple[PruneResult, Any]] = None,
+) -> List[Dict[str, Any]]:
+    return three_way(make_ops(arch, cfg), cfg, teacher=teacher,
+                     synthetic=synthetic)
+
+
+def run_report(cfg: ReportConfig,
+               archs: Sequence[str] = ("vgg16", "qwen2-1.5b")
+               ) -> List[Dict[str, Any]]:
+    """The canonical report: the reduced CNN + LM pair the bench gates."""
+    rows: List[Dict[str, Any]] = []
+    for arch in archs:
+        rows.extend(run_for_arch(arch, cfg))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# bench persistence (merge-write so pipeline runs accumulate)
+# ---------------------------------------------------------------------------
+
+def write_bench(rows: List[Dict[str, Any]],
+                path: Optional[str] = None) -> str:
+    """Merge rows into BENCH_privacy_mia.json, keyed by (model, method).
+
+    Merge (not overwrite): ``launch/pipeline.py --arch <one>`` refreshes
+    only its family's rows, so a CNN run never clobbers the LM rows the
+    regression gate may also be watching.
+    """
+    path = path or BENCH_PATH
+    existing: List[Dict[str, Any]] = []
+    if os.path.isfile(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    by_key = {(r.get("model"), r.get("method")): r for r in existing}
+    for r in rows:
+        by_key[(r.get("model"), r.get("method"))] = r
+    merged = sorted(by_key.values(),
+                    key=lambda r: (str(r.get("model")),
+                                   METHODS.index(r["method"])
+                                   if r.get("method") in METHODS else 99))
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1)
+    return path
+
+
+def print_rows(rows: List[Dict[str, Any]]) -> None:
+    hdr = (f"{'model':>5s} {'arch':>12s} {'method':>16s} {'rate':>6s} "
+           f"{'auc':>6s} {'acc':>6s} {'auc(sh)':>7s} {'loss_gap':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['model']:>5s} {r['arch']:>12s} {r['method']:>16s} "
+              f"{r['comp_rate']:>5.1f}x {r['mia_auc']:>6.3f} "
+              f"{r['mia_acc']:>6.3f} {r['mia_auc_shadow']:>7.3f} "
+              f"{r['loss_gap']:>8.3f}")

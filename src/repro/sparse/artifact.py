@@ -23,6 +23,14 @@ Life cycle::
 ``bind(model)`` is the seam into execution: it validates the artifact's
 tree against the model's parameter structure and returns the params tree
 (packed or dense) that the model's registry-dispatched applies consume.
+
+The manifest's ``privacy`` block (``meta['privacy']``) records data
+lineage end to end: which data the prune path consumed (``data``:
+"synthetic" | "real" | "none", stamped by ``PruneResult.provenance``),
+the synthetic generator, what the client retrained on, and — once the
+``repro.privacy`` harness has run — the measured membership-inference
+attack numbers. ``with_privacy(...)`` extends it; ``save``/``load``
+persist it with the rest of the manifest.
 """
 
 from __future__ import annotations
@@ -66,6 +74,25 @@ class PrunedArtifact:
         not just structure.
         """
         return dataclasses.replace(self, params=params, packed=None)
+
+    def with_privacy(self, **fields: Any) -> "PrunedArtifact":
+        """Extend the manifest's ``privacy`` provenance block.
+
+        The prune path seeds the block (data lineage: synthetic vs real);
+        downstream stages layer on what they know — ``retrained_on`` after
+        masked retraining, ``mia`` once the membership-inference harness
+        has measured the model. Existing keys are overwritten by ``fields``.
+        """
+        meta = dict(self.meta)
+        block = dict(meta.get("privacy") or {})
+        block.update(fields)
+        meta["privacy"] = block
+        return dataclasses.replace(self, meta=meta)
+
+    @property
+    def privacy(self) -> Optional[Dict[str, Any]]:
+        """The manifest's privacy provenance block (None if never stamped)."""
+        return self.meta.get("privacy")
 
     def pack(self, *, verify: bool = False,
              tune_for: Optional[Any] = None,

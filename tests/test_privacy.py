@@ -1,0 +1,313 @@
+"""Privacy subsystem: MIA attack math, provenance stamping, manifest block.
+
+The attack harness is plain numpy, so its contracts are tested exactly:
+AUC is the Mann–Whitney probability, thresholds are calibrated where the
+threat model says they may be, bootstrap is deterministic under its seed.
+The provenance tests pin the data-lineage story end to end: every pruning
+entry point stamps where its data came from, and the stamp survives the
+artifact manifest round trip.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PruneConfig,
+    PrivacyPreservingPruner,
+    admm_task_prune,
+    greedy_prune,
+    per_example_cross_entropy,
+)
+from repro.core.synthetic import synthetic_images
+from repro.privacy.mia import (
+    FEATURE_NAMES,
+    auc,
+    best_threshold,
+    bootstrap_ci,
+    confidence_attack,
+    fit_logistic,
+    posterior_features,
+    sequence_features,
+    shadow_attack,
+    shadow_model_attack,
+    threshold_accuracy,
+)
+
+class MLPAdapter:
+    """Minimal SequentialAdapter for a 2-layer MLP (as in test_admm)."""
+
+    num_layers = 2
+    synthetic_kind = "uniform_pixels"
+
+    def synthetic_batch(self, key, bs):
+        return synthetic_images(key, bs, (4, 4, 1)).reshape(bs, -1)
+
+    def embed(self, params, batch):
+        return batch
+
+    def layer_params(self, params, n):
+        return params["layers"][n]
+
+    def with_layer_params(self, params, n, lp):
+        layers = list(params["layers"])
+        layers[n] = lp
+        return {**params, "layers": layers}
+
+    def apply_layer(self, n, lp, x):
+        y = x @ lp["w"].T + lp["bias"]
+        return jax.nn.relu(y) if n == 0 else y
+
+    def apply(self, params, batch):
+        x = batch
+        for n in range(self.num_layers):
+            x = self.apply_layer(n, self.layer_params(params, n), x)
+        return x
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {
+        "layers": [
+            {"w": jax.random.normal(k1, (32, 16)) * 0.3,
+             "bias": jnp.zeros(32)},
+            {"w": jax.random.normal(k2, (10, 32)) * 0.3,
+             "bias": jnp.zeros(10)},
+        ]
+    }
+
+
+# ---------------------------------------------------------------------------
+# rank statistics
+# ---------------------------------------------------------------------------
+
+class TestAUC:
+    def test_perfect_separation(self):
+        assert auc([3.0, 4.0, 5.0], [0.0, 1.0, 2.0]) == 1.0
+
+    def test_reversed_separation(self):
+        assert auc([0.0, 1.0], [2.0, 3.0]) == 0.0
+
+    def test_identical_pools_are_chance(self):
+        s = [0.1, 0.5, 0.9]
+        assert auc(s, s) == pytest.approx(0.5)
+
+    def test_ties_count_half(self):
+        # one tie out of 1x1 comparisons → U = 0.5
+        assert auc([1.0], [1.0]) == pytest.approx(0.5)
+
+    def test_empty_pool_is_chance(self):
+        assert auc([], [1.0, 2.0]) == 0.5
+
+    def test_matches_pairwise_definition(self):
+        rng = np.random.default_rng(0)
+        m, n = rng.normal(0.3, 1, 40), rng.normal(0.0, 1, 50)
+        pairwise = np.mean([(a > b) + 0.5 * (a == b)
+                            for a, b in itertools.product(m, n)])
+        assert auc(m, n) == pytest.approx(float(pairwise))
+
+
+class TestThresholds:
+    def test_best_threshold_separable(self):
+        acc, thr = best_threshold([3.0, 4.0], [1.0, 2.0])
+        assert acc == 1.0
+        assert 2.0 < thr <= 3.0
+
+    def test_best_threshold_chance_floor(self):
+        # identical pools: the ±inf sentinel guarantees at least 0.5
+        acc, _ = best_threshold([1.0, 2.0], [1.0, 2.0])
+        assert acc >= 0.5
+
+    def test_threshold_accuracy_is_balanced(self):
+        # 9 members vs 1 nonmember: balanced accuracy ignores imbalance
+        acc = threshold_accuracy([1.0] * 9, [0.0], 0.5)
+        assert acc == 1.0
+        acc = threshold_accuracy([1.0] * 9, [2.0], 0.5)
+        assert acc == pytest.approx(0.5)  # TPR 1, TNR 0
+
+
+class TestBootstrap:
+    def test_deterministic_under_seed(self):
+        rng = np.random.default_rng(1)
+        m, n = rng.normal(1, 1, 30), rng.normal(0, 1, 30)
+        a = bootstrap_ci(auc, m, n, n_boot=50, seed=7)
+        b = bootstrap_ci(auc, m, n, n_boot=50, seed=7)
+        assert a == b
+        c = bootstrap_ci(auc, m, n, n_boot=50, seed=8)
+        assert a != c
+
+    def test_interval_brackets_the_statistic(self):
+        rng = np.random.default_rng(2)
+        m, n = rng.normal(1.5, 1, 100), rng.normal(0, 1, 100)
+        lo, hi = bootstrap_ci(auc, m, n, n_boot=100, seed=0)
+        assert lo <= auc(m, n) <= hi
+        assert lo > 0.5  # clearly separated pools: CI excludes chance
+
+
+# ---------------------------------------------------------------------------
+# posterior features
+# ---------------------------------------------------------------------------
+
+class TestFeatures:
+    def test_shapes_and_orientation(self):
+        # confident-correct logits vs uniform logits: every feature column
+        # must score the memorized-looking example HIGHER
+        logits = np.array([[8.0, 0.0, 0.0], [0.0, 0.0, 0.0]])
+        labels = np.array([0, 0])
+        f = posterior_features(logits, labels)
+        assert f.shape == (2, len(FEATURE_NAMES))
+        assert (f[0] > f[1]).all()
+
+    def test_true_prob_is_softmax(self):
+        logits = np.array([[1.0, 2.0, 3.0]])
+        f = posterior_features(logits, np.array([2]))
+        expect = np.exp(3.0) / np.exp([1.0, 2.0, 3.0]).sum()
+        assert f[0, 0] == pytest.approx(expect)
+        assert f[0, 1] == pytest.approx(expect)  # label 2 is also argmax
+        assert f[0, 3] == pytest.approx(np.log(expect))
+
+    def test_sequence_features_average_tokens(self):
+        logits = np.zeros((2, 5, 7))
+        labels = np.zeros((2, 5), np.int64)
+        f = sequence_features(logits, labels)
+        assert f.shape == (2, len(FEATURE_NAMES))
+        assert f[0, 0] == pytest.approx(1.0 / 7)  # uniform posterior
+
+    def test_matches_per_example_cross_entropy(self):
+        # neg_loss column must equal -per_example_cross_entropy (core hook)
+        logits = jnp.asarray(np.random.default_rng(3).normal(size=(4, 9)))
+        labels = jnp.arange(4)
+        f = posterior_features(logits, labels)
+        nll = np.asarray(per_example_cross_entropy(logits, labels))
+        np.testing.assert_allclose(f[:, 3], -nll, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# attacks
+# ---------------------------------------------------------------------------
+
+def _separable_feats(rng, n, shift):
+    return rng.normal(shift, 1.0, (n, len(FEATURE_NAMES)))
+
+
+class TestAttacks:
+    def test_confidence_attack_separable(self):
+        rng = np.random.default_rng(4)
+        res = confidence_attack(_separable_feats(rng, 60, 4.0),
+                                _separable_feats(rng, 60, 0.0),
+                                n_boot=30)
+        assert res.attack == "confidence"
+        assert res.auc > 0.95 and res.accuracy > 0.9
+        assert res.extra["feature"] == "true_prob"
+
+    def test_confidence_attack_indistinguishable(self):
+        rng = np.random.default_rng(5)
+        res = confidence_attack(_separable_feats(rng, 200, 0.0),
+                                _separable_feats(rng, 200, 0.0),
+                                n_boot=30)
+        assert abs(res.auc - 0.5) < 0.1
+
+    def test_fit_logistic_separates(self):
+        rng = np.random.default_rng(6)
+        m, n = _separable_feats(rng, 80, 2.0), _separable_feats(rng, 80, 0.0)
+        attack = fit_logistic(np.concatenate([m, n]),
+                              np.concatenate([np.ones(80), np.zeros(80)]))
+        assert attack.scores(m).mean() > attack.scores(n).mean() + 0.3
+
+    def test_shadow_attack_transfers(self):
+        rng = np.random.default_rng(7)
+        res = shadow_attack(
+            _separable_feats(rng, 50, 3.0), _separable_feats(rng, 50, 0.0),
+            _separable_feats(rng, 50, 3.0), _separable_feats(rng, 50, 0.0),
+            n_boot=30)
+        assert res.attack == "shadow"
+        assert res.auc > 0.95 and res.accuracy > 0.85
+
+    def test_shadow_model_attack_pools_shadows(self):
+        rng = np.random.default_rng(8)
+        calls = []
+
+        def shadow_features(i):
+            calls.append(i)
+            return (_separable_feats(rng, 30, 3.0),
+                    _separable_feats(rng, 30, 0.0))
+
+        res = shadow_model_attack(
+            _separable_feats(rng, 40, 3.0), _separable_feats(rng, 40, 0.0),
+            shadow_features=shadow_features, num_shadows=3, n_boot=30)
+        assert calls == [0, 1, 2]
+        assert res.extra["num_shadows"] == 3
+        assert res.extra["n_shadow_member"] == 90
+        assert res.auc > 0.9
+
+
+# ---------------------------------------------------------------------------
+# provenance stamping and the artifact's privacy block
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(scheme="irregular", alpha=1 / 4, iterations=6, lr=1e-2,
+                rho_init=1e-3, rho_every_iters=3, batch_size=8)
+    base.update(kw)
+    return PruneConfig(**base)
+
+
+class TestProvenance:
+    def test_privacy_pruner_stamps_synthetic(self, teacher):
+        res = PrivacyPreservingPruner(MLPAdapter(), _cfg()).run(
+            jax.random.PRNGKey(0), teacher)
+        assert res.provenance["data"] == "synthetic"
+        assert res.provenance["method"] == "privacy_preserving_admm"
+        assert res.provenance["formulation"] == "layerwise"
+        art = res.to_artifact(arch="tiny")
+        assert art.privacy["data"] == "synthetic"
+
+    def test_whole_model_formulation_stamp(self, teacher):
+        res = PrivacyPreservingPruner(
+            MLPAdapter(), _cfg(layerwise=False)).run(
+                jax.random.PRNGKey(0), teacher)
+        assert res.provenance["formulation"] == "whole_model"
+
+    def test_admm_real_stamps_real(self, teacher):
+        ad = MLPAdapter()
+
+        def batches():
+            key = jax.random.PRNGKey(9)
+            while True:
+                key, k1, k2 = jax.random.split(key, 3)
+                x = ad.synthetic_batch(k1, 8)
+                y = jax.random.randint(k2, (8,), 0, 10)
+                yield x, y
+
+        res = admm_task_prune(jax.random.PRNGKey(0), teacher, ad.apply,
+                              batches(), _cfg())
+        assert res.provenance == {"data": "real",
+                                  "method": "admm_traditional"}
+
+    def test_greedy_stamps_no_data(self, teacher):
+        res = greedy_prune(teacher, _cfg())
+        assert res.provenance["data"] == "none"
+
+    def test_with_privacy_round_trips_manifest(self, teacher, tmp_path):
+        art = (greedy_prune(teacher, _cfg())
+               .to_artifact(arch="tiny")
+               .with_privacy(retrained_on="client_confidential",
+                             mia={"attack_auc": 0.52}))
+        assert art.privacy["mia"]["attack_auc"] == 0.52
+        # with_privacy merges rather than replaces
+        art2 = art.with_privacy(note="x")
+        assert art2.privacy["retrained_on"] == "client_confidential"
+        assert art2.privacy["note"] == "x"
+        art2.save(str(tmp_path / "a"))
+        loaded = type(art2).load(str(tmp_path / "a"))
+        assert loaded.privacy == art2.privacy
+
+    def test_no_provenance_no_block(self, teacher):
+        import dataclasses
+        res = greedy_prune(teacher, _cfg())
+        bare = dataclasses.replace(res, provenance={})
+        assert bare.to_artifact(arch="tiny").privacy is None
