@@ -36,6 +36,14 @@ real-data ADMM† baseline's or the dense teacher's by more than
 membership MORE inferable than the services it replaces. CNN rows are
 required (the pipeline acceptance path); LM rows gate when present.
 
+``BENCH_fault_injection.json`` (``benchmarks/fault_injection.py``) —
+the reliability contract under seeded faults: every injected fault ends
+typed (shed/timeout/failed, exact counts), timed-out and quarantined
+requests keep strict solo-prefixes with batch-mates bit-identical, and
+the dense-fallback degraded mode serves correct tokens at no less than
+``REPRO_MIN_DEGRADED_RATIO`` of clean packed throughput — degradation
+trades speed, never correctness.
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
     PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
@@ -250,6 +258,57 @@ GATES: Tuple[GateSpec, ...] = (
                       "teacher she submitted"),
         ),
         summary=_privacy_summary,
+    ),
+    GateSpec(
+        name="fault_injection",
+        path_flag="--fault-path",
+        key_fields=("scenario",),
+        required=(("overload",), ("timeout",), ("degraded",),
+                  ("quarantine",)),
+        checks=(
+            Check(metric="all_typed", op="truthy", row=("overload",),
+                  why="every flooded request must terminate in a typed "
+                      "status — an untyped outcome is a hang or a crash "
+                      "waiting to happen"),
+            Check(metric="shed_exact", op="truthy", row=("overload",),
+                  why="bounded-queue shedding must be exact and "
+                      "deterministic: flood minus queue depth"),
+            Check(metric="served_tokens_match_solo", op="truthy",
+                  row=("overload",),
+                  why="load shedding must not perturb the requests that "
+                      "WERE admitted"),
+            Check(metric="timeout_prefix_ok", op="truthy", row=("timeout",),
+                  why="a timed-out request must keep a strict prefix of "
+                      "its solo tokens — stopped at the deadline, nothing "
+                      "healthy dropped, nothing emitted past the cut"),
+            Check(metric="tokens_match_dense", op="truthy",
+                  row=("degraded",),
+                  why="the dense-fallback degraded mode must serve "
+                      "exactly dense tokens — degradation trades speed, "
+                      "never correctness"),
+            Check(metric="degraded_vs_clean_ratio", op=">=",
+                  row=("degraded",), default=0.5,
+                  env="REPRO_MIN_DEGRADED_RATIO",
+                  flag="--min-degraded-ratio",
+                  why="one corrupt packed leaf served dense must not "
+                      "collapse throughput — the fallback is per-leaf, "
+                      "not whole-model"),
+            Check(metric="poisoned_prefix_ok", op="truthy",
+                  row=("quarantine",),
+                  why="a quarantined request keeps the tokens sampled "
+                      "from finite logits — a prefix of solo serving"),
+            Check(metric="mates_bit_identical", op="truthy",
+                  row=("quarantine",),
+                  why="quarantine must isolate exactly the poisoned slot "
+                      "— batch-mates' tokens bit-identical to solo"),
+        ),
+        summary=lambda bk: (
+            f"shed {bk[('overload',)].get('shed')}"
+            f"/{bk[('overload',)].get('flood')} typed, "
+            f"timeouts {bk[('timeout',)].get('timed_out')} prefix-exact, "
+            f"degraded mode "
+            f"{bk[('degraded',)].get('degraded_vs_clean_ratio')}x clean "
+            f"throughput, quarantine isolated"),
     ),
 )
 

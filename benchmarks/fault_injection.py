@@ -1,0 +1,241 @@
+"""BENCH_fault_injection — the reliability layer under measured fault load.
+
+Four scenarios, each driving a seeded injector from ``repro.testing.chaos``
+through the continuous engine and recording whether the typed-outcome
+contract held AND what it cost:
+
+  overload    a request flood against a bounded queue: sheds must be
+              exact (count = flood - queue depth - capacity admitted) and
+              TYPED, and the admitted requests' tokens untouched;
+  timeout     deadlines under a scripted clock: every timed-out request
+              keeps a strict prefix of its solo tokens (the engine
+              stopped within a chunk of the deadline, never emitted past
+              it, never dropped healthy tokens);
+  degraded    a corrupt packed leaf served via bind-time dense fallback:
+              throughput of the degraded engine over the clean packed
+              engine (``degraded_vs_clean_ratio``, gated by
+              ``REPRO_MIN_DEGRADED_RATIO`` — degradation trades speed,
+              never correctness: tokens must equal dense serving);
+  quarantine  NaN poison in one slot's KV mid-stream: the poisoned
+              request fails typed with a solo-prefix, batch-mates stay
+              bit-identical to solo serving.
+
+    PYTHONPATH=src:. python benchmarks/fault_injection.py
+    (REPRO_BENCH_FAST=1 for the CI smoke variant)
+
+Writes experiments/bench/BENCH_fault_injection.json via common.emit;
+``check_regression.py`` gates the rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.models import build_model
+from repro.sparse.packed import is_packed
+from repro.testing import ScriptedClock, corrupt_packed_index, kv_poison_hook
+from repro.utils.tree import tree_paths
+
+from benchmarks import common
+
+BATCH = 4
+MAX_SEQ = 96
+CHUNK_STEPS = 8
+TYPED = {"ok", "shed", "timeout", "cancelled", "failed"}
+
+
+def _build():
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 64, "tile_group_q": 8,
+                          "tile_keep": 4}},
+    )
+    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack()
+    return cfg, model, params, artifact
+
+
+def _reqs(n, max_new=8, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=jnp.asarray(rng.integers(0, 512, size=(6,)),
+                                       jnp.int32),
+                    max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+def _solo(model, params, requests):
+    eng = ServeEngine(model, params, batch_size=1, max_seq_len=MAX_SEQ)
+    return [eng.generate([Request(uid=r.uid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens)])[0].tokens
+            for r in requests]
+
+
+def scenario_overload(model, params) -> Dict:
+    """Flood >> capacity with a bounded queue: exact, typed shedding."""
+    flood = 8 if common.fast_mode() else 24
+    max_queue = 4
+    reqs = _reqs(flood, max_new=6)
+    solo = _solo(model, params, reqs)
+    eng = ContinuousEngine(model, params, batch_size=BATCH,
+                           max_seq_len=MAX_SEQ, chunk_steps=CHUNK_STEPS,
+                           max_queue=max_queue)
+    out = eng.generate(reqs)
+    statuses = [r.status for r in out]
+    served = [i for i, r in enumerate(out) if r.status == "ok"]
+    return {
+        "bench": "fault_injection", "scenario": "overload",
+        "flood": flood, "max_queue": max_queue, "batch": BATCH,
+        "shed": statuses.count("shed"),
+        "shed_rate": round(statuses.count("shed") / flood, 3),
+        "served_ok": len(served),
+        "all_typed": all(s in TYPED for s in statuses),
+        # everything submit() accepted is queued; everything past the
+        # bound is shed — the count is deterministic
+        "shed_exact": statuses.count("shed") == flood - max_queue,
+        "served_tokens_match_solo": all(out[i].tokens == solo[i]
+                                        for i in served),
+    }
+
+
+def scenario_timeout(model, params) -> Dict:
+    """Deadlines under a scripted clock: timed-out requests keep a strict
+    solo-prefix (stopped within a chunk of the deadline, nothing healthy
+    dropped, nothing emitted past the cut)."""
+    n = 4 if common.fast_mode() else 8
+    budget = 32
+    reqs = _reqs(n, max_new=budget)
+    solo = _solo(model, params, reqs)
+    # half the requests get a deadline that expires mid-generation: the
+    # scripted clock advances ~0.2s per engine iteration (4 reads), so a
+    # 0.2s deadline fires after roughly one chunk of a 32-token budget
+    timed = list(range(0, n, 2))
+    for i in timed:
+        reqs[i] = dataclasses.replace(reqs[i], deadline=0.2)
+    eng = ContinuousEngine(model, params, batch_size=BATCH,
+                           max_seq_len=MAX_SEQ, chunk_steps=CHUNK_STEPS)
+    out = eng.generate(reqs, clock=ScriptedClock([], tail_step=0.05))
+    tout = [i for i in timed if out[i].status == "timeout"]
+    prefix_ok = all(
+        0 < len(out[i].tokens) < budget
+        and out[i].tokens == solo[i][: len(out[i].tokens)]
+        for i in tout)
+    return {
+        "bench": "fault_injection", "scenario": "timeout",
+        "requests": n, "deadlined": len(timed),
+        "timed_out": len(tout),
+        "timeout_accuracy": round(len(tout) / max(len(timed), 1), 3),
+        "all_typed": all(r.status in TYPED for r in out),
+        "timeout_prefix_ok": bool(tout) and prefix_ok,
+        "survivors_match_solo": all(
+            out[i].tokens == solo[i] for i in range(n) if i not in timed),
+    }
+
+
+def scenario_degraded(model, artifact) -> Dict:
+    """Corrupt one packed leaf → bind serves it dense; measure what the
+    degradation costs (throughput vs the clean packed engine) and verify
+    it costs nothing in correctness (tokens == dense serving)."""
+    paths = tree_paths(artifact.packed, is_leaf=is_packed)
+    leaves = list(jax.tree.leaves(artifact.packed, is_leaf=is_packed))
+    idx = next(i for i, l in enumerate(leaves) if is_packed(l))
+    leaves[idx] = corrupt_packed_index(leaves[idx], seed=29)
+    bad = dataclasses.replace(artifact, packed=jax.tree.unflatten(
+        jax.tree.structure(artifact.packed, is_leaf=is_packed), leaves))
+
+    n = 8 if common.fast_mode() else 16
+    reqs = _reqs(n, max_new=16)
+    dense_ref = _solo(model, artifact.params, reqs)
+
+    engines = {
+        "clean": ContinuousEngine(model, artifact, batch_size=BATCH,
+                                  max_seq_len=MAX_SEQ,
+                                  chunk_steps=CHUNK_STEPS, packed=True),
+        "degraded": ContinuousEngine(model, bad, batch_size=BATCH,
+                                     max_seq_len=MAX_SEQ,
+                                     chunk_steps=CHUNK_STEPS, packed=True),
+    }
+    for eng in engines.values():          # warm compiled shapes, untimed
+        eng.generate(reqs)
+    iters = 2 if common.fast_mode() else 5
+    tps: Dict[str, List[float]] = {k: [] for k in engines}
+    toks: Dict[str, List[List[int]]] = {}
+    for _ in range(iters):
+        for name, eng in engines.items():   # interleaved against box noise
+            t0 = time.perf_counter()
+            out = eng.generate(reqs)
+            dt = time.perf_counter() - t0
+            toks[name] = [r.tokens for r in out]
+            tps[name].append(sum(len(r.tokens) for r in out) / dt)
+    clean = float(np.median(tps["clean"]))
+    degraded = float(np.median(tps["degraded"]))
+    return {
+        "bench": "fault_injection", "scenario": "degraded",
+        "corrupt_leaf": paths[idx],
+        "fallbacks": len(engines["degraded"].stats["bind_fallbacks"]),
+        "clean_tokens_per_s": round(clean, 1),
+        "degraded_tokens_per_s": round(degraded, 1),
+        "degraded_vs_clean_ratio": round(degraded / clean, 3),
+        "tokens_match_dense": toks["degraded"] == dense_ref,
+    }
+
+
+def scenario_quarantine(model, params) -> Dict:
+    """KV poison in one slot mid-stream: the poisoned request fails typed
+    with a solo-prefix; every batch-mate stays bit-identical to solo."""
+    reqs = _reqs(BATCH, max_new=16)
+    solo = _solo(model, params, reqs)
+    eng = ContinuousEngine(model, params, batch_size=BATCH,
+                           max_seq_len=MAX_SEQ, chunk_steps=4,
+                           fault_hook=kv_poison_hook(0, at_chunk=1))
+    out = eng.generate(reqs)
+    poisoned = [i for i, r in enumerate(out) if r.status == "failed"]
+    mates = [i for i in range(BATCH) if i not in poisoned]
+    return {
+        "bench": "fault_injection", "scenario": "quarantine",
+        "requests": BATCH,
+        "poisoned": len(poisoned),
+        "quarantined_slots": eng.stats["quarantined_slots"],
+        "all_typed": all(r.status in TYPED for r in out),
+        "poisoned_prefix_ok": all(
+            out[i].tokens == solo[i][: len(out[i].tokens)]
+            for i in poisoned),
+        "mates_bit_identical": bool(mates) and all(
+            out[i].tokens == solo[i] for i in mates),
+    }
+
+
+def bench() -> List[Dict]:
+    cfg, model, params, artifact = _build()
+    return [
+        scenario_overload(model, params),
+        scenario_timeout(model, params),
+        scenario_degraded(model, artifact),
+        scenario_quarantine(model, params),
+    ]
+
+
+def run() -> List[Dict]:
+    rows = bench()
+    for r in rows:
+        keys = [k for k in r if k not in ("bench", "scenario")]
+        detail = ", ".join(f"{k}={r[k]}" for k in keys[:5])
+        print(f"  fault_injection {r['scenario']:>10s}: {detail}")
+    common.emit("BENCH_fault_injection", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

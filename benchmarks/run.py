@@ -15,6 +15,8 @@ Paper-table map (DESIGN.md §6):
     fig3    — sparse kernel acceleration (CPU measured + TPU roofline est.)
     privacy_mia — membership-inference attacks on dense / ADMM†-real /
             privacy-preserving-synthetic targets (the privacy claim)
+    fault_injection — the reliability layer under seeded faults: typed
+            shedding/timeouts, quarantine isolation, degraded-mode cost
     (table3 — ImageNet ResNet-18 — is covered by the scheme sweep of
      table1/table2 at matching compression rates; no ImageNet on the box.)
 """
@@ -28,8 +30,8 @@ import time
 
 
 SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
-# quick mode runs the gated suites: serving + the privacy MIA report
-GATED_SUITES = SERVE_SUITES + ("privacy_mia",)
+# quick mode runs the gated suites: serving + privacy MIA + reliability
+GATED_SUITES = SERVE_SUITES + ("privacy_mia", "fault_injection")
 
 
 def main() -> None:
@@ -37,7 +39,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
                          "packed_serve,continuous_serve,speculative_serve,"
-                         "privacy_mia")
+                         "privacy_mia,fault_injection")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: REPRO_BENCH_FAST=1 and only the "
                          "suites check_regression.py gates on")
@@ -51,6 +53,7 @@ def main() -> None:
     from benchmarks import (
         common,
         continuous_serve,
+        fault_injection,
         fig3_kernels,
         packed_serve,
         privacy_mia,
@@ -71,6 +74,7 @@ def main() -> None:
         "continuous_serve": continuous_serve.run,
         "speculative_serve": speculative_serve.run,
         "privacy_mia": privacy_mia.run,
+        "fault_injection": fault_injection.run,
     }
 
     summary = {}

@@ -1,6 +1,9 @@
 from repro.checkpoint.checkpointer import (
+    ArtifactError,
     CheckpointManager,
+    SCHEMA_VERSION,
     load_pytree,
     restore_pytree,
     save_pytree,
+    verify_checkpoint,
 )

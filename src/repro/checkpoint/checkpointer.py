@@ -20,6 +20,15 @@ Properties required at 1000-node scale, all implemented here:
     restores a checkpoint WITHOUT a template tree (structure rebuilt from
     the manifest paths) — what artifact loading needs, since the packed
     structure is only known from the manifest itself.
+  * INTEGRITY — the manifest carries a ``schema_version`` and a CRC32 per
+    saved buffer file (packed buffers included). Every load verifies the
+    bytes it is about to deserialize and raises ``ArtifactError`` — which
+    names the checkpoint path and the exact leaf/field that failed — on a
+    flipped bit, a truncated file, a missing file, or an unparseable
+    manifest. A PatDNN-style deployment assumes artifacts arrive on-device
+    intact; this is where that assumption is checked instead of assumed.
+    ``verify_checkpoint`` runs the same byte-level pass without
+    materializing any arrays (the cheap pre-serve health check).
 
 No orbax on the box — this is a self-contained implementation.
 """
@@ -32,6 +41,7 @@ import re
 import shutil
 import tempfile
 import time
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -39,6 +49,94 @@ import numpy as np
 
 MANIFEST = "manifest.json"
 COMMIT_RE = re.compile(r"^step_(\d+)$")
+
+# bump when the manifest layout changes; loaders accept <= current.
+# v1: pre-checksum manifests (no version field); v2: + schema_version,
+# per-file crc32.
+SCHEMA_VERSION = 2
+
+
+class ArtifactError(ValueError):
+    """A checkpoint/artifact failed validation at load time.
+
+    One exception type for every way bytes on disk can disagree with the
+    manifest that describes them — missing files, truncated or bit-flipped
+    buffers, unparseable manifests, unknown schema versions, missing
+    manifest fields. ``path`` is the file or directory that failed and
+    ``field`` names what was being validated when it did, so a failure in
+    a 100-leaf artifact points at the one bad buffer instead of a raw
+    ``KeyError``/pickle traceback.
+    """
+
+    def __init__(self, message: str, *, path: Optional[str] = None,
+                 field: Optional[str] = None):
+        self.path = path
+        self.field = field
+        detail = []
+        if path is not None:
+            detail.append(f"path={path}")
+        if field is not None:
+            detail.append(f"field={field}")
+        super().__init__(
+            message + (f" [{', '.join(detail)}]" if detail else ""))
+
+
+def _read_manifest(directory: str) -> Dict:
+    mpath = os.path.join(directory, MANIFEST)
+    if not os.path.isfile(mpath):
+        raise ArtifactError("checkpoint has no manifest (missing, "
+                            "truncated copy, or not a checkpoint dir)",
+                            path=mpath, field="manifest")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ArtifactError(f"manifest is not valid JSON ({e})",
+                            path=mpath, field="manifest") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise ArtifactError("manifest lacks a 'leaves' table",
+                            path=mpath, field="leaves")
+    version = manifest.get("schema_version", 1)
+    if not isinstance(version, int) or version > SCHEMA_VERSION:
+        raise ArtifactError(
+            f"manifest schema_version {version!r} is newer than this "
+            f"loader (supports <= {SCHEMA_VERSION})",
+            path=mpath, field="schema_version")
+    return manifest
+
+
+def _read_file_bytes(directory: str, fname: str, *, leaf_path: str) -> bytes:
+    fpath = os.path.join(directory, fname)
+    if not os.path.isfile(fpath):
+        raise ArtifactError(f"buffer file for leaf {leaf_path!r} is missing",
+                            path=fpath, field=leaf_path)
+    with open(fpath, "rb") as f:
+        return f.read()
+
+
+def _verify_crc(data: bytes, meta: Dict, *, fpath: str, leaf_path: str):
+    want = meta.get("crc32")
+    if want is None:
+        return                      # v1 manifest: nothing recorded to check
+    got = zlib.crc32(data) & 0xFFFFFFFF
+    if got != int(want):
+        raise ArtifactError(
+            f"buffer bytes for leaf {leaf_path!r} do not match their "
+            f"manifest crc32 (got {got:#010x}, recorded {int(want):#010x}) "
+            "— the file was corrupted after save",
+            path=fpath, field=leaf_path)
+
+
+def _load_npy_bytes(data: bytes, *, fpath: str, leaf_path: str) -> np.ndarray:
+    import io
+
+    try:
+        return np.load(io.BytesIO(data), allow_pickle=False)
+    except Exception as e:
+        raise ArtifactError(
+            f"buffer file for leaf {leaf_path!r} is not a readable .npy "
+            f"({type(e).__name__}: {e})", path=fpath, field=leaf_path
+        ) from e
 
 # numpy has no native bfloat16: serialize as a uint16 view and record the
 # logical dtype in the manifest so restore reconstructs the exact array.
@@ -109,12 +207,22 @@ def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
         leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_packed)
         paths = _leaf_paths(tree)
         manifest = {
+            "schema_version": SCHEMA_VERSION,
             "treedef": str(treedef),
             "leaves": [],
             "containers": _container_kinds(tree),
             "extra": extra or {},
             "time": time.time(),
         }
+
+        def save_buf(arr: np.ndarray, fname: str) -> int:
+            """np.save + crc32 of the WHOLE saved file (header included), so
+            a flipped bit anywhere in the file fails verification."""
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr)
+            with open(fpath, "rb") as f:
+                return zlib.crc32(f.read()) & 0xFFFFFFFF
+
         for i, (path, leaf) in enumerate(zip(paths, leaves)):
             if _is_packed(leaf):
                 # packed-manifest entry: scheme metadata + one file/buffer
@@ -122,9 +230,10 @@ def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
                 for name, buf in zip(leaf.names, leaf.buffers):
                     arr, logical = _to_numpy(buf)
                     fname = f"leaf_{i:05d}.{name}.npy"
-                    np.save(os.path.join(tmp, fname), arr)
+                    crc = save_buf(arr, fname)
                     bufs.append({"name": name, "file": fname,
-                                 "shape": list(arr.shape), "dtype": logical})
+                                 "shape": list(arr.shape), "dtype": logical,
+                                 "crc32": crc})
                 manifest["leaves"].append({
                     "path": path,
                     "packed": {
@@ -137,10 +246,10 @@ def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
                 continue
             arr, logical = _to_numpy(leaf)
             fname = f"leaf_{i:05d}.npy"
-            np.save(os.path.join(tmp, fname), arr)
+            crc = save_buf(arr, fname)
             manifest["leaves"].append(
                 {"path": path, "file": fname, "shape": list(arr.shape),
-                 "dtype": logical}
+                 "dtype": logical, "crc32": crc}
             )
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(manifest, f)
@@ -152,17 +261,46 @@ def save_pytree(directory: str, tree: Any, *, extra: Optional[Dict] = None):
         raise
 
 
+def _entry_field(meta: Dict, key: str, *, leaf_path: str, directory: str):
+    if key not in meta:
+        raise ArtifactError(
+            f"manifest entry for leaf {leaf_path!r} lacks field {key!r}",
+            path=os.path.join(directory, MANIFEST), field=f"{leaf_path}.{key}")
+    return meta[key]
+
+
 def _load_leaf(directory: str, meta: Dict) -> Any:
-    """Materialize one manifest entry: an array or a PackedTensor."""
+    """Materialize one manifest entry (an array or a PackedTensor),
+    verifying each buffer file's recorded crc32 before deserializing."""
+    leaf_path = meta.get("path", "?")
+
+    def load_one(entry: Dict, dtype_key: str = "dtype") -> np.ndarray:
+        fname = _entry_field(entry, "file", leaf_path=leaf_path,
+                             directory=directory)
+        data = _read_file_bytes(directory, fname, leaf_path=leaf_path)
+        fpath = os.path.join(directory, fname)
+        _verify_crc(data, entry, fpath=fpath, leaf_path=leaf_path)
+        arr = _load_npy_bytes(data, fpath=fpath, leaf_path=leaf_path)
+        logical = _entry_field(entry, dtype_key, leaf_path=leaf_path,
+                               directory=directory)
+        if list(arr.shape) != list(entry.get("shape", arr.shape)):
+            raise ArtifactError(
+                f"buffer for leaf {leaf_path!r} has shape "
+                f"{list(arr.shape)}, manifest records "
+                f"{entry.get('shape')}", path=fpath, field=leaf_path)
+        return _from_numpy(arr, logical)
+
     if "packed" in meta:
         from repro.sparse.packed import PackedTensor
 
         p = meta["packed"]
+        for key in ("scheme", "shape", "meta", "buffers"):
+            _entry_field(p, key, leaf_path=leaf_path, directory=directory)
         names, bufs = [], []
         for b in p["buffers"]:
-            names.append(b["name"])
-            arr = np.load(os.path.join(directory, b["file"]))
-            bufs.append(jax.numpy.asarray(_from_numpy(arr, b["dtype"])))
+            names.append(_entry_field(b, "name", leaf_path=leaf_path,
+                                      directory=directory))
+            bufs.append(jax.numpy.asarray(load_one(b)))
         return PackedTensor(
             scheme=p["scheme"],
             shape=tuple(p["shape"]),
@@ -170,8 +308,35 @@ def _load_leaf(directory: str, meta: Dict) -> Any:
             buffers=tuple(bufs),
             meta=tuple((k, v) for k, v in p["meta"]),
         )
-    arr = np.load(os.path.join(directory, meta["file"]))
-    return _from_numpy(arr, meta["dtype"])
+    return load_one(meta)
+
+
+def verify_checkpoint(directory: str) -> Dict[str, Any]:
+    """Byte-level integrity pass over a saved checkpoint directory.
+
+    Reads the manifest and re-checks every buffer file's size and crc32
+    WITHOUT materializing any arrays — the cheap pre-serve health check a
+    deployment runs before binding an artifact. Raises ``ArtifactError``
+    on the first failure; returns ``{leaves, buffers, schema_version}``
+    on success (``buffers`` counts files actually checksummed — v1
+    manifests recorded none).
+    """
+    manifest = _read_manifest(directory)
+    checked = 0
+    for meta in manifest["leaves"]:
+        leaf_path = meta.get("path", "?")
+        entries = (meta["packed"]["buffers"] if "packed" in meta
+                   else [meta])
+        for entry in entries:
+            fname = _entry_field(entry, "file", leaf_path=leaf_path,
+                                 directory=directory)
+            data = _read_file_bytes(directory, fname, leaf_path=leaf_path)
+            _verify_crc(data, entry,
+                        fpath=os.path.join(directory, fname),
+                        leaf_path=leaf_path)
+            checked += int("crc32" in entry)
+    return {"leaves": len(manifest["leaves"]), "buffers": checked,
+            "schema_version": manifest.get("schema_version", 1)}
 
 
 def restore_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
@@ -181,14 +346,13 @@ def restore_pytree(directory: str, like: Any, *, shardings: Any = None) -> Any:
     — each leaf is device_put to its target sharding, which is how a
     checkpoint written on one mesh restores onto a different one.
     """
-    with open(os.path.join(directory, MANIFEST)) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(directory)
     leaves_like, treedef = jax.tree.flatten(like, is_leaf=_is_packed)
     if len(manifest["leaves"]) != len(leaves_like):
-        raise ValueError(
+        raise ArtifactError(
             f"checkpoint has {len(manifest['leaves'])} leaves; "
-            f"target structure has {len(leaves_like)}"
-        )
+            f"target structure has {len(leaves_like)}",
+            path=directory, field="leaves")
     arrays = [_load_leaf(directory, meta) for meta in manifest["leaves"]]
     restored = jax.tree.unflatten(treedef, arrays)
     if shardings is not None:
@@ -252,11 +416,18 @@ def load_pytree(directory: str) -> Any:
     recorded container kinds; PackedTensor leaves are reconstructed from
     their packed-manifest entries. This is the loader serving artifacts
     use — the packed structure is only knowable from the manifest itself.
+    Every buffer's crc32 is verified before deserialization; any mismatch
+    (or a missing/truncated file, or a broken manifest) raises
+    ``ArtifactError`` naming the offending leaf.
     """
-    with open(os.path.join(directory, MANIFEST)) as f:
-        manifest = json.load(f)
-    flat = {meta["path"]: _load_leaf(directory, meta)
-            for meta in manifest["leaves"]}
+    manifest = _read_manifest(directory)
+    flat = {}
+    for meta in manifest["leaves"]:
+        if "path" not in meta:
+            raise ArtifactError("manifest leaf entry lacks its 'path'",
+                                path=os.path.join(directory, MANIFEST),
+                                field="path")
+        flat[meta["path"]] = _load_leaf(directory, meta)
     return _nest(flat, manifest.get("containers"))
 
 

@@ -36,6 +36,7 @@ The saved artifact serves directly:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import logging
 import os
@@ -61,59 +62,80 @@ def run_arch(
     run_mia: bool = True,
     tune: bool = True,
     bench_path: Optional[str] = None,
+    stage_retries: int = 1,
 ) -> Dict[str, Any]:
-    """The full service loop for one architecture; returns a summary."""
+    """The full service loop for one architecture; returns a summary.
+
+    Stages run under ``runtime.fault_tolerance.StagedRun``: each stage
+    gets ``stage_retries`` extra attempts before the arch fails with a
+    ``StageError`` naming the stage, a retried stage never re-runs the
+    stages before it, and every stage's status/attempts/seconds lands in
+    ``<out>/<arch>/progress.json`` (atomically, after each stage) — the
+    post-mortem for a killed run.
+    """
+    from repro.runtime.fault_tolerance import StagedRun
+
     t0 = time.perf_counter()
     ops = privacy_report.make_ops(arch, cfg)
+    ctx: Dict[str, Any] = {}
 
-    # -- 1. client checkpoint ------------------------------------------------
-    if teacher_ckpt:
-        from repro.checkpoint import restore_pytree
+    def stage_teacher(ctx):
+        if teacher_ckpt:
+            from repro.checkpoint import restore_pytree
 
-        template = ops.model.init(jax.random.PRNGKey(0))
-        teacher = restore_pytree(teacher_ckpt, template)
-        log.info("[%s] restored client checkpoint from %s", arch,
-                 teacher_ckpt)
-    else:
-        log.info("[%s] no --teacher-ckpt: training a demo teacher on the "
-                 "confidential pipeline (%d steps)", arch, cfg.teacher_steps)
-        teacher = ops.train(ops.member_steps, cfg.seed)
+            template = ops.model.init(jax.random.PRNGKey(0))
+            ctx["teacher"] = restore_pytree(teacher_ckpt, template)
+            log.info("[%s] restored client checkpoint from %s", arch,
+                     teacher_ckpt)
+        else:
+            log.info("[%s] no --teacher-ckpt: training a demo teacher on "
+                     "the confidential pipeline (%d steps)", arch,
+                     cfg.teacher_steps)
+            ctx["teacher"] = ops.train(ops.member_steps, cfg.seed)
+        return ctx
 
-    # -- 2. synthetic ADMM prune (the system designer; no client data) -------
-    log.info("[%s] privacy-preserving ADMM prune (%s @ %.1fx, %d iters, "
-             "synthetic data only)", arch, ops.prune_cfg.scheme, cfg.rate,
-             cfg.prune_iters)
-    result = ops.prune_synthetic(teacher)
-    log.info("[%s] pruned %.2fx (sparsity %.1f%%) — client data never "
-             "touched", arch, compression_rate(result.masks),
-             100 * sparsity(result.masks))
+    def stage_prune(ctx):
+        log.info("[%s] privacy-preserving ADMM prune (%s @ %.1fx, %d "
+                 "iters, synthetic data only)", arch, ops.prune_cfg.scheme,
+                 cfg.rate, cfg.prune_iters)
+        ctx["result"] = ops.prune_synthetic(ctx["teacher"])
+        log.info("[%s] pruned %.2fx (sparsity %.1f%%) — client data never "
+                 "touched", arch, compression_rate(ctx["result"].masks),
+                 100 * sparsity(ctx["result"].masks))
+        return ctx
 
-    # -- 3. client-side masked retraining ------------------------------------
-    log.info("[%s] masked retraining on the client's confidential data "
-             "(%d steps)", arch, cfg.retrain_steps)
-    retrained = ops.retrain(result.params, result.masks)
+    def stage_retrain(ctx):
+        log.info("[%s] masked retraining on the client's confidential "
+                 "data (%d steps)", arch, cfg.retrain_steps)
+        ctx["retrained"] = ops.retrain(ctx["result"].params,
+                                       ctx["result"].masks)
+        return ctx
 
-    # -- 4. pack + tune the deployment artifact ------------------------------
-    artifact = (result.to_artifact(arch=arch, scheme=ops.prune_cfg.scheme,
-                                   rate=cfg.rate)
-                .with_params(retrained)
-                .with_privacy(retrained_on="client_confidential",
-                              pipeline="repro.launch.pipeline"))
-    tune_ms = (8,) if cfg.quick else (8, 256)
-    artifact = artifact.pack(
-        tune_for=tune_ms if tune else None,
-        tune_iters=1 if cfg.quick else 3,
-    )
+    def stage_pack(ctx):
+        artifact = (ctx["result"]
+                    .to_artifact(arch=arch, scheme=ops.prune_cfg.scheme,
+                                 rate=cfg.rate)
+                    .with_params(ctx["retrained"])
+                    .with_privacy(retrained_on="client_confidential",
+                                  pipeline="repro.launch.pipeline"))
+        tune_ms = (8,) if cfg.quick else (8, 256)
+        ctx["artifact"] = artifact.pack(
+            tune_for=tune_ms if tune else None,
+            tune_iters=1 if cfg.quick else 3,
+        )
+        return ctx
 
-    # -- 5. measure the privacy claim ----------------------------------------
-    rows: List[Dict[str, Any]] = []
-    if run_mia:
+    def stage_mia(ctx):
+        ctx["rows"] = []
+        if not run_mia:
+            return ctx
         rows = privacy_report.three_way(
-            ops, cfg, teacher=teacher, synthetic=(result, retrained))
+            ops, cfg, teacher=ctx["teacher"],
+            synthetic=(ctx["result"], ctx["retrained"]))
         path = privacy_report.write_bench(rows, path=bench_path)
         log.info("[%s] MIA report merged into %s", arch, path)
         syn_row = next(r for r in rows if r["method"] == "admm_synthetic")
-        artifact = artifact.with_privacy(mia={
+        ctx["artifact"] = ctx["artifact"].with_privacy(mia={
             "attack_auc": syn_row["mia_auc"],
             "attack_acc": syn_row["mia_acc"],
             "attack_auc_shadow": syn_row["mia_auc_shadow"],
@@ -128,24 +150,43 @@ def run_arch(
             "n_member": syn_row["n_member"],
             "n_nonmember": syn_row["n_nonmember"],
         })
+        ctx["rows"] = rows
+        return ctx
 
-    artifact_dir = os.path.join(out_dir, arch, "artifact")
-    artifact.save(artifact_dir)
-    s = artifact.summary()
-    log.info("[%s] packed tuned artifact -> %s (%d/%d leaves packed, "
-             "%.2fx weight bytes)", arch, artifact_dir, s["packed_leaves"],
-             s["total_leaves"], s["bytes_ratio"])
+    def stage_save(ctx):
+        artifact_dir = os.path.join(out_dir, arch, "artifact")
+        ctx["artifact"].save(artifact_dir)
+        s = ctx["artifact"].summary()
+        log.info("[%s] packed tuned artifact -> %s (%d/%d leaves packed, "
+                 "%.2fx weight bytes)", arch, artifact_dir,
+                 s["packed_leaves"], s["total_leaves"], s["bytes_ratio"])
+        ctx["artifact_dir"], ctx["summary"] = artifact_dir, s
+        return ctx
 
+    runner = StagedRun(
+        arch, max_retries=stage_retries,
+        progress_path=os.path.join(out_dir, arch, "progress.json"))
+    ctx = runner.run(ctx, [
+        ("teacher", stage_teacher),
+        ("prune", stage_prune),
+        ("retrain", stage_retrain),
+        ("pack", stage_pack),
+        ("mia", stage_mia),
+        ("save", stage_save),
+    ])
+
+    s = ctx["summary"]
     return {
         "arch": arch,
         "kind": ops.kind,
         "scheme": ops.prune_cfg.scheme,
-        "comp_rate": round(compression_rate(result.masks), 3),
+        "comp_rate": round(compression_rate(ctx["result"].masks), 3),
         "bytes_ratio": round(s["bytes_ratio"], 3),
         "packed_leaves": s["packed_leaves"],
-        "artifact_dir": artifact_dir,
-        "privacy": artifact.privacy,
-        "mia_rows": len(rows),
+        "artifact_dir": ctx["artifact_dir"],
+        "privacy": ctx["artifact"].privacy,
+        "mia_rows": len(ctx["rows"]),
+        "stages": [dataclasses.asdict(r) for r in runner.records],
         "seconds": round(time.perf_counter() - t0, 1),
     }
 
@@ -173,6 +214,9 @@ def main(argv=None) -> int:
                     help="skip the pack-time autotune search")
     ap.add_argument("--bench-path", default=None,
                     help="override BENCH_privacy_mia.json location")
+    ap.add_argument("--stage-retries", type=int, default=1,
+                    help="extra attempts per pipeline stage before the "
+                         "arch fails (stage-level fault tolerance)")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -186,6 +230,8 @@ def main(argv=None) -> int:
         overrides["prune_iters"] = args.iters
     cfg = ReportConfig.for_mode(args.quick, **overrides)
 
+    from repro.runtime.fault_tolerance import StageError
+
     summaries = []
     for arch in archs:
         try:
@@ -194,20 +240,29 @@ def main(argv=None) -> int:
                 teacher_ckpt=args.teacher_ckpt,
                 run_mia=not args.no_mia, tune=not args.no_tune,
                 bench_path=args.bench_path,
+                stage_retries=args.stage_retries,
             ))
-        except Exception:
+        except Exception as e:
             if args.arch != "all":
                 raise
-            # zoo batch mode: one arch failing must not strand the rest
+            # zoo batch mode: one arch failing must not strand the rest;
+            # a StageError names exactly which stage died after retries
             log.exception("[%s] pipeline failed; continuing the batch", arch)
-            summaries.append({"arch": arch, "error": True})
+            failed = {"arch": arch, "error": True}
+            if isinstance(e, StageError):
+                failed["failed_stage"] = e.stage
+                failed["attempts"] = e.attempts
+            summaries.append(failed)
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "pipeline_summary.json"), "w") as f:
         json.dump(summaries, f, indent=1)
     for s in summaries:
         if s.get("error"):
-            print(f"{s['arch']}: FAILED")
+            where = (f" at stage {s['failed_stage']!r} "
+                     f"after {s['attempts']} attempt(s)"
+                     if s.get("failed_stage") else "")
+            print(f"{s['arch']}: FAILED{where}")
             continue
         mia = (s.get("privacy") or {}).get("mia")
         mia_txt = (f", MIA auc {mia['attack_auc']:.3f} "

@@ -809,7 +809,8 @@ class LM:
 
     def decode_many(self, params, cache, tokens: jnp.ndarray,
                     num_steps: int, sampler=None, unroll: int = 4,
-                    keys: Optional[jnp.ndarray] = None):
+                    keys: Optional[jnp.ndarray] = None,
+                    with_flags: bool = False):
         """Device-resident multi-token decode: one ``lax.scan`` over steps.
 
         Samples on-device after every step and feeds the token back in, so
@@ -829,6 +830,14 @@ class LM:
         ``num_steps`` is fine, jax handles remainders).
         Returns (final cache, tokens (B, num_steps)) where column 0 is the
         token sampled AFTER feeding ``tokens`` (i.e. the continuation).
+
+        ``with_flags=True`` additionally returns per-step per-row health
+        flags (B, num_steps) bool — True where that row's logits for that
+        step were all finite. The flags are a pure OBSERVATION of the
+        logits already computed (token math is untouched, so healthy rows
+        stay bit-identical with or without flags); the serving layer uses
+        them to quarantine a NaN-poisoned slot at the exact step the
+        poison surfaced.
         """
         if sampler is None:
             from repro.serve.sampler import greedy_sample
@@ -838,13 +847,20 @@ class LM:
             cache, tok = carry
             cache, logits = self.decode_step(params, cache, tok)
             nxt = sampler(logits) if key is None else sampler(logits, key)
+            if with_flags:
+                ok = jnp.isfinite(logits).all(axis=(-2, -1))     # (B,)
+                return (cache, nxt), (nxt, ok)
             return (cache, nxt), nxt
 
-        (cache, _), toks = jax.lax.scan(
+        (cache, _), ys = jax.lax.scan(
             step, (cache, tokens), xs=keys, length=num_steps,
             unroll=min(unroll, num_steps),
         )
-        return cache, jnp.swapaxes(toks[..., 0], 0, 1)   # (B, num_steps)
+        if with_flags:
+            toks, flags = ys
+            return (cache, jnp.swapaxes(toks[..., 0], 0, 1),
+                    jnp.swapaxes(flags, 0, 1))          # (B, num_steps)
+        return cache, jnp.swapaxes(ys[..., 0], 0, 1)     # (B, num_steps)
 
     # ------------------------------------------------- chunked verify path
 

@@ -21,9 +21,11 @@ style partial failure.
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
+import os
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpoint import CheckpointManager
 from repro.runtime.straggler import StragglerMonitor
@@ -95,3 +97,126 @@ class FaultTolerantLoop:
             if step % self.save_every == 0:
                 self.manager.save(step, state, extra={"step": step})
         return state
+
+
+# --------------------------------------------------------------------------
+# Stage-granularity fault tolerance (pipelines, not training steps)
+
+
+@dataclasses.dataclass
+class StageRecord:
+    name: str
+    status: str                       # "ok" | "failed"
+    attempts: int
+    seconds: float
+    error: Optional[str] = None
+
+
+class StageError(RuntimeError):
+    """A pipeline stage exhausted its retries. Carries which stage and the
+    last cause, so batch drivers can report precisely and move on."""
+
+    def __init__(self, stage: str, attempts: int, cause: BaseException):
+        super().__init__(
+            f"stage {stage!r} failed after {attempts} attempt(s): {cause}")
+        self.stage = stage
+        self.attempts = attempts
+        self.cause = cause
+
+
+class StagedRun:
+    """``FaultTolerantLoop``'s contract at PIPELINE granularity.
+
+    A pipeline (e.g. ``launch/pipeline.run_arch``: teacher → prune →
+    retrain → pack → MIA → save) is a short sequence of expensive, named
+    stages — the step-indexed checkpoint loop above is the wrong shape
+    for it. This driver runs ``fn(carry) -> carry`` stages in order with:
+
+      * bounded per-stage retries (``max_retries`` EXTRA attempts after
+        the first) — a transient fault in stage 4 re-runs stage 4 only,
+        never the stages already completed (their results stay in the
+        carry: stage-level resume within the run);
+      * a terminal ``StageError`` naming the stage once retries are
+        exhausted, so a batch driver (``--arch all``) fails ONE unit and
+        continues;
+      * a progress file (JSON, atomically replaced after every stage)
+        recording each stage's status/attempts/seconds — the post-mortem
+        for a killed run, and the resume ledger: pass
+        ``completed_stages()`` of a previous run as ``skip`` together
+        with a carry rebuilt from its persisted outputs to resume a
+        partially-finished unit across processes;
+      * stage wall times fed to a ``StragglerMonitor`` (a stage running
+        3+ MAD over the others' median is flagged, same policy as the
+        training loop).
+    """
+
+    def __init__(self, name: str, *, max_retries: int = 1,
+                 progress_path: Optional[str] = None,
+                 straggler: Optional[StragglerMonitor] = None):
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self.name = name
+        self.max_retries = max_retries
+        self.progress_path = progress_path
+        self.straggler = straggler
+        self.records: List[StageRecord] = []
+
+    @staticmethod
+    def completed_stages(progress_path: str) -> List[str]:
+        """Stage names a previous run finished, in order ([] if the file
+        is missing/corrupt — resume degrades to a fresh run)."""
+        try:
+            with open(progress_path) as f:
+                doc = json.load(f)
+            return [r["name"] for r in doc.get("stages", [])
+                    if r.get("status") == "ok"]
+        except (OSError, ValueError, KeyError, TypeError):
+            return []
+
+    def _write_progress(self) -> None:
+        if self.progress_path is None:
+            return
+        doc = {"name": self.name,
+               "stages": [dataclasses.asdict(r) for r in self.records]}
+        d = os.path.dirname(self.progress_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.progress_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, self.progress_path)
+
+    def run(self, carry: Any,
+            stages: Sequence[Tuple[str, Callable[[Any], Any]]],
+            *, skip: Sequence[str] = ()) -> Any:
+        skip_set = set(skip)
+        for i, (sname, fn) in enumerate(stages):
+            if sname in skip_set:
+                log.info("[%s] stage %s: resumed from previous run, "
+                         "skipping", self.name, sname)
+                continue
+            attempts = 0
+            while True:
+                attempts += 1
+                t0 = time.perf_counter()
+                try:
+                    carry = fn(carry)
+                    dt = time.perf_counter() - t0
+                    break
+                except Exception as e:  # noqa: BLE001 — fault boundary
+                    dt = time.perf_counter() - t0
+                    if attempts > self.max_retries:
+                        self.records.append(StageRecord(
+                            sname, "failed", attempts, round(dt, 3),
+                            error=f"{type(e).__name__}: {e}"))
+                        self._write_progress()
+                        raise StageError(sname, attempts, e) from e
+                    log.warning("[%s] stage %s failed (%s); retry %d/%d",
+                                self.name, sname, e, attempts,
+                                self.max_retries)
+            if self.straggler is not None:
+                self.straggler.record(i, dt)
+            self.records.append(StageRecord(sname, "ok", attempts,
+                                            round(dt, 3)))
+            self._write_progress()
+        return carry

@@ -58,9 +58,67 @@ emission, retire conditions); admission policy and micro-chunk sizing is
 ``serve/scheduler.py``; samplers (vectorized per-slot temperature,
 ``temperature <= 0`` → exact greedy, per-request key streams via
 ``Request.seed``) are ``serve/sampler.py``.
+
+Reliability contract (PR 7):
+
+``Result.status`` state machine — every submitted request terminates in
+exactly one of five typed states; nothing queues forever and nothing
+crashes the batch:
+
+                 submit
+                   │
+         queue full / unservable ──────────────▶ shed      (tokens: [])
+                   │
+                 queued ── deadline passed ────▶ timeout   (tokens: [])
+                   │          or cancel()                  (never prefilled)
+                 admitted
+                   │
+          ┌────────┼──────────────┬──────────────┐
+      ran to its   │  deadline/cancel()      non-finite
+      own stop     │  between chunks         logits in slot
+          │        │      │                      │
+          ▼        ▼      ▼                      ▼
+         ok            timeout/cancelled       failed
+                       (partial tokens)        (tokens up to the last
+                                                healthy step; the slot is
+                                                QUARANTINED — never
+                                                readmitted, its KV holds
+                                                NaN)
+
+State is checked only BETWEEN micro-chunks/dispatches: a dispatched chunk
+always completes, so cancellation/expiry costs at most one chunk of
+decode. Quarantine isolates exactly the poisoned slot — batch-mates'
+tokens stay bit-identical to solo serving (rows are independent through
+every batched op, and the flags that detect the poison observe logits
+without touching token math).
+
+Degradation ladder — each rung trades speed for survival, never
+correctness, and every demotion is recorded in the engine's ``.stats``:
+
+  speculative ──▶ continuous/plain ──▶ dense
+    drafter acceptance collapses         corrupt PackedTensor leaf
+    (< demote_below after               (``validate_packed`` fails at
+    demote_after drafted tokens)         bind): that leaf serves from
+    or drafter artifact fails            the bound dense params
+    verification → plain decoding        (``bind_report``/
+    from the same target cache           ``stats["bind_fallbacks"]``)
+    (``stats["demotions"]``)
+
+Artifact integrity backs the bottom rung: every saved buffer carries a
+CRC32 in a versioned manifest (``repro.checkpoint``), verified on load —
+disk corruption surfaces as ``checkpoint.ArtifactError`` (with path +
+field) before weights ever reach an engine; ``repro.testing.chaos``
+injects all of the above deterministically and ``tests/test_chaos.py``
+holds the guarantees.
 """
 
-from repro.serve.engine import ContinuousEngine, ServeEngine, Request, Result
+from repro.serve.engine import (
+    CancelToken,
+    ContinuousEngine,
+    Request,
+    Result,
+    ServeEngine,
+)
 from repro.serve.sampler import greedy_sample, temperature_sample
 from repro.serve.scheduler import Scheduler
 from repro.serve.slots import SlotState, SlotTable, trim_at_eos

@@ -58,6 +58,24 @@ from repro.serve.scheduler import Scheduler
 from repro.serve.slots import trim_at_eos
 
 
+class CancelToken:
+    """Host-side cancel handle: the submitter flips it, the engine reads
+    it between micro-chunks (never mid-scan — a dispatched chunk always
+    finishes; cancellation costs at most one chunk of extra decode)."""
+
+    __slots__ = ("_cancelled",)
+
+    def __init__(self) -> None:
+        self._cancelled = False
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -68,12 +86,32 @@ class Request:
     seed: Optional[int] = None       # per-request PRNG stream: token i draws
     # from fold_in(PRNGKey(seed), i) on every engine, so a stochastic
     # request reproduces regardless of engine seed or batch-mates
+    deadline: Optional[float] = None  # absolute seconds on the ENGINE clock
+    # (same clock as ``arrivals``); past it the request is reaped between
+    # chunks with status "timeout" — queued requests before ever costing a
+    # prefill, live ones keeping the tokens emitted so far
+    cancel_token: CancelToken = dataclasses.field(default_factory=CancelToken)
+
+    def cancel(self) -> None:
+        """Request-scoped cancellation; honored at the next chunk edge."""
+        self.cancel_token.cancel()
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel_token.cancelled
 
 
 @dataclasses.dataclass
 class Result:
     uid: int
     tokens: List[int]
+    # terminal disposition — the reliability state machine:
+    #   ok        ran to its own stop (max_new_tokens / eos)
+    #   shed      never queued: bounded queue (or capacity check) rejected it
+    #   timeout   deadline passed (tokens = partial output, possibly [])
+    #   cancelled cancel() fired   (tokens = partial output, possibly [])
+    #   failed    slot poisoned (non-finite logits) or engine gave up on it
+    status: str = "ok"
 
 
 def _bucketed_generate(requests: List[Request], batch_size: int,
@@ -139,41 +177,48 @@ def _stochastic_rows(requests: List[Request], batch_size: int,
     return temps, row_keys, engine_key
 
 
-def _scan_decode_fns(model: LM, sampler: Callable):
+def _scan_decode_fns(model: LM, sampler: Callable, with_flags: bool = False):
     """The masked decode-scan wrappers both engines jit: free/pad slots'
     sampled tokens pin to 0 under ``mask``; the temp variant threads
     per-slot temperatures and per-step keys (all traced arguments, so
-    new requests never retrace)."""
+    new requests never retrace). ``with_flags`` forwards to
+    ``decode_many`` — the continuous engine's per-slot NaN guard; the
+    flags observe the logits without touching token math, so flagged and
+    unflagged programs emit bit-identical tokens."""
 
     def scan_decode(p, cache, tok, mask, num_steps):
         samp = lambda logits: sampler(logits) * mask[:, None]
-        return model.decode_many(p, cache, tok, num_steps, sampler=samp)
+        return model.decode_many(p, cache, tok, num_steps, sampler=samp,
+                                 with_flags=with_flags)
 
     def scan_decode_temp(p, cache, tok, mask, temps, keys, num_steps):
         samp = lambda logits, key: (
             temperature_sample(logits, key, temps) * mask[:, None])
         return model.decode_many(p, cache, tok, num_steps, sampler=samp,
-                                 keys=keys)
+                                 keys=keys, with_flags=with_flags)
 
     return scan_decode, scan_decode_temp
 
 
 def _resolve_params(model: LM, params: Any, packed: bool):
     """Accept a raw params tree, a ``PruneResult``, or a ``PrunedArtifact``
-    and return bound serving params (packed or dense)."""
+    and return ``(bound params, bind_report)`` — the report records any
+    corrupt packed leaves ``bind`` degraded to dense serving (None for raw
+    trees, which have nothing to degrade)."""
     from repro.core.pruner import PruneResult
     from repro.sparse import PrunedArtifact
 
     if isinstance(params, PruneResult):
         params = params.to_artifact()
     if isinstance(params, PrunedArtifact):
-        return params.bind(model, packed=packed)
+        bound = params.bind(model, packed=packed)
+        return bound, params.bind_report
     if packed:
         raise TypeError(
             "packed=True needs a PrunedArtifact (or PruneResult); got a "
             "raw params tree — build one via PruneResult.to_artifact()"
         )
-    return params
+    return params, None
 
 
 class ServeEngine:
@@ -230,7 +275,8 @@ class ServeEngine:
         bit-identical to this engine's own; ``engine.speculative.stats``
         has the acceptance numbers."""
         self.model = model
-        self.params = _resolve_params(model, params, packed)
+        self.params, self.bind_report = _resolve_params(model, params,
+                                                        packed)
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.sampler = sampler
@@ -395,7 +441,34 @@ class ContinuousEngine:
         packed: bool = False,
         flash: Optional[bool] = None,
         seed: int = 0,
+        max_queue: Optional[int] = None,
+        strict: bool = True,
+        straggler: Optional[Any] = None,
+        fault_hook: Optional[Callable[..., Any]] = None,
     ):
+        """Reliability knobs (see ``serve.__init__`` for the contract):
+
+        ``max_queue`` — bounded admission queue: submissions beyond this
+        depth come back ``status="shed"`` instead of queueing without
+        limit. None = unbounded (the pre-reliability behavior).
+
+        ``strict`` — oversized requests (prompt + budget > cache
+        capacity): True raises ``ValueError`` up front (library misuse —
+        the historical contract); False sheds them typed
+        (``status="shed"``) and serves the rest — the service posture,
+        where one bad request must not kill the batch.
+
+        ``straggler`` — optional ``runtime.straggler.StragglerMonitor``;
+        every micro-chunk's wall time is recorded against it, so slow
+        chunks (contended host, faulted device) surface as events in
+        ``stats["straggler_events"]`` rather than silent latency.
+
+        ``fault_hook`` — ``(cache, scheduler) -> cache | None``, called
+        once per chunk edge BEFORE dispatch. This is the chaos-injection
+        seam (``repro.testing.chaos``): token prompts are int32, so a
+        NaN-poisoning fault can only enter through the cache, exactly
+        like a real XLA/memory fault would. Production leaves it None.
+        """
         if model.config.family == "ssm":
             raise NotImplementedError(
                 "ContinuousEngine manages KV-cache slots; xLSTM "
@@ -405,10 +478,15 @@ class ContinuousEngine:
         if chunk_steps < 1:
             raise ValueError("chunk_steps must be >= 1")
         self.model = model
-        self.params = _resolve_params(model, params, packed)
+        self.params, self.bind_report = _resolve_params(model, params,
+                                                        packed)
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.chunk_steps = chunk_steps
+        self.max_queue = max_queue
+        self.strict = strict
+        self.straggler = straggler
+        self.fault_hook = fault_hook
         self._key = jax.random.PRNGKey(seed)
         # per-slot request key streams (seeded requests reproduce exactly:
         # slot logits are batch-independent, and token i always draws from
@@ -424,7 +502,7 @@ class ContinuousEngine:
             first = greedy_sample(logits)                      # (1, 1)
             tok = jax.lax.dynamic_update_slice(
                 tok, first, (jnp.asarray(slot, jnp.int32), jnp.int32(0)))
-            return cache, tok, first
+            return cache, tok, first, jnp.isfinite(logits).all()
 
         def admit_temp(p, cache, tok, prompt, slot, key, temp):
             cache, logits = model.prefill_into_slot(p, cache, prompt, slot,
@@ -432,9 +510,13 @@ class ContinuousEngine:
             first = temperature_sample(logits, key, temp)
             tok = jax.lax.dynamic_update_slice(
                 tok, first, (jnp.asarray(slot, jnp.int32), jnp.int32(0)))
-            return cache, tok, first
+            return cache, tok, first, jnp.isfinite(logits).all()
 
-        chunk_greedy, chunk_temp = _scan_decode_fns(model, greedy_sample)
+        # decode chunks carry per-slot per-step finite-logit flags: the
+        # NaN guard the scheduler quarantines on (observation only —
+        # tokens stay bit-identical to the unflagged program)
+        chunk_greedy, chunk_temp = _scan_decode_fns(model, greedy_sample,
+                                                    with_flags=True)
 
         donate = (1,) if jax.default_backend() == "tpu" else ()
         # slot admission recompiles per prompt length S only (slot index,
@@ -484,18 +566,33 @@ class ContinuousEngine:
         arr = [0.0] * n if arrivals is None else [float(a) for a in arrivals]
         if len(arr) != n:
             raise ValueError("arrivals must match requests")
-        for r in requests:
+        counts = {"ok": 0, "shed": 0, "timeout": 0, "cancelled": 0,
+                  "failed": 0}
+
+        def finish(order: int, uid: int, tokens: List[int], status: str):
+            counts[status] += 1
+            return order, Result(uid=uid, tokens=tokens, status=status)
+
+        oversized = set()
+        for i, r in enumerate(requests):
             S = int(r.prompt.shape[0])
             if not self._ring and S + r.max_new_tokens - 1 > self._capacity:
-                raise ValueError(
-                    f"request uid={r.uid}: prompt {S} + max_new_tokens "
-                    f"{r.max_new_tokens} exceeds cache capacity "
-                    f"{self._capacity} — raise max_seq_len"
-                )
+                if self.strict:
+                    raise ValueError(
+                        f"request uid={r.uid}: prompt {S} + max_new_tokens "
+                        f"{r.max_new_tokens} exceeds cache capacity "
+                        f"{self._capacity} — raise max_seq_len"
+                    )
+                oversized.add(i)
 
-        sched = Scheduler(self.batch_size, self.chunk_steps)
+        sched = Scheduler(self.batch_size, self.chunk_steps,
+                          max_queue=self.max_queue)
         for i in sorted(range(n), key=lambda i: arr[i]):   # FIFO by arrival
-            sched.submit(i, requests[i], arr[i])
+            if i in oversized or not sched.submit(i, requests[i], arr[i]):
+                # typed load-shedding: a full bounded queue (or, in
+                # non-strict mode, an unservable request) rejects at the
+                # door instead of queueing work that cannot complete
+                yield finish(i, requests[i].uid, [], "shed")
 
         cache = self.model.init_cache(self.batch_size, self.max_seq_len)
         tok = jnp.zeros((self.batch_size, 1), jnp.int32)
@@ -504,27 +601,47 @@ class ContinuousEngine:
             else (lambda: time.perf_counter() - t0)
 
         while not sched.done:
+            t = now()
+            # ---- reap dead requests before they cost anything -------------
+            for order, r, status in sched.reap_queue(t):
+                yield finish(order, r.uid, [], status)
             # ---- admit arrived requests into free slots -------------------
-            for st in sched.ready_admissions(now()):
+            for st in sched.ready_admissions(t):
                 r = st.request
                 prompt = r.prompt[None, ...]
                 if r.temperature is not None and r.temperature > 0:
                     row_key, self._key = request_key(r.seed, self._key)
                     self._slot_keys[st.slot] = np.asarray(row_key)
                     k = jax.random.fold_in(row_key, 0)   # token index 0
-                    cache, tok, first = self._admit_temp(
+                    cache, tok, first, ok = self._admit_temp(
                         self.params, cache, tok, prompt, st.slot, k,
                         float(r.temperature))
                 else:
-                    cache, tok, first = self._admit_greedy(
+                    cache, tok, first, ok = self._admit_greedy(
                         self.params, cache, tok, prompt, st.slot)
+                if not bool(np.asarray(ok)):
+                    # poisoned from the first logits: the slot's KV rows
+                    # already hold NaN — quarantine the lane immediately
+                    sched.table.quarantine(st.slot)
+                    yield finish(st.order, r.uid, [], "failed")
+                    continue
                 # the admission's one host sync: the first token (needed
                 # for the eos/max_new check before the next chunk)
                 if st.push([int(np.asarray(first)[0, 0])]):
                     sched.table.retire(st.slot)
-                    yield st.order, Result(uid=r.uid, tokens=st.emitted)
+                    yield finish(st.order, r.uid, st.emitted, "ok")
+            # ---- reap live slots whose deadline/cancel fired --------------
+            for st in sched.reap_active(now()):
+                yield finish(st.order, st.request.uid, st.emitted, st.status)
 
             if not sched.table.active:
+                if sched.table.num_free == 0 and sched.pending:
+                    # every lane is quarantined and requests still queue:
+                    # nothing can ever admit — fail the backlog typed
+                    # instead of spinning forever
+                    for order, r, status in sched.fail_pending():
+                        yield finish(order, r.uid, [], status)
+                    break
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
@@ -536,7 +653,14 @@ class ContinuousEngine:
                     time.sleep(min(wait, 0.05) if clock is None else 1e-4)
                 continue
 
+            # ---- chaos seam: deterministic cache-level fault injection ----
+            if self.fault_hook is not None:
+                injected = self.fault_hook(cache, sched)
+                if injected is not None:
+                    cache = injected
+
             # ---- one decode micro-chunk -----------------------------------
+            t_chunk = now()
             K = sched.chunk_len()
             mask = jnp.asarray(sched.table.active_mask())
             if sched.table.any_stochastic():
@@ -549,20 +673,34 @@ class ContinuousEngine:
                     offsets[slot] = len(st.emitted)
                 keys = fold_key_grid(jnp.asarray(self._slot_keys),
                                      jnp.asarray(offsets), K)
-                cache, toks = self._chunk_temp(
+                cache, toks, flags = self._chunk_temp(
                     self.params, cache, tok, mask, temps, keys, K)
             else:
-                cache, toks = self._chunk_greedy(
+                cache, toks, flags = self._chunk_greedy(
                     self.params, cache, tok, mask, K)
             tok = toks[:, -1:]
-            # ONE device→host transfer per chunk
-            toks_np = np.asarray(jax.device_get(toks))
-            for st in sched.absorb_chunk(toks_np, K):
-                yield st.order, Result(uid=st.request.uid, tokens=st.emitted)
+            # ONE device→host transfer per chunk (tokens + health flags
+            # ride the same sync)
+            toks_np, flags_np = jax.device_get((toks, flags))
+            toks_np = np.asarray(toks_np)
+            if self.straggler is not None:
+                # per-chunk watchdog: the transfer above synced the chunk,
+                # so the delta is real device+host time for these K steps
+                self.straggler.record(sched.chunks, max(now() - t_chunk,
+                                                        0.0))
+            for st in sched.absorb_chunk(toks_np, K,
+                                         ok=np.asarray(flags_np)):
+                yield finish(st.order, st.request.uid, st.emitted, st.status)
 
         self.stats = {
             "chunks": sched.chunks,
             "occupancy": sched.occupancy(),
             "busy_slot_steps": sched.busy_slot_steps,
             "total_slot_steps": sched.total_slot_steps,
+            "statuses": counts,
+            "quarantined_slots": list(sched.table.quarantined),
+            "straggler_events": (len(self.straggler.events)
+                                 if self.straggler is not None else 0),
+            "bind_fallbacks": (dict(self.bind_report["fallbacks"])
+                               if self.bind_report else {}),
         }

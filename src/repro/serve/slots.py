@@ -51,6 +51,9 @@ class SlotState:
     request: Any                      # serve.engine.Request
     emitted: List[int] = dataclasses.field(default_factory=list)
     admitted_at: float = 0.0
+    # terminal disposition, stamped at retire time by the engine:
+    # "ok" | "timeout" | "cancelled" | "failed" (see serve.engine.Result)
+    status: str = "ok"
 
     @property
     def remaining(self) -> int:
@@ -89,6 +92,7 @@ class SlotTable:
         self.batch_size = batch_size
         self._free: List[int] = list(range(batch_size - 1, -1, -1))
         self.active: Dict[int, SlotState] = {}
+        self.quarantined: List[int] = []
 
     @property
     def num_active(self) -> int:
@@ -110,6 +114,20 @@ class SlotTable:
     def retire(self, slot: int) -> SlotState:
         state = self.active.pop(slot)
         self._free.append(slot)
+        return state
+
+    def quarantine(self, slot: int) -> SlotState:
+        """Retire a poisoned slot WITHOUT returning it to the free list.
+
+        A slot whose KV rows carry NaN/Inf must never be re-admitted into:
+        masked attention zeroes the WEIGHT of stale positions, but
+        ``0 * NaN`` in the value sum is still NaN, so the poison would
+        leak into whatever request lands there next. Quarantining costs
+        one batch lane of capacity for the rest of the engine run — the
+        correct trade against silently corrupting a future request.
+        """
+        state = self.active.pop(slot)
+        self.quarantined.append(slot)
         return state
 
     # ---- per-chunk device-facing views (B,) --------------------------------

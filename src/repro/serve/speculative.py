@@ -101,18 +101,36 @@ def shallow_drafter(model: LM, params: Any, num_layers: int
     return draft_model, {**params, "blocks": blocks}
 
 
-def _resolve_draft(model: LM, draft: Any) -> Any:
+def _resolve_draft(model: LM, draft: Any) -> Tuple[Any, Optional[str]]:
     """Drafter params: a ``PrunedArtifact``/``PruneResult`` binds PACKED
     (the compressed representation is the whole point of drafting with
-    it); a raw params tree serves as-is (dense drafter)."""
+    it); a raw params tree serves as-is (dense drafter).
+
+    Returns ``(params, demote_reason)``: a non-None reason means the
+    drafter's artifact failed verification (corrupt packed leaves that
+    ``bind`` degraded to dense, or a failed integrity re-check) — a
+    drafter that lost its compression advantage, so the engine demotes
+    itself to plain target decoding rather than draft at dense cost."""
     from repro.core.pruner import PruneResult
+    from repro.checkpoint import ArtifactError
     from repro.sparse import PrunedArtifact
 
     if isinstance(draft, PruneResult):
         draft = draft.to_artifact()
     if isinstance(draft, PrunedArtifact):
-        return draft.bind(model, packed=True)
-    return draft
+        try:
+            bound = draft.bind(model, packed=True)
+        except ArtifactError as e:
+            return None, f"drafter artifact failed verification: {e}"
+        report = draft.bind_report or {}
+        bad = report.get("fallbacks") or {}
+        if bad:
+            leaf, why = next(iter(bad.items()))
+            return bound, (f"drafter artifact failed verification: "
+                           f"{len(bad)} corrupt packed leaf/leaves "
+                           f"(e.g. {leaf}: {why})")
+        return bound, None
+    return draft, None
 
 
 class SpeculativeEngine:
@@ -141,7 +159,22 @@ class SpeculativeEngine:
         packed: bool = False,
         flash: Optional[bool] = None,
         seed: int = 0,
+        demote_after: int = 64,
+        demote_below: float = 0.15,
+        straggler: Optional[Any] = None,
     ):
+        """Degradation knobs: once ``demote_after`` tokens have been
+        drafted, an acceptance rate below ``demote_below`` DEMOTES the
+        engine — remaining tokens decode plainly against the target
+        (speculation with a disagreeing drafter costs MORE than plain
+        decoding: every round pays drafter + verify for ~1 committed
+        token). A drafter artifact that fails verification at bind time
+        demotes immediately. Demotion never changes output: the plain
+        path continues from the same target cache, so greedy tokens stay
+        bit-identical to ``ServeEngine``. Each demotion is recorded in
+        ``stats["demotions"]``. ``straggler``: optional
+        ``runtime.straggler.StragglerMonitor`` fed per-dispatch wall
+        time."""
         from repro.serve.engine import _resolve_params
 
         if draft_k < 1:
@@ -152,13 +185,25 @@ class SpeculativeEngine:
             m._require_kv_family(f"speculative serving ({who})")
         if self.draft_model.config.vocab_size != model.config.vocab_size:
             raise ValueError("drafter and target must share a vocabulary")
-        self.params = _resolve_params(model, params, packed)
-        self.draft_params = _resolve_draft(self.draft_model, draft)
+        self.params, self.bind_report = _resolve_params(model, params,
+                                                        packed)
+        self.draft_params, demote_reason = _resolve_draft(self.draft_model,
+                                                          draft)
+        self.demote_after = demote_after
+        self.demote_below = demote_below
+        self.straggler = straggler
+        self.demoted = demote_reason is not None
+        self._demotions: List[Dict[str, Any]] = []
+        if demote_reason is not None:
+            self._demotions.append({"at": "init", "reason": demote_reason})
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.draft_k = draft_k
         self._key = jax.random.PRNGKey(seed)
         self.stats: Dict[str, Any] = {}
+        # engine clock for deadline checks; ``generate`` re-anchors it (a
+        # frozen clock means deadlines simply never fire)
+        self._now = lambda: 0.0
         self._t_spec = model.cache_spec(max_seq_len)
         self._d_spec = self.draft_model.cache_spec(max_seq_len)
         for spec, who in ((self._t_spec, "target"), (self._d_spec, "draft")):
@@ -177,6 +222,14 @@ class SpeculativeEngine:
         self._greedy_rounds = jax.jit(self._greedy_rounds_impl,
                                       static_argnums=(6,))
         self._stoch_round = jax.jit(self._stoch_round_impl)
+        # the demoted path: plain target-only decode continuing from the
+        # SAME target cache (the lockstep invariant makes the hand-off
+        # seamless — pos and pending token are exactly ServeEngine's)
+        from repro.serve.engine import _scan_decode_fns
+
+        plain_g, plain_t = _scan_decode_fns(model, greedy_sample)
+        self._plain_greedy = jax.jit(plain_g, static_argnums=(4,))
+        self._plain_temp = jax.jit(plain_t, static_argnums=(6,))
 
     # ---- one draft/verify round (traced) -----------------------------------
 
@@ -296,21 +349,38 @@ class SpeculativeEngine:
 
     # ---- host loop ---------------------------------------------------------
 
-    def generate(self, requests: List[Any]) -> List[Any]:
+    def generate(self, requests: List[Any], *,
+                 clock: Optional[Any] = None) -> List[Any]:
         """Serve requests in prompt-length-bucketed fixed batches, exactly
         like ``ServeEngine.generate`` (same chunking loop, same left-pad
         prefill semantics, so greedy output matches the chunked dense
         engine bit-for-bit, mixed-length chunks included). Results in
-        original order."""
+        original order.
+
+        ``clock``: elapsed-seconds callable for ``Request.deadline``
+        checks (default: wall clock anchored here). Deadlines and cancel
+        tokens are honored between dispatches: an expired/cancelled row
+        stops drafting and comes back with its partial tokens and a typed
+        status."""
+        import time as _time
+
         from repro.serve.engine import _bucketed_generate
 
+        t0 = _time.perf_counter()
+        self._now = clock if clock is not None \
+            else (lambda: _time.perf_counter() - t0)
         self.stats = {"rounds": 0, "dispatches": 0, "drafted": 0,
-                      "accepted": 0}
+                      "accepted": 0, "demoted": self.demoted,
+                      "demotions": list(self._demotions)}
         results = _bucketed_generate(requests, self.batch_size,
                                      self._generate_batch)
         drafted = self.stats["drafted"]
         self.stats["acceptance_rate"] = (
             self.stats["accepted"] / drafted if drafted else 0.0)
+        self.stats["demoted"] = self.demoted
+        self.stats["demotions"] = list(self._demotions)
+        if self.straggler is not None:
+            self.stats["straggler_events"] = len(self.straggler.events)
         return results
 
     def _validate(self, requests) -> None:
@@ -343,9 +413,14 @@ class SpeculativeEngine:
         B, K, n = self.batch_size, self.draft_k, len(requests)
         prompts, slot_mask = _pad_prompts(requests, B)
         tcache, tlogits = self._prefill_t(self.params, prompts)
-        dcache, _ = self._prefill_d(self.draft_params, prompts)
+        # a drafter demoted at init (failed artifact verification) never
+        # costs a prefill — the whole batch decodes plainly
+        dcache = None
+        if not self.demoted:
+            dcache, _ = self._prefill_d(self.draft_params, prompts)
 
         budgets = [r.max_new_tokens for r in requests]
+        statuses = ["ok"] * n
         use_temp = any(r.temperature is not None and r.temperature > 0
                        for r in requests)
         if use_temp:
@@ -362,10 +437,52 @@ class SpeculativeEngine:
         emitted: List[List[int]] = [[int(t)] for t in
                                     np.asarray(jax.device_get(tok))[:n, 0]]
         while True:
+            # deadline/cancel edge: an expired or cancelled row stops
+            # consuming rounds NOW (its budget clamps to what it has);
+            # batch-mates keep decoding — rows are independent
+            tnow = self._now()
+            for b, r in enumerate(requests):
+                if statuses[b] != "ok" or len(emitted[b]) >= budgets[b]:
+                    continue
+                if getattr(r, "cancelled", False):
+                    statuses[b] = "cancelled"
+                    budgets[b] = len(emitted[b])
+                elif getattr(r, "deadline", None) is not None \
+                        and tnow > r.deadline:
+                    statuses[b] = "timeout"
+                    budgets[b] = len(emitted[b])
             rem = max((budgets[b] - len(emitted[b]) for b in range(n)),
                       default=0)
             if rem <= 0:
                 break
+            t_disp = self._now()
+            if self.demoted:
+                # plain target-only continuation: same cache, same pending
+                # token, same per-request key streams — bit-identical to
+                # never having speculated
+                if use_temp:
+                    offs = jnp.asarray(
+                        [len(e) for e in emitted] + [1] * (B - n),
+                        jnp.int32)
+                    keys = fold_key_grid(row_keys, offs, rem)
+                    tcache, toks = self._plain_temp(
+                        self.params, tcache, tok, slot_mask, temps, keys,
+                        rem)
+                else:
+                    tcache, toks = self._plain_greedy(
+                        self.params, tcache, tok, slot_mask, rem)
+                tok = toks[:, -1:]
+                toks_np = np.asarray(jax.device_get(toks))
+                self.stats["dispatches"] += 1
+                if self.straggler is not None:
+                    self.straggler.record(self.stats["dispatches"],
+                                          max(self._now() - t_disp, 0.0))
+                for b in range(n):
+                    short = budgets[b] - len(emitted[b])
+                    if short > 0:
+                        emitted[b].extend(int(t)
+                                          for t in toks_np[b, :short])
+                continue
             if use_temp:
                 ctrs = jnp.asarray(
                     [len(e) for e in emitted] + [1] * (B - n), jnp.int32)
@@ -390,6 +507,9 @@ class SpeculativeEngine:
             outs, keeps, accs = (np.asarray(outs), np.asarray(keeps),
                                  np.asarray(accs))
             self.stats["dispatches"] += 1
+            if self.straggler is not None:
+                self.straggler.record(self.stats["dispatches"],
+                                      max(self._now() - t_disp, 0.0))
             for r in range(outs.shape[0]):
                 self.stats["rounds"] += 1
                 for b in range(n):
@@ -400,8 +520,24 @@ class SpeculativeEngine:
                     self.stats["accepted"] += int(accs[r, b])
                     take = min(short, int(keeps[r, b]))
                     emitted[b].extend(int(t) for t in outs[r, b, :take])
+            # acceptance-collapse demotion: once enough tokens have been
+            # drafted to judge the drafter, a collapsed acceptance rate
+            # means every round costs drafter + verify for ~1 committed
+            # token — strictly worse than plain decoding. Demote; the
+            # plain branch above finishes this batch and all later ones.
+            drafted = self.stats["drafted"]
+            if not self.demoted and drafted >= self.demote_after:
+                rate = self.stats["accepted"] / drafted
+                if rate < self.demote_below:
+                    self.demoted = True
+                    self._demotions.append({
+                        "at": "acceptance", "drafted": drafted,
+                        "acceptance_rate": rate,
+                        "threshold": self.demote_below,
+                    })
 
         return [Result(uid=r.uid,
                        tokens=trim_at_eos(emitted[b][: r.max_new_tokens],
-                                          r.eos_id))
+                                          r.eos_id),
+                       status=statuses[b])
                 for b, r in enumerate(requests)]

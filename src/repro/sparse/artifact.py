@@ -44,11 +44,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schemes import LayerSpec
-from repro.sparse.packed import PackedTensor, is_packed, tree_packed_bytes
+from repro.sparse.packed import (
+    PackedTensor,
+    is_packed,
+    tree_packed_bytes,
+    validate_packed,
+)
 from repro.sparse.registry import handler_for
 from repro.utils.tree import tree_map_with_path_str, tree_paths
 
 ARTIFACT_JSON = "artifact.json"
+
+# artifact.json layout version (separate from the checkpoint manifest's
+# schema_version — both ride every save).
+ARTIFACT_SCHEMA_VERSION = 2
 
 
 def _spec_is_leaf(x: Any) -> bool:
@@ -64,6 +73,13 @@ class PrunedArtifact:
     specs: Any
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
     packed: Optional[Any] = None
+    # set by ``load``: where the artifact came from (lets
+    # ``verify_integrity`` re-check the on-disk bytes). Not persisted.
+    source_dir: Optional[str] = None
+    # set by ``bind``: which packed leaves failed validation and were
+    # served dense instead (the graceful-degradation record engines copy
+    # into their ``.stats``). Not persisted.
+    bind_report: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------- building
 
@@ -167,25 +183,48 @@ class PrunedArtifact:
         sparse weights. Either way the tree structure is validated against
         ``model.init`` so a mismatched artifact fails loudly here, not
         deep inside a scan.
+
+        Graceful degradation: every packed leaf is health-checked
+        (``sparse.packed.validate_packed``) and a CORRUPT leaf — an
+        out-of-range index table, non-finite weights — is served from the
+        bound DENSE params instead, never crashed on and never silently
+        dispatched. The substitutions land in ``self.bind_report``
+        (``{"fallbacks": {path: reason}}``); engines surface them in
+        their ``.stats``.
         """
         if packed and self.packed is None:
             # cache on self: packing is host-side per-leaf work, and every
             # ServeEngine construction routes through bind
             self.packed = self.pack().packed
         tree = self.packed if packed else self.params
+        self.bind_report = {"fallbacks": {}}
         if packed:
             # leaves the MODEL cannot execute packed (e.g. ResNet's strided
             # 3x3 convs) go back to dense here — once, instead of a dense
             # reconstruction inside every forward step
             unpackable = set(getattr(model, "unpackable_leaf_paths",
                                      lambda: ())())
-            if unpackable:
-                from repro.sparse.registry import SPARSE_SCHEMES
+            from repro.sparse.registry import SPARSE_SCHEMES
 
-                tree = tree_map_with_path_str(
-                    lambda p, x: (SPARSE_SCHEMES.get(x.scheme).to_dense(x)
-                                  if is_packed(x) and p in unpackable else x),
-                    tree, is_leaf=is_packed)
+            dense_by_path = dict(zip(tree_paths(self.params),
+                                     jax.tree.leaves(self.params)))
+
+            def check_leaf(p, x):
+                if not is_packed(x):
+                    return x
+                if p in unpackable:
+                    return SPARSE_SCHEMES.get(x.scheme).to_dense(x)
+                why = validate_packed(x)
+                if why is not None:
+                    # corrupt compressed form: serve this leaf dense (the
+                    # exactly-sparse weights are always available) rather
+                    # than gather garbage or crash mid-scan
+                    self.bind_report["fallbacks"][p] = why
+                    return dense_by_path[p]
+                return x
+
+            tree = tree_map_with_path_str(check_leaf, tree,
+                                          is_leaf=is_packed)
         expected = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         want = {p: tuple(l.shape) for p, l in
                 zip(tree_paths(expected), jax.tree.leaves(expected))}
@@ -261,18 +300,46 @@ class PrunedArtifact:
             self.specs,
             is_leaf=_spec_is_leaf,
         )
-        doc = {"specs": spec_table, "meta": self.meta,
+        doc = {"schema_version": ARTIFACT_SCHEMA_VERSION,
+               "specs": spec_table, "meta": self.meta,
                "packed": self.packed is not None}
-        with open(os.path.join(directory, ARTIFACT_JSON), "w") as f:
+        tmp = os.path.join(directory, ARTIFACT_JSON + ".tmp")
+        with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
+        os.replace(tmp, os.path.join(directory, ARTIFACT_JSON))
 
     @classmethod
     def load(cls, directory: str) -> "PrunedArtifact":
-        """Rebuild an artifact saved by ``save`` (no template tree needed)."""
-        from repro.checkpoint import load_pytree
+        """Rebuild an artifact saved by ``save`` (no template tree needed).
 
-        with open(os.path.join(directory, ARTIFACT_JSON)) as f:
-            doc = json.load(f)
+        Every failure mode of a damaged artifact directory — missing or
+        truncated ``artifact.json``, a future schema version, a corrupt or
+        checksum-failing checkpoint subdirectory — surfaces as one
+        ``checkpoint.ArtifactError`` naming the directory and the field
+        that failed, never a raw ``KeyError``/``JSONDecodeError``/pickle
+        traceback.
+        """
+        from repro.checkpoint import ArtifactError, load_pytree
+
+        apath = os.path.join(directory, ARTIFACT_JSON)
+        try:
+            with open(apath) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            raise ArtifactError("artifact.json not found", path=apath,
+                                field="artifact.json") from None
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise ArtifactError(f"artifact.json is not valid JSON: {e}",
+                                path=apath, field="artifact.json") from None
+        if not isinstance(doc, dict):
+            raise ArtifactError("artifact.json is not a JSON object",
+                                path=apath, field="artifact.json")
+        version = doc.get("schema_version", 1)
+        if version > ARTIFACT_SCHEMA_VERSION:
+            raise ArtifactError(
+                f"artifact schema_version {version} is newer than this "
+                f"build supports ({ARTIFACT_SCHEMA_VERSION})",
+                path=apath, field="schema_version")
         params = jax.tree.map(jnp.asarray, load_pytree(
             os.path.join(directory, "params")))
         mask_dir = os.path.join(directory, "masks")
@@ -305,4 +372,40 @@ class PrunedArtifact:
                 lambda x: x if is_packed(x) else jnp.asarray(x),
                 packed, is_leaf=is_packed)
         return cls(params=params, masks=masks, specs=specs,
-                   meta=doc.get("meta", {}), packed=packed)
+                   meta=doc.get("meta", {}), packed=packed,
+                   source_dir=directory)
+
+    def verify_integrity(self) -> Dict[str, Any]:
+        """Full health check of the artifact; raises ``ArtifactError``.
+
+        Two layers: (1) if the artifact came from disk (``source_dir``
+        set), re-verify the per-buffer CRC32 checksums of every saved
+        checkpoint subdirectory against the on-disk bytes — catches
+        bit-flips that happened after ``load`` deserialized; (2) run the
+        structural ``validate_packed`` check over every in-memory packed
+        leaf. Returns a report ``{"disk": {subdir: stats}, "packed_ok":
+        n, "packed_bad": {path: reason}}``; raises ``ArtifactError`` on
+        any disk-level corruption (structural packed faults are returned,
+        not raised — ``bind`` degrades those to dense serving).
+        """
+        from repro.checkpoint import verify_checkpoint
+
+        report: Dict[str, Any] = {"disk": {}, "packed_ok": 0,
+                                  "packed_bad": {}}
+        if self.source_dir is not None:
+            for sub in ("params", "masks", "packed"):
+                d = os.path.join(self.source_dir, sub)
+                if os.path.isdir(d):
+                    report["disk"][sub] = verify_checkpoint(d)
+        if self.packed is not None:
+            for path, leaf in zip(
+                    tree_paths(self.packed, is_leaf=is_packed),
+                    jax.tree.leaves(self.packed, is_leaf=is_packed)):
+                if not is_packed(leaf):
+                    continue
+                why = validate_packed(leaf)
+                if why is None:
+                    report["packed_ok"] += 1
+                else:
+                    report["packed_bad"][path] = why
+        return report

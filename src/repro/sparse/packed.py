@@ -33,7 +33,7 @@ leading axes were stacked on top of the canonical per-layer buffers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +123,50 @@ class PackedTensor:
 
 def is_packed(x: Any) -> bool:
     return isinstance(x, PackedTensor)
+
+
+# index-table buffer name -> upper bound derived from the dense shape, per
+# scheme: every entry must index INTO the dense tensor the buffers encode.
+_INDEX_BOUNDS = {
+    "tile_pattern": ("lane_idx", lambda shape: shape[-2]),
+    "column": ("kept_idx", lambda shape: shape[-2]),
+    "pattern": ("taps", lambda shape: 9),
+    "pattern_shared": ("taps", lambda shape: 9),
+}
+
+
+def validate_packed(pt: PackedTensor) -> Optional[str]:
+    """Cheap structural health check of one packed leaf.
+
+    Returns ``None`` when the leaf looks servable, else a one-line reason.
+    Catches the corruption modes a packed buffer actually exhibits after a
+    bad transfer or a buggy producer: missing buffers, out-of-range index
+    tables (which would gather garbage rows — silent wrong tokens, the
+    worst failure), and non-finite weight values (which would poison every
+    logit downstream). ``PrunedArtifact.bind`` consults this to fall back
+    to the bound dense params instead of serving a corrupt compressed
+    form; the checksum layer in ``repro.checkpoint`` catches disk-level
+    corruption before buffers ever reach here.
+    """
+    if len(pt.names) != len(pt.buffers):
+        return (f"{len(pt.names)} buffer names but {len(pt.buffers)} "
+                "buffers")
+    if "w_packed" not in pt.names:
+        return "no w_packed buffer"
+    wp = np.asarray(pt.buf("w_packed"))
+    if not np.isfinite(wp.astype(np.float32, copy=False)).all():
+        return "non-finite values in w_packed"
+    bound = _INDEX_BOUNDS.get(pt.scheme)
+    if bound is not None:
+        name, hi_fn = bound
+        if name not in pt.names:
+            return f"scheme {pt.scheme!r} lacks its {name!r} index table"
+        idx = np.asarray(pt.buf(name))
+        hi = int(hi_fn(pt.shape))
+        if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= hi):
+            return (f"{name} entries outside [0, {hi}) "
+                    f"(min {int(idx.min())}, max {int(idx.max())})")
+    return None
 
 
 def packed_leaf_paths(tree: Any):

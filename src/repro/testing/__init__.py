@@ -1,0 +1,27 @@
+"""Deterministic fault-injection utilities (``repro.testing.chaos``).
+
+Test-support code lives under the package (not ``tests/``) because the
+chaos injectors are part of the reliability CONTRACT: the benchmark suite
+(``benchmarks/fault_injection.py``) and any downstream consumer hardening
+a deployment drive the same seams ``tests/test_chaos.py`` does.
+"""
+
+from repro.testing.chaos import (
+    ScriptedClock,
+    chunk_action_hook,
+    corrupt_buffer,
+    corrupt_manifest,
+    corrupt_packed_index,
+    kv_poison_hook,
+    nan_poison_leaf,
+)
+
+__all__ = [
+    "ScriptedClock",
+    "chunk_action_hook",
+    "corrupt_buffer",
+    "corrupt_manifest",
+    "corrupt_packed_index",
+    "kv_poison_hook",
+    "nan_poison_leaf",
+]

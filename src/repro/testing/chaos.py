@@ -1,0 +1,242 @@
+"""Seeded chaos: deterministic fault injectors for the reliability layer.
+
+Every injector is a pure function of its ``seed`` (NumPy ``default_rng``)
+— the same seed corrupts the same byte, poisons the same leaf, fires at
+the same chunk — so a chaos test that fails replays exactly. The seams
+they drive are the ones a real deployment exposes:
+
+  on disk    ``corrupt_buffer`` / ``corrupt_manifest`` — bit-flips and
+             truncation in a saved checkpoint directory; caught by the
+             CRC32 manifest layer in ``repro.checkpoint`` as
+             ``ArtifactError``.
+  in weights ``nan_poison_leaf`` — a non-finite value in a params leaf;
+             caught by the engines' logit guards as ``status="failed"``
+             (and by ``sparse.packed.validate_packed`` for packed leaves,
+             degraded to dense at bind).
+  in packed  ``corrupt_packed_index`` — an out-of-range index-table entry
+             (the silent-garbage fault); caught at bind, served dense.
+  in flight  ``kv_poison_hook`` — NaN into ONE slot's KV rows between
+             micro-chunks, the shape of a real transient memory/XLA
+             fault (token prompts are int32, so poison cannot arrive via
+             inputs); quarantines exactly that slot.
+  in time    ``ScriptedClock`` — a deterministic engine clock driving
+             deadline expiry and straggler detection without wall-clock
+             flakiness; ``chunk_action_hook`` — host actions (e.g.
+             ``request.cancel()``) at exact chunk indices.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# time
+
+
+class ScriptedClock:
+    """An engine clock that returns a scripted sequence of times.
+
+    Each call pops the next entry of ``times``; once exhausted, the clock
+    keeps advancing by ``tail_step`` per call (it must keep moving — the
+    engines' wait loops poll it, and a frozen injected clock would spin
+    forever waiting for an arrival). Feed it to
+    ``ContinuousEngine.generate(clock=...)`` /
+    ``SpeculativeEngine.generate(clock=...)`` to make deadline expiry and
+    slow-chunk (straggler) scenarios exactly reproducible.
+    """
+
+    def __init__(self, times: Sequence[float], tail_step: float = 1.0):
+        self._times = [float(t) for t in times]
+        self._i = 0
+        self._last = self._times[-1] if self._times else 0.0
+        self._tail = float(tail_step)
+
+    def __call__(self) -> float:
+        if self._i < len(self._times):
+            t = self._times[self._i]
+            self._i += 1
+            self._last = t
+            return t
+        self._last += self._tail
+        return self._last
+
+
+# ---------------------------------------------------------------------------
+# on disk
+
+
+def _checkpoint_files(directory: str) -> list:
+    files = sorted(f for f in os.listdir(directory) if f.endswith(".npy"))
+    if not files:
+        raise ValueError(f"no buffer files under {directory}")
+    return files
+
+
+def corrupt_buffer(directory: str, *, seed: int) -> Dict[str, Any]:
+    """Flip ONE bit of one saved ``.npy`` buffer in a checkpoint
+    directory (file, offset, and bit all drawn from ``seed``). Returns
+    ``{"file", "offset", "bit"}`` describing the damage. The CRC32 in
+    the manifest guarantees the next load raises ``ArtifactError`` no
+    matter which bit was hit — header bytes included."""
+    rng = np.random.default_rng(seed)
+    files = _checkpoint_files(directory)
+    fname = files[int(rng.integers(len(files)))]
+    path = os.path.join(directory, fname)
+    data = bytearray(open(path, "rb").read())
+    off = int(rng.integers(len(data)))
+    bit = int(rng.integers(8))
+    data[off] ^= 1 << bit
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    return {"file": fname, "offset": off, "bit": bit}
+
+
+def corrupt_manifest(directory: str, *, seed: int,
+                     mode: Optional[str] = None) -> Dict[str, Any]:
+    """Damage ``manifest.json`` itself: truncate it mid-byte, drop a
+    required field from a random leaf entry, or bump ``schema_version``
+    past what this build supports. ``mode`` forces one of
+    ``{"truncate", "drop_field", "future_version"}``; default draws from
+    ``seed``. Every mode must surface as ``ArtifactError`` on load."""
+    rng = np.random.default_rng(seed)
+    path = os.path.join(directory, "manifest.json")
+    modes = ("truncate", "drop_field", "future_version")
+    mode = mode or modes[int(rng.integers(len(modes)))]
+    if mode == "truncate":
+        raw = open(path, "rb").read()
+        keep = int(rng.integers(1, max(2, len(raw) // 2)))
+        with open(path, "wb") as f:
+            f.write(raw[:keep])
+    elif mode == "drop_field":
+        doc = json.load(open(path))
+        leaves = doc.get("leaves") or []
+        if not leaves:
+            raise ValueError(f"manifest at {path} has no leaves to damage")
+        entry = leaves[int(rng.integers(len(leaves)))]
+        # NOT crc32: a missing crc means a v1 (pre-checksum) manifest and
+        # loads legitimately; drop a field every load requires instead
+        if "packed" in entry and rng.integers(2):
+            bufs = entry["packed"]["buffers"]
+            bufs[int(rng.integers(len(bufs)))].pop("file", None)
+        else:
+            entry.pop("path" if "file" not in entry or rng.integers(2)
+                      else "file", None)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+    else:  # future_version
+        doc = json.load(open(path))
+        doc["schema_version"] = 10_000 + int(rng.integers(1000))
+        with open(path, "w") as f:
+            json.dump(doc, f)
+    return {"mode": mode, "path": path}
+
+
+# ---------------------------------------------------------------------------
+# in weights / in packed buffers
+
+
+def nan_poison_leaf(params: Any, *, seed: int,
+                    path_contains: Optional[str] = None) -> Any:
+    """Return a params tree with ONE element of one float leaf set NaN
+    (leaf and element drawn from ``seed``). ``path_contains`` restricts
+    the candidate leaves by '/'-joined tree path substring — poison a
+    leaf on the residual stream (e.g. a block's MLP weight) when the
+    test needs the NaN to reach every logit. The tree structure is
+    shared; only the poisoned leaf is copied."""
+    import jax
+
+    from repro.utils.tree import tree_paths
+
+    leaves, treedef = jax.tree.flatten(params)
+    paths = tree_paths(params)
+    float_idx = [
+        i for i, (p, l) in enumerate(zip(paths, leaves))
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+        and (path_contains is None or path_contains in p)
+    ]
+    if not float_idx:
+        raise ValueError(
+            f"params tree has no float leaves to poison "
+            f"(path_contains={path_contains!r})")
+    rng = np.random.default_rng(seed)
+    i = float_idx[int(rng.integers(len(float_idx)))]
+    leaf = np.array(leaves[i])
+    flat = leaf.reshape(-1)
+    flat[int(rng.integers(flat.size))] = np.nan
+    leaves[i] = jnp.asarray(leaf)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def corrupt_packed_index(pt: Any, *, seed: int) -> Any:
+    """Return a ``PackedTensor`` whose index table has one out-of-range
+    entry — the worst packed fault: without validation it gathers garbage
+    rows and serves silently wrong tokens. ``validate_packed`` must flag
+    it; ``PrunedArtifact.bind`` must serve the leaf dense instead."""
+    from repro.sparse.packed import _INDEX_BOUNDS, PackedTensor
+
+    bound = _INDEX_BOUNDS.get(pt.scheme)
+    if bound is None:
+        raise ValueError(f"scheme {pt.scheme!r} has no index table")
+    name, hi_fn = bound
+    rng = np.random.default_rng(seed)
+    idx = np.array(pt.buf(name))
+    flat = idx.reshape(-1)
+    flat[int(rng.integers(flat.size))] = int(hi_fn(pt.shape)) + 7
+    buffers = tuple(jnp.asarray(idx) if n == name else b
+                    for n, b in zip(pt.names, pt.buffers))
+    return PackedTensor(pt.scheme, pt.shape, pt.names, buffers, pt.meta)
+
+
+# ---------------------------------------------------------------------------
+# in flight
+
+
+def kv_poison_hook(slot: int, at_chunk: int = 0
+                   ) -> Callable[[Any, Any], Any]:
+    """A ``ContinuousEngine fault_hook`` that writes NaN into one slot's
+    KV rows at the ``at_chunk``-th chunk edge (counting edges where the
+    slot is live). Models a transient device-memory fault: the poisoned
+    slot's next logits go non-finite (masked attention zeroes stale
+    WEIGHTS, but ``0 * NaN`` in the value sum is still NaN), the engine
+    quarantines it, and batch-mates are untouched — their rows never mix
+    with slot ``slot`` through any batched op."""
+    state = {"edge": -1}
+
+    def hook(cache: Dict[str, Any], sched: Any) -> Optional[Dict[str, Any]]:
+        if slot not in sched.table.active:
+            return None
+        state["edge"] += 1
+        if state["edge"] != at_chunk:
+            return None
+        bad = jnp.full(cache["k"].shape[2:], jnp.nan, cache["k"].dtype)
+        return {
+            **cache,
+            "k": cache["k"].at[:, slot].set(bad),
+            "v": cache["v"].at[:, slot].set(bad),
+        }
+
+    return hook
+
+
+def chunk_action_hook(actions: Dict[int, Callable[[], None]]
+                      ) -> Callable[[Any, Any], None]:
+    """A ``fault_hook`` that runs host-side actions at exact chunk edges
+    (edge 0 = before the first chunk): ``{2: request.cancel}`` cancels a
+    request mid-stream deterministically, regardless of wall-clock
+    timing. Returns None (the cache is never touched)."""
+    state = {"edge": -1}
+
+    def hook(cache: Any, sched: Any) -> None:
+        state["edge"] += 1
+        fn = actions.get(state["edge"])
+        if fn is not None:
+            fn()
+        return None
+
+    return hook

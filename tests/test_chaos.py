@@ -1,0 +1,594 @@
+"""Chaos suite: every injected fault must surface as a TYPED outcome.
+
+The reliability contract (``serve/__init__`` "Reliability contract"):
+a fault anywhere in the serving stack — a flipped bit on disk, a NaN in
+a weight leaf, a corrupt packed index table, poison in one slot's KV
+rows, a request flood, a mid-stream cancellation, a slow chunk — ends in
+exactly one of
+
+  * ``checkpoint.ArtifactError`` (disk/manifest integrity), or
+  * a ``Result.status`` in {shed, timeout, cancelled, failed}, or
+  * a recorded degradation (``bind_report``/``stats``) with output
+    unchanged,
+
+never a hang, never a raw traceback from the middle of a scan, and —
+the hard part — never a perturbation of co-batched healthy requests:
+their tokens stay bit-identical to solo serving.
+
+Every fault here is injected through ``repro.testing.chaos`` and is a
+pure function of its seed, so a failure replays exactly.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    ArtifactError,
+    load_pytree,
+    save_pytree,
+    verify_checkpoint,
+)
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.runtime.fault_tolerance import StagedRun, StageError
+from repro.runtime.straggler import StragglerMonitor
+from repro.serve import ContinuousEngine, Request, ServeEngine
+from repro.serve.scheduler import Scheduler
+from repro.serve.speculative import SpeculativeEngine
+from repro.sparse import PrunedArtifact
+from repro.sparse.packed import is_packed, validate_packed
+from repro.testing import (
+    ScriptedClock,
+    chunk_action_hook,
+    corrupt_buffer,
+    corrupt_manifest,
+    corrupt_packed_index,
+    kv_poison_hook,
+    nan_poison_leaf,
+)
+from repro.utils.tree import tree_paths
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256,
+                      vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def artifact(lm):
+    cfg, model, params = lm
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 64, "tile_group_q": 8,
+                          "tile_keep": 4}},
+    )
+    return greedy_prune(params, pcfg).to_artifact(arch="tiny").pack()
+
+
+def _reqs(cfg, n=2, max_new=8, **kw):
+    return [Request(uid=i, prompt=(jnp.arange(6) + i) % cfg.vocab_size,
+                    max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+def _solo(model, params, requests, max_seq_len=64):
+    """Reference: each request served ALONE (B=1 chunk, pad-free)."""
+    eng = ServeEngine(model, params, batch_size=1, max_seq_len=max_seq_len)
+    return [eng.generate([Request(uid=r.uid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens)])[0].tokens
+            for r in requests]
+
+
+# ===========================================================================
+# fault class 1: disk corruption (bit-flips, manifest damage)
+# ===========================================================================
+
+
+class TestDiskFaults:
+    def _save_small(self, tmp_path):
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones((8,), jnp.float32)}
+        d = str(tmp_path / "ckpt")
+        save_pytree(d, tree)
+        return d, tree
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_bitflip_raises_artifact_error(self, tmp_path, seed):
+        d, tree = self._save_small(tmp_path)
+        hit = corrupt_buffer(d, seed=seed)
+        with pytest.raises(ArtifactError) as ei:
+            load_pytree(d)
+        # the error names the damaged file, not just "load failed"
+        assert hit["file"] in str(ei.value) or "crc" in str(ei.value).lower()
+        with pytest.raises(ArtifactError):
+            verify_checkpoint(d)
+
+    def test_clean_checkpoint_verifies(self, tmp_path):
+        d, tree = self._save_small(tmp_path)
+        stats = verify_checkpoint(d)
+        assert stats["leaves"] >= 2
+        loaded = load_pytree(d)
+        np.testing.assert_array_equal(np.asarray(loaded["w"]),
+                                      np.asarray(tree["w"]))
+
+    @pytest.mark.parametrize("mode", ["truncate", "drop_field",
+                                      "future_version"])
+    def test_manifest_damage_raises_artifact_error(self, tmp_path, mode):
+        d, _ = self._save_small(tmp_path)
+        corrupt_manifest(d, seed=3, mode=mode)
+        with pytest.raises(ArtifactError):
+            load_pytree(d)
+
+    def test_corrupt_artifact_dir_fails_on_load(self, tmp_path, lm, artifact):
+        """A bit-flip anywhere in a saved PrunedArtifact surfaces as one
+        ArtifactError at load — never a pickle/npy traceback mid-bind."""
+        d = str(tmp_path / "art")
+        artifact.save(d)
+        clean = PrunedArtifact.load(d)          # sanity: loads clean
+        rep = clean.verify_integrity()
+        assert rep["packed_bad"] == {} and "params" in rep["disk"]
+        corrupt_buffer(os.path.join(d, "params"), seed=5)
+        with pytest.raises(ArtifactError):
+            PrunedArtifact.load(d)
+
+    def test_verify_integrity_catches_post_load_bitflip(self, tmp_path,
+                                                        artifact):
+        """Corruption that lands AFTER a successful load (the deploy-time
+        re-check): verify_integrity re-reads the bytes and raises."""
+        d = str(tmp_path / "art2")
+        artifact.save(d)
+        loaded = PrunedArtifact.load(d)
+        corrupt_buffer(os.path.join(d, "packed"), seed=7)
+        with pytest.raises(ArtifactError):
+            loaded.verify_integrity()
+
+
+# ===========================================================================
+# fault class 2: non-finite weights (NaN poison in a params leaf)
+# ===========================================================================
+
+
+class TestNaNWeights:
+    def test_poisoned_weights_fail_typed_and_drain(self, lm):
+        """A NaN on the residual stream makes every admission's first
+        logits non-finite: each admitted request comes back ``failed``,
+        its lane is quarantined, and once every lane is gone the queued
+        backlog drains typed instead of waiting forever (the zero-hang
+        guarantee)."""
+        cfg, model, params = lm
+        bad = nan_poison_leaf(params, seed=11, path_contains="blocks")
+        eng = ContinuousEngine(model, bad, batch_size=2, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate(_reqs(cfg, n=4))
+        assert [r.status for r in out] == ["failed"] * 4
+        assert all(r.tokens == [] for r in out)
+        assert sorted(eng.stats["quarantined_slots"]) == [0, 1]
+        assert eng.stats["statuses"]["failed"] == 4
+
+    def test_poison_preserves_structure(self, lm):
+        cfg, model, params = lm
+        bad = nan_poison_leaf(params, seed=11, path_contains="blocks")
+        # exactly one NaN, everything else untouched
+        n_nan = sum(int(np.isnan(np.asarray(l)).sum())
+                    for l in jax.tree.leaves(bad))
+        assert n_nan == 1
+        assert jax.tree.structure(bad) == jax.tree.structure(params)
+
+
+# ===========================================================================
+# fault class 3: corrupt packed artifact (silent-garbage index tables)
+# ===========================================================================
+
+
+class TestPackedDegradation:
+    def _corrupted(self, artifact, seed=13):
+        paths = tree_paths(artifact.packed, is_leaf=is_packed)
+        leaves = jax.tree.leaves(artifact.packed, is_leaf=is_packed)
+        idx = next(i for i, l in enumerate(leaves) if is_packed(l))
+        bad_leaf = corrupt_packed_index(leaves[idx], seed=seed)
+        assert validate_packed(bad_leaf) is not None
+        leaves = list(leaves)
+        leaves[idx] = bad_leaf
+        packed = jax.tree.unflatten(
+            jax.tree.structure(artifact.packed, is_leaf=is_packed), leaves)
+        import dataclasses
+        return dataclasses.replace(artifact, packed=packed), paths[idx]
+
+    def test_bind_falls_back_to_dense_leaf(self, lm, artifact):
+        """An out-of-range packed index table is the silent-garbage fault:
+        bind must refuse to dispatch it, serve that leaf from the dense
+        params, and record the substitution — output bit-identical to
+        dense serving."""
+        cfg, model, params = lm
+        bad_art, bad_path = self._corrupted(artifact)
+        reqs = _reqs(cfg, n=2, max_new=6)
+        ref = _solo(model, bad_art.params, reqs)
+
+        eng = ContinuousEngine(model, bad_art, batch_size=2, max_seq_len=64,
+                               chunk_steps=4, packed=True)
+        assert bad_path in (eng.bind_report or {}).get("fallbacks", {})
+        out = eng.generate(reqs)
+        assert [r.status for r in out] == ["ok", "ok"]
+        assert [r.tokens for r in out] == ref
+        assert bad_path in eng.stats["bind_fallbacks"]
+
+    def test_verify_integrity_reports_structural_fault(self, artifact):
+        bad_art, bad_path = self._corrupted(artifact)
+        rep = bad_art.verify_integrity()
+        assert bad_path in rep["packed_bad"]
+        assert rep["packed_ok"] >= 1      # the other leaves still pass
+
+
+# ===========================================================================
+# fault class 4: in-flight KV poison (transient device/memory fault)
+# ===========================================================================
+
+
+class TestKVPoison:
+    def test_poisoned_slot_quarantined_mates_bit_identical(self, lm):
+        """NaN written into ONE slot's KV rows between chunks: that
+        request fails with the tokens emitted before the poison (a prefix
+        of its solo output — healthy steps are untouched), its lane is
+        quarantined forever, and the co-batched request's tokens are
+        bit-identical to solo serving."""
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=2, max_new=16)
+        ref = _solo(model, params, reqs)
+
+        # slot 0 hosts request 0 (free list pops 0 first); poison it at
+        # its second live chunk edge
+        eng = ContinuousEngine(model, params, batch_size=2, max_seq_len=64,
+                               chunk_steps=4,
+                               fault_hook=kv_poison_hook(0, at_chunk=1))
+        out = eng.generate(reqs)
+
+        assert out[0].status == "failed"
+        # admission token + one healthy chunk, then the poisoned chunk's
+        # non-finite flags cut it — a strict prefix of solo output
+        assert 0 < len(out[0].tokens) < len(ref[0])
+        assert out[0].tokens == ref[0][: len(out[0].tokens)]
+        assert out[1].status == "ok"
+        assert out[1].tokens == ref[1]
+        assert eng.stats["quarantined_slots"] == [0]
+
+    def test_quarantined_lane_never_readmitted(self, lm):
+        """After a quarantine, later arrivals admit into the surviving
+        lanes only — the poisoned lane would NaN whatever lands in it
+        (masked attention zeroes weights, but 0*NaN is still NaN)."""
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=3, max_new=8)
+        ref = _solo(model, params, reqs)
+        eng = ContinuousEngine(model, params, batch_size=2, max_seq_len=64,
+                               chunk_steps=4,
+                               fault_hook=kv_poison_hook(0, at_chunk=0))
+        out = eng.generate(reqs)
+        assert out[0].status == "failed"
+        assert [out[1].status, out[2].status] == ["ok", "ok"]
+        assert out[1].tokens == ref[1]
+        assert out[2].tokens == ref[2]     # served in the surviving lane
+        assert eng.stats["quarantined_slots"] == [0]
+
+
+# ===========================================================================
+# fault class 5: load (floods, oversized requests) → typed shedding
+# ===========================================================================
+
+
+class TestLoadShedding:
+    def test_bounded_queue_sheds_typed(self, lm):
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=4, max_new=6)
+        ref = _solo(model, params, reqs)
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4, max_queue=2)
+        out = eng.generate(reqs)
+        statuses = [r.status for r in out]
+        assert statuses == ["ok", "ok", "shed", "shed"]
+        assert all(r.tokens == [] for r in out if r.status == "shed")
+        # admitted requests are untouched by the shedding
+        assert out[0].tokens == ref[0] and out[1].tokens == ref[1]
+        assert eng.stats["statuses"]["shed"] == 2
+
+    def test_oversized_shed_nonstrict_served_strict_raises(self, lm):
+        cfg, model, params = lm
+        good = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=6)
+        huge = Request(uid=1, prompt=jnp.arange(6), max_new_tokens=10_000)
+        ref = _solo(model, params, [good], max_seq_len=32)
+
+        eng = ContinuousEngine(model, params, batch_size=2, max_seq_len=32,
+                               chunk_steps=4, strict=False)
+        out = eng.generate([good, huge])
+        assert [r.status for r in out] == ["ok", "shed"]
+        assert out[0].tokens == ref[0]
+
+        strict = ContinuousEngine(model, params, batch_size=2,
+                                  max_seq_len=32, chunk_steps=4)
+        with pytest.raises(ValueError, match="exceeds cache capacity"):
+            strict.generate([good, huge])
+
+
+# ===========================================================================
+# fault class 6: deadlines and cancellation
+# ===========================================================================
+
+
+class TestDeadlinesAndCancel:
+    def test_queued_deadline_expires_before_prefill(self, lm):
+        """A request already past its deadline when the engine looks at
+        the queue is reaped typed WITHOUT ever costing a prefill."""
+        cfg, model, params = lm
+        late = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=8,
+                       deadline=0.5)
+        ok = Request(uid=1, prompt=jnp.arange(6) + 1, max_new_tokens=8)
+        ref = _solo(model, params, [ok])
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate([late, ok], clock=ScriptedClock([1.0]))
+        assert out[0].status == "timeout" and out[0].tokens == []
+        assert out[1].status == "ok" and out[1].tokens == ref[0]
+
+    def test_midstream_deadline_keeps_partial_prefix(self, lm):
+        """A deadline passing mid-generation reaps the live slot between
+        chunks: partial tokens, and they are a prefix of solo output."""
+        cfg, model, params = lm
+        req = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=32,
+                      deadline=0.3)
+        ref = _solo(model, params, [req])[0]
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate([req], clock=ScriptedClock([], tail_step=0.05))
+        assert out[0].status == "timeout"
+        assert 0 < len(out[0].tokens) < len(ref)
+        assert out[0].tokens == ref[: len(out[0].tokens)]
+
+    def test_cancel_midstream_partial_mate_unaffected(self, lm):
+        """cancel() fired at a chunk edge: the cancelled request returns
+        its partial prefix at the next edge; its batch-mate is served to
+        completion bit-identically."""
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=2, max_new=24)
+        ref = _solo(model, params, reqs)
+        eng = ContinuousEngine(
+            model, params, batch_size=2, max_seq_len=64, chunk_steps=4,
+            fault_hook=chunk_action_hook({2: reqs[0].cancel}))
+        out = eng.generate(reqs)
+        assert out[0].status == "cancelled"
+        assert 0 < len(out[0].tokens) < len(ref[0])
+        assert out[0].tokens == ref[0][: len(out[0].tokens)]
+        assert out[1].status == "ok" and out[1].tokens == ref[1]
+
+    def test_cancel_before_admission(self, lm):
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=2, max_new=6)
+        reqs[1].cancel()
+        ref = _solo(model, params, [reqs[0]])
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate(reqs)
+        assert out[1].status == "cancelled" and out[1].tokens == []
+        assert out[0].status == "ok" and out[0].tokens == ref[0]
+
+
+# ===========================================================================
+# fault class 7: stragglers (slow chunks)
+# ===========================================================================
+
+
+class _SpikingClock:
+    """Advances a fixed step per call; ``spike_after(n, dt)`` adds ``dt``
+    on the n-th next call — aimed so the jump lands between the engine's
+    chunk-start and chunk-end timestamps (one slow chunk, deterministic)."""
+
+    def __init__(self, step=0.01):
+        self.t, self.step = 0.0, step
+        self._pending, self._spike = 0, 0.0
+
+    def spike_after(self, calls, amount):
+        self._pending, self._spike = calls, amount
+
+    def __call__(self):
+        self.t += self.step
+        if self._pending > 0:
+            self._pending -= 1
+            if self._pending == 0:
+                self.t += self._spike
+        return self.t
+
+
+class TestStragglers:
+    def test_slow_chunk_flagged(self, lm):
+        """A chunk stalled well past the median must land in the
+        monitor's events, not vanish into silent latency. The scripted
+        clock makes exactly one chunk slow: the engine reads the clock
+        twice per chunk (start, end), so a spike two reads after the
+        chunk edge lands inside the timed window."""
+        cfg, model, params = lm
+        mon = StragglerMonitor(window=50, threshold=3.0)
+        clk = _SpikingClock(step=0.01)
+        eng = ContinuousEngine(
+            model, params, batch_size=1, max_seq_len=128, chunk_steps=4,
+            straggler=mon,
+            fault_hook=chunk_action_hook(
+                {12: lambda: clk.spike_after(2, 0.5)}))
+        req = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=64)
+        out = eng.generate([req], clock=clk)
+        assert out[0].status == "ok"
+        assert eng.stats["straggler_events"] >= 1
+        assert any(e.seconds > 0.4 for e in mon.events)
+
+
+# ===========================================================================
+# fault class 8: speculative degradation (drafter collapse / corruption)
+# ===========================================================================
+
+
+class TestSpeculativeDegradation:
+    def test_acceptance_collapse_demotes_output_identical(self, lm):
+        """A garbage drafter (random re-init — near-zero agreement with
+        the target) collapses acceptance: the engine demotes to plain
+        target decoding and the greedy output stays bit-identical to the
+        target alone (the whole point of the ladder: speed degrades,
+        correctness never)."""
+        cfg, model, params = lm
+        garbage = model.init(jax.random.PRNGKey(99))
+        req = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=48)
+        ref = _solo(model, params, [req])[0]
+        eng = SpeculativeEngine(model, params, garbage, batch_size=1,
+                                max_seq_len=64, draft_k=4,
+                                demote_after=8, demote_below=0.5)
+        out = eng.generate([Request(uid=0, prompt=jnp.arange(6),
+                                    max_new_tokens=48)])
+        assert out[0].status == "ok"
+        assert out[0].tokens == ref
+        assert eng.stats["demoted"] is True
+        kinds = [d["at"] for d in eng.stats["demotions"]]
+        assert "acceptance" in kinds
+
+    def test_corrupt_drafter_artifact_demotes_at_init(self, lm, artifact):
+        """A drafter artifact with a corrupt packed leaf has lost its
+        compression advantage (bind serves the leaf dense): the engine
+        demotes at construction and never drafts — output still
+        bit-identical to the target."""
+        import dataclasses
+
+        cfg, model, params = lm
+        paths = tree_paths(artifact.packed, is_leaf=is_packed)
+        leaves = list(jax.tree.leaves(artifact.packed, is_leaf=is_packed))
+        idx = next(i for i, l in enumerate(leaves) if is_packed(l))
+        leaves[idx] = corrupt_packed_index(leaves[idx], seed=17)
+        bad = dataclasses.replace(artifact, packed=jax.tree.unflatten(
+            jax.tree.structure(artifact.packed, is_leaf=is_packed), leaves))
+
+        req = Request(uid=0, prompt=jnp.arange(6), max_new_tokens=12)
+        ref = _solo(model, params, [req])[0]
+        eng = SpeculativeEngine(model, params, bad, batch_size=1,
+                                max_seq_len=64, draft_k=4)
+        assert eng.demoted is True
+        assert eng._demotions[0]["at"] == "init"
+        assert "verification" in eng._demotions[0]["reason"]
+        out = eng.generate([Request(uid=0, prompt=jnp.arange(6),
+                                    max_new_tokens=12)])
+        assert out[0].tokens == ref
+        assert eng.stats["demoted"] is True
+
+
+# ===========================================================================
+# satellite: scheduler edge cases
+# ===========================================================================
+
+
+class TestSchedulerEdges:
+    def test_zero_requests(self, lm):
+        cfg, model, params = lm
+        eng = ContinuousEngine(model, params, batch_size=2, max_seq_len=32,
+                               chunk_steps=4)
+        assert eng.generate([]) == []
+        assert eng.stats["chunks"] == 0
+
+    def test_chunk_len_with_empty_table(self):
+        sched = Scheduler(batch_size=2, chunk_steps=8)
+        # no live slots: the scan length floors at 1 (never 0 — a zero-
+        # length scan is an invalid program)
+        assert sched.chunk_len() == 1
+
+    def test_arrival_after_all_slots_retired(self, lm):
+        """A request arriving after the batch has fully drained must wake
+        the engine (wait-for-arrival branch), admit, and serve — not be
+        dropped with the drained batch."""
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=2, max_new=4)
+        ref = _solo(model, params, reqs)
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate(reqs, arrivals=[0.0, 50.0],
+                           clock=ScriptedClock([], tail_step=1.0))
+        assert [r.status for r in out] == ["ok", "ok"]
+        assert [r.tokens for r in out] == ref
+
+    def test_occupancy_accounts_retire_and_admit_same_chunk(self, lm):
+        """Back-to-back same-size requests through one lane: the slot
+        retires and readmits between chunks, and the busy/total slot-step
+        accounting stays consistent (busy counts only chunk-decoded
+        tokens; admission's first token comes from the prefill)."""
+        cfg, model, params = lm
+        reqs = _reqs(cfg, n=3, max_new=5)
+        eng = ContinuousEngine(model, params, batch_size=1, max_seq_len=64,
+                               chunk_steps=4)
+        out = eng.generate(reqs)
+        assert all(r.status == "ok" for r in out)
+        chunk_tokens = sum(len(r.tokens) - 1 for r in out)  # minus prefill tok
+        assert eng.stats["busy_slot_steps"] == chunk_tokens
+        assert eng.stats["total_slot_steps"] >= chunk_tokens
+        assert 0.0 < eng.stats["occupancy"] <= 1.0
+
+    def test_submit_rejects_when_bounded_queue_full(self):
+        sched = Scheduler(batch_size=1, chunk_steps=4, max_queue=1)
+        assert sched.submit(0, object()) is True
+        assert sched.submit(1, object()) is False
+        assert sched.pending == 1
+
+
+# ===========================================================================
+# satellite/tentpole: staged pipeline fault tolerance
+# ===========================================================================
+
+
+class TestStagedRun:
+    def test_transient_fault_retries_stage_only(self, tmp_path):
+        calls = {"a": 0, "b": 0}
+
+        def stage_a(c):
+            calls["a"] += 1
+            return c + ["a"]
+
+        def stage_b(c):
+            calls["b"] += 1
+            if calls["b"] == 1:
+                raise RuntimeError("transient")
+            return c + ["b"]
+
+        prog = str(tmp_path / "progress.json")
+        runner = StagedRun("unit", max_retries=1, progress_path=prog)
+        out = runner.run([], [("a", stage_a), ("b", stage_b)])
+        assert out == ["a", "b"]
+        assert calls == {"a": 1, "b": 2}      # a never re-ran
+        recs = {r.name: r for r in runner.records}
+        assert recs["a"].attempts == 1 and recs["b"].attempts == 2
+        assert StagedRun.completed_stages(prog) == ["a", "b"]
+
+    def test_exhausted_retries_raise_stage_error(self, tmp_path):
+        def boom(c):
+            raise ValueError("persistent")
+
+        prog = str(tmp_path / "progress.json")
+        runner = StagedRun("unit", max_retries=1, progress_path=prog)
+        with pytest.raises(StageError) as ei:
+            runner.run(None, [("boom", boom)])
+        assert ei.value.stage == "boom" and ei.value.attempts == 2
+        # the failure is on the ledger for the post-mortem
+        assert StagedRun.completed_stages(prog) == []
+        assert runner.records[-1].status == "failed"
+
+    def test_skip_resumes_completed_stages(self, tmp_path):
+        ran = []
+        stages = [("a", lambda c: ran.append("a") or c),
+                  ("b", lambda c: ran.append("b") or c)]
+        runner = StagedRun("unit")
+        runner.run(None, stages, skip=["a"])
+        assert ran == ["b"]
+
+    def test_completed_stages_tolerates_garbage(self, tmp_path):
+        p = str(tmp_path / "nope.json")
+        assert StagedRun.completed_stages(p) == []
+        with open(p, "w") as f:
+            f.write("{not json")
+        assert StagedRun.completed_stages(p) == []
