@@ -44,6 +44,16 @@ the dense-fallback degraded mode serves correct tokens at no less than
 ``REPRO_MIN_DEGRADED_RATIO`` of clean packed throughput — degradation
 trades speed, never correctness.
 
+``BENCH_prune_resilience.json`` (``benchmarks/prune_resilience.py``) —
+the ADMM pruning reliability contract: a run killed mid-ADMM and
+resumed must produce BIT-IDENTICAL masks/weights/history to an
+uninterrupted run at a combined cost within
+``REPRO_MAX_RESUME_OVERHEAD`` of the clean checkpointed run, losing at
+most one checkpoint cadence of iterations; an injected NaN iterate must
+be caught, rolled back and recovered (or escape typed with recovery
+disabled); a corrupt newest checkpoint must fall back to the previous
+step and still finish bit-identical.
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
     PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
@@ -309,6 +319,63 @@ GATES: Tuple[GateSpec, ...] = (
             f"degraded mode "
             f"{bk[('degraded',)].get('degraded_vs_clean_ratio')}x clean "
             f"throughput, quarantine isolated"),
+    ),
+    GateSpec(
+        name="prune_resilience",
+        path_flag="--prune-resilience-path",
+        key_fields=("scenario",),
+        required=(("resume",), ("recovery",), ("corrupt",)),
+        checks=(
+            Check(metric="masks_identical", op="truthy", row=("resume",),
+                  why="a killed-and-resumed prune must emit the EXACT "
+                      "mask function of an uninterrupted run — the "
+                      "client retrains against it, so a near-miss is a "
+                      "silent model corruption"),
+            Check(metric="params_identical", op="truthy", row=("resume",),
+                  why="the resumed run's pruned weights must be "
+                      "bit-identical — resume replays the PRNG and data "
+                      "stream from the committed state, nothing drifts"),
+            Check(metric="history_identical", op="truthy", row=("resume",),
+                  why="the per-iteration history must stitch exactly "
+                      "across the kill — a gap or repeat means the loop "
+                      "double-ran or skipped an iteration"),
+            Check(metric="lost_within_cadence", op="truthy",
+                  row=("resume",),
+                  why="a kill loses at most save_every iterations — "
+                      "more means checkpoints are not committing at "
+                      "the promised cadence"),
+            Check(metric="resume_overhead_ratio", op="<=", row=("resume",),
+                  default=0.05, env="REPRO_MAX_RESUME_OVERHEAD",
+                  flag="--max-resume-overhead",
+                  why="kill+resume must cost about one state restore "
+                      "over the clean checkpointed run — a recompile or "
+                      "replay-from-zero shows up as a large ratio"),
+            Check(metric="recovery_success", op="truthy", row=("recovery",),
+                  why="an injected NaN iterate must be detected, rolled "
+                      "back to the last good checkpoint, and the run "
+                      "completed with finite history"),
+            Check(metric="terminal_typed", op="truthy", row=("recovery",),
+                  why="with recovery disabled the same fault must "
+                      "escape as typed PruneDivergence at the poisoned "
+                      "iteration — never a hang, never NaN masks"),
+            Check(metric="corrupt_step_skipped", op="truthy",
+                  row=("corrupt",),
+                  why="a corrupt newest checkpoint must fail its CRC "
+                      "and be skipped with a trace record"),
+            Check(metric="fallback_identical", op="truthy",
+                  row=("corrupt",),
+                  why="resuming past a corrupt checkpoint from the "
+                      "previous step must still finish bit-identical "
+                      "to the clean run"),
+        ),
+        summary=lambda bk: (
+            f"kill@{bk[('resume',)].get('kill_iteration')} resumed "
+            f"bit-identical (lost "
+            f"{bk[('resume',)].get('iterations_lost_on_kill')} iters, "
+            f"overhead {bk[('resume',)].get('resume_overhead_ratio')}), "
+            f"NaN recovered x{bk[('recovery',)].get('rollbacks')}, "
+            f"corrupt ckpt fell back to step "
+            f"{bk[('corrupt',)].get('resumed_from_step')}"),
     ),
 )
 

@@ -17,6 +17,9 @@ Paper-table map (DESIGN.md §6):
             privacy-preserving-synthetic targets (the privacy claim)
     fault_injection — the reliability layer under seeded faults: typed
             shedding/timeouts, quarantine isolation, degraded-mode cost
+    prune_resilience — the ADMM pruning reliability layer: kill+resume
+            bit-identity and cost, NaN divergence recovery, corrupt-
+            checkpoint fallback
     (table3 — ImageNet ResNet-18 — is covered by the scheme sweep of
      table1/table2 at matching compression rates; no ImageNet on the box.)
 """
@@ -31,7 +34,8 @@ import time
 
 SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
 # quick mode runs the gated suites: serving + privacy MIA + reliability
-GATED_SUITES = SERVE_SUITES + ("privacy_mia", "fault_injection")
+GATED_SUITES = SERVE_SUITES + ("privacy_mia", "fault_injection",
+                               "prune_resilience")
 
 
 def main() -> None:
@@ -39,7 +43,7 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
                          "packed_serve,continuous_serve,speculative_serve,"
-                         "privacy_mia,fault_injection")
+                         "privacy_mia,fault_injection,prune_resilience")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: REPRO_BENCH_FAST=1 and only the "
                          "suites check_regression.py gates on")
@@ -57,6 +61,7 @@ def main() -> None:
         fig3_kernels,
         packed_serve,
         privacy_mia,
+        prune_resilience,
         speculative_serve,
         table1_schemes,
         table2_pattern,
@@ -75,6 +80,7 @@ def main() -> None:
         "speculative_serve": speculative_serve.run,
         "privacy_mia": privacy_mia.run,
         "fault_injection": fault_injection.run,
+        "prune_resilience": prune_resilience.run,
     }
 
     summary = {}

@@ -17,6 +17,25 @@ lineage it consumed (synthetic / real / none); ``to_artifact`` forwards it
 into the manifest's ``privacy`` block, and ``per_example_cross_entropy`` +
 ``LMAdapter.per_example_loss`` expose the unreduced losses/posteriors the
 ``repro.privacy`` membership-inference harness attacks.
+
+Checkpoint/resume contract (``prune_state``): every ADMM prune entry
+point (``PrivacyPreservingPruner.run`` and ``admm_task_prune``) accepts
+``checkpoint_dir`` / ``save_every`` / ``resume``. With them set, the full
+run state (W, ADMMVars Z/U, PRNG key, iteration counter, history,
+recovery overrides) commits atomically through the CRC32 schema-v2
+checkpoint format every ``save_every`` iterations, and a killed run
+resumed with ``resume=True`` produces masks and weights BIT-IDENTICAL to
+an uninterrupted run. Requirements for that guarantee: synthetic batches
+are a pure function of the saved PRNG key (always true here), and real
+data (``admm_task_prune``) must be step-indexed — a callable
+``iteration -> batch`` — not a bare iterator. Checkpoints carry a
+``run_fingerprint`` of the initial weights + config; a stale directory
+from a different run is ignored, and a corrupt latest checkpoint falls
+back to the previous one (``ArtifactError`` only if all are corrupt).
+Divergence (non-finite or exploding loss/residuals) raises typed
+``PruneDivergence`` after bounded in-run recovery — rollback to the last
+good checkpoint with lr backoff and Boyd residual-balancing
+``adaptive_rho`` — governed by ``HealthPolicy``.
 """
 
 from repro.core.admm import (
@@ -24,6 +43,7 @@ from repro.core.admm import (
     admm_init,
     admm_iteration,
     augmented_penalty,
+    dual_residual,
     dual_step,
     primal_residual,
     primal_step,
@@ -44,6 +64,14 @@ from repro.core.masks import (
     sparsity,
 )
 from repro.core.lm_adapter import LMAdapter
+from repro.core.prune_state import (
+    HealthPolicy,
+    PruneCheckpointer,
+    PruneDivergence,
+    PruneRunState,
+    adaptive_rho,
+    run_fingerprint,
+)
 from repro.core.pruner import PruneResult, PrivacyPreservingPruner, rho_schedule
 from repro.core.schemes import (
     DEFAULT_EXCLUDE,

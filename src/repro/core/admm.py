@@ -153,6 +153,29 @@ def admm_iteration(
     return prunable, av, loss
 
 
+def dual_residual(z_new: Any, z_old: Any, rho) -> jnp.ndarray:
+    """ρ·‖Z^k − Z^{k−1}‖_F / ‖Z^k‖_F — the (normalized) dual-feasibility
+    residual (Boyd §3.3). Rises when ρ overpowers the task loss; the
+    residual-balancing rho update in ``core.prune_state`` keeps it within
+    a factor of the primal residual."""
+    num = jax.tree.reduce(
+        jnp.add,
+        jax.tree.map(
+            lambda n, o: jnp.sum(jnp.square(n.astype(jnp.float32)
+                                            - o.astype(jnp.float32))),
+            z_new, z_old,
+        ),
+        jnp.float32(0),
+    )
+    den = jax.tree.reduce(
+        jnp.add,
+        jax.tree.map(lambda n: jnp.sum(jnp.square(n.astype(jnp.float32))),
+                     z_new),
+        jnp.float32(0),
+    )
+    return rho * jnp.sqrt(num / jnp.maximum(den, 1e-12))
+
+
 def primal_residual(prunable: Any, av: ADMMVars) -> jnp.ndarray:
     """‖W − Z‖_F / ‖W‖_F — the standard ADMM convergence diagnostic."""
     num = jax.tree.reduce(

@@ -5,17 +5,28 @@ the TASK loss (cross-entropy against real labels from the client's dataset)
 instead of the synthetic-data distillation distance. Exists so the framework
 can reproduce the paper's head-to-head comparison: privacy-preserving pruning
 should match ADMM† compression/accuracy without ever touching the dataset.
+
+Runs on the same resumable driver as ``PrivacyPreservingPruner``
+(``core.prune_state.run_admm_loop``): checkpoint/resume and divergence
+recovery work here too, PROVIDED ``data`` is step-indexed (a callable
+``iteration -> batch``) — a plain iterator cannot be replayed bit-exactly
+across a process death, so checkpointing with one is rejected.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterator, List
+from typing import Any, Callable, Dict, Iterator, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import admm
+from repro.core.prune_state import (
+    HealthPolicy,
+    PruneRunState,
+    run_admm_loop,
+)
 from repro.core.pruner import PruneResult, PrivacyPreservingPruner, rho_schedule
 from repro.core.schemes import PruneConfig, build_specs, project_tree
 
@@ -40,13 +51,38 @@ def admm_task_prune(
     key: jax.Array,
     teacher_params: Any,
     apply_fn: Callable[[Any, Any], jnp.ndarray],
-    data_iter: Iterator,
+    data_iter: Union[Iterator, Callable[[int], Any]],
     config: PruneConfig,
     *,
     loss_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray] = cross_entropy,
+    checkpoint_dir: Optional[str] = None,
+    save_every: int = 0,
+    resume: bool = False,
+    health: Optional[HealthPolicy] = None,
+    fault_hook: Optional[Callable[[int, Any, Any], Any]] = None,
+    callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
 ) -> PruneResult:
-    """ADMM† — prune with the real labeled data (no privacy)."""
-    del key  # data order comes from the iterator
+    """ADMM† — prune with the real labeled data (no privacy).
+
+    ``data_iter`` is either an iterator of batches (legacy callers) or a
+    step-indexed callable ``iteration -> batch``. Checkpoint/resume
+    (``checkpoint_dir``/``save_every``/``resume``) requires the callable
+    form: data must be a pure function of the iteration index for a
+    resumed run to be bit-identical to an uninterrupted one.
+    """
+    if callable(data_iter):
+        batch_for = data_iter
+    else:
+        if checkpoint_dir is not None:
+            raise ValueError(
+                "checkpoint/resume for admm_task_prune requires "
+                "step-indexed data (a callable iteration -> batch); a "
+                "plain iterator cannot be replayed across a restart")
+        src = iter(data_iter)
+
+        def batch_for(it):
+            return next(src)
+
     params = jax.tree.map(jnp.asarray, teacher_params)
     specs = build_specs(params, config)
     av = admm.admm_init(params)
@@ -63,21 +99,42 @@ def admm_task_prune(
             primal_steps=config.primal_steps, specs=specs,
         )
 
-    history: Dict[str, List[float]] = {"loss": [], "residual": [], "rho": []}
-    t0 = time.perf_counter()
-    for it in range(config.iterations):
-        batch = next(data_iter)
-        rho = rho_schedule(config, it)
-        params, av, loss = update(
-            params, av, batch, jnp.float32(config.lr), jnp.float32(rho)
-        )
-        history["loss"].append(float(loss))
-        history["residual"].append(float(admm.primal_residual(params, av)))
-        history["rho"].append(rho)
-    secs = (time.perf_counter() - t0) / max(config.iterations, 1)
+    def iter_fn(p, av_, bkey, it, *, lr, rho):
+        del bkey                      # data order comes from the step index
+        p, av_, loss = update(p, av_, batch_for(it),
+                              jnp.float32(lr), jnp.float32(rho))
+        return p, av_, {
+            "loss": float(loss),
+            "residual": float(admm.primal_residual(p, av_)),
+        }
 
-    pruned = project_tree(params, specs)
+    state = PruneRunState(params=params, av=av, key=jnp.asarray(key))
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.core.prune_state import PruneCheckpointer, run_fingerprint
+
+        ckpt = PruneCheckpointer(
+            checkpoint_dir, save_every=save_every,
+            fingerprint=run_fingerprint(teacher_params, config,
+                                        config.iterations, "task"))
+        if resume:
+            loaded = ckpt.load_latest(state)
+            if loaded is not None:
+                state = loaded
+
+    start_it = state.iteration
+    t0 = time.perf_counter()
+    state = run_admm_loop(
+        state, iter_fn, iterations=config.iterations, lr=config.lr,
+        rho_fn=lambda it: rho_schedule(config, it),
+        rho_bounds=(config.rho_init, config.rho_max),
+        policy=health, checkpointer=ckpt, callback=callback,
+        fault_hook=fault_hook,
+    )
+    secs = (time.perf_counter() - t0) / max(state.iteration - start_it, 1)
+
+    pruned = project_tree(state.params, specs)
     masks = PrivacyPreservingPruner._masks(pruned, specs)
-    return PruneResult(pruned, masks, specs, history, secs,
+    return PruneResult(pruned, masks, specs, state.history, secs,
                        provenance={"data": "real",
                                    "method": "admm_traditional"})

@@ -1,0 +1,484 @@
+"""Resumable, self-healing ADMM run state (the pruning reliability layer).
+
+The ADMM prune is the longest-running stage of the service: a preempted
+run restarting from iteration 0 wastes the whole budget, and a bad rho
+silently produces NaN masks. This module gives every ADMM driver in
+``core`` (``PrivacyPreservingPruner`` and ``admm_task_prune``) one shared
+loop with three properties:
+
+  RESUMABLE   the full run state — params (W), ``ADMMVars`` (Z/U), the
+              PRNG key, the iteration counter, adaptive-rho/lr overrides
+              and the per-iteration ``history`` — round-trips through the
+              CRC32 schema-v2 checkpoint format (``repro.checkpoint``) at
+              a configurable cadence. A killed run resumed from its
+              latest checkpoint is BIT-IDENTICAL to an uninterrupted one:
+              synthetic batches are a pure function of the saved key,
+              real batches of the saved iteration index, and float32
+              leaves round-trip exactly through ``np.save``.
+  SELF-HEALING a per-iteration health monitor on loss / primal residual /
+              dual residual raises typed ``PruneDivergence`` on
+              non-finite or exploding iterates; the loop rolls back to
+              the last good checkpoint (or the in-memory start anchor),
+              backs off the lr, switches rho to Boyd-style
+              residual-balancing (``adaptive_rho``), and retries —
+              bounded by ``HealthPolicy.max_recoveries`` before the
+              typed exception escapes.
+  DIAGNOSABLE every iteration and every lifecycle event (start / resume /
+              checkpoint / rollback / gave-up) is appended to
+              ``trace.jsonl`` next to the checkpoints, so post-hoc
+              divergence diagnosis never needs a rerun.
+
+A checkpoint is only trusted if its recorded ``run_fingerprint`` (CRC32
+over the initial weights + the prune-config signature) matches the
+current run — a stale directory from a different teacher or config is
+ignored, never silently resumed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import math
+import os
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admm
+
+log = logging.getLogger(__name__)
+
+TRACE_FILE = "trace.jsonl"
+HISTORY_KEYS = ("loss", "residual", "dual_residual", "rho")
+
+
+class PruneDivergence(RuntimeError):
+    """An ADMM prune run produced non-finite or exploding iterates.
+
+    Raised by the per-iteration health monitor; if the bounded recovery
+    policy (rollback + lr backoff + adaptive rho) also fails, the final
+    instance escapes ``run_admm_loop`` as the run's typed outcome.
+    ``iteration`` is where the bad iterate was detected, ``metric`` /
+    ``value`` name the offending diagnostic, ``recoveries`` counts the
+    rollback attempts already consumed.
+    """
+
+    def __init__(self, message: str, *, iteration: int,
+                 metric: Optional[str] = None, value: Any = None,
+                 recoveries: int = 0):
+        self.iteration = iteration
+        self.metric = metric
+        self.value = value
+        self.recoveries = recoveries
+        detail = [f"iteration={iteration}"]
+        if metric is not None:
+            detail.append(f"metric={metric}")
+        if value is not None:
+            detail.append(f"value={value}")
+        if recoveries:
+            detail.append(f"recoveries={recoveries}")
+        super().__init__(f"{message} [{', '.join(detail)}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """Divergence detection + bounded recovery knobs.
+
+    ``explode_factor`` compares |loss| against the largest |loss| of the
+    TRAILING ``warmup_iters`` iterations (the run's own recent scale —
+    absolute thresholds cannot work across a 4x CNN prune and a 16x LM
+    prune, and the run's warmup scale cannot either: the augmented
+    Lagrangian legitimately grows by orders of magnitude as the ρ
+    schedule steps, so only a sudden jump is pathological). The check is
+    silent for the first ``warmup_iters`` iterations.
+    ``residual_cap`` bounds the normalized primal residual ‖W−Z‖/‖W‖,
+    which sits in [0, ~1] for any sane run. On divergence the loop rolls
+    back and retries at ``lr × lr_backoff`` with rho switched to
+    residual-balancing mode (Boyd §3.4.1: ×``rho_tau`` when the primal
+    residual exceeds ``rho_mu``× the dual, ÷``rho_tau`` in the mirror
+    case), at most ``max_recoveries`` times.
+    """
+
+    explode_factor: float = 50.0
+    residual_cap: float = 10.0
+    warmup_iters: int = 3
+    max_recoveries: int = 2
+    lr_backoff: float = 0.5
+    rho_mu: float = 10.0
+    rho_tau: float = 2.0
+
+
+def adaptive_rho(rho: float, primal: float, dual: float, *,
+                 mu: float = 10.0, tau: float = 2.0,
+                 rho_min: float = 0.0,
+                 rho_max: float = float("inf")) -> float:
+    """Boyd residual-balancing rho update, clamped to [rho_min, rho_max].
+
+    Keeps the primal and dual residuals within a factor ``mu`` of each
+    other: a large primal residual means the constraint W=Z needs more
+    weight (rho × tau); a large dual residual means rho is overpowering
+    the task loss (rho / tau). Monotone in ``rho`` and bounded: the
+    result never leaves [rho_min, rho_max] and never moves by more than
+    a factor of ``tau``.
+    """
+    if tau < 1.0:
+        raise ValueError(f"tau must be >= 1 (got {tau})")
+    if mu <= 0:
+        raise ValueError(f"mu must be > 0 (got {mu})")
+    if primal > mu * dual:
+        rho = rho * tau
+    elif dual > mu * primal:
+        rho = rho / tau
+    return float(min(max(rho, rho_min), rho_max))
+
+
+def _empty_history() -> Dict[str, List[float]]:
+    return {k: [] for k in HISTORY_KEYS}
+
+
+@dataclasses.dataclass
+class PruneRunState:
+    """Everything a mid-run ADMM prune needs to continue bit-exactly."""
+
+    params: Any                                   # W^k
+    av: Any                                       # ADMMVars | [ADMMVars]
+    key: Any                                      # PRNG key BEFORE split k
+    iteration: int = 0                            # next iteration to run
+    history: Dict[str, List[float]] = dataclasses.field(
+        default_factory=_empty_history)
+    rho_override: Optional[float] = None          # set after a recovery
+    lr_scale: float = 1.0                         # backed off on recovery
+    recoveries: int = 0
+
+    def snapshot(self) -> "PruneRunState":
+        """Copy with an independent history (params/av are immutable)."""
+        return dataclasses.replace(
+            self, history={k: list(v) for k, v in self.history.items()})
+
+
+def run_fingerprint(params: Any, config: Any, iterations: int,
+                    kind: str) -> str:
+    """CRC32 identity of a prune run: initial weights + config signature.
+
+    Stored in every checkpoint's ``extra``; a directory whose fingerprint
+    disagrees belongs to a different teacher/config and must not be
+    resumed (the restored state would be silently wrong, which is worse
+    than starting over).
+    """
+    crc = 0
+    for leaf in jax.tree.leaves(params):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    sig = json.dumps([kind, int(iterations), dataclasses.asdict(config)],
+                     sort_keys=True, default=str)
+    return f"{zlib.crc32(sig.encode('utf-8'), crc) & 0xFFFFFFFF:08x}"
+
+
+def _z_trees(av: Any) -> List[Any]:
+    if isinstance(av, admm.ADMMVars):
+        return [av.z]
+    return [a.z for a in av]
+
+
+def loop_dual_residual(av_new: Any, av_old: Any, rho: float) -> float:
+    """Dual residual across a whole-model ``ADMMVars`` or a per-layer
+    list of them (the layerwise formulation), averaged over layers."""
+    zn, zo = _z_trees(av_new), _z_trees(av_old)
+    vals = [float(admm.dual_residual(n, o, rho)) for n, o in zip(zn, zo)]
+    return float(sum(vals) / max(len(vals), 1))
+
+
+class PruneCheckpointer:
+    """CRC32 schema-v2 checkpoints + ``trace.jsonl`` for one ADMM run.
+
+    Wraps ``CheckpointManager`` (atomic commits, rotation) with the
+    prune-run specifics: the state tree is ``{params, av, key}``; the
+    scalar side of ``PruneRunState`` rides in the manifest ``extra``
+    (floats round-trip exactly through JSON repr). ``load_latest`` walks
+    newest → oldest, skipping corrupt checkpoints (each skip is traced);
+    if EVERY checkpoint is corrupt the last ``ArtifactError`` escapes —
+    the caller decides whether corrupt-and-restart beats resuming wrong.
+    """
+
+    def __init__(self, directory: str, *, save_every: int = 0,
+                 keep: int = 3, fingerprint: Optional[str] = None):
+        from repro.checkpoint import CheckpointManager
+
+        self.directory = directory
+        self.save_every = int(save_every)
+        self.fingerprint = fingerprint
+        self.manager = CheckpointManager(directory, keep=keep)
+        self.trace_path = os.path.join(directory, TRACE_FILE)
+
+    # -- trace --------------------------------------------------------------
+
+    def trace(self, record: Dict[str, Any]) -> None:
+        with open(self.trace_path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, state: PruneRunState) -> None:
+        tree = {"params": state.params, "av": state.av,
+                "key": jnp.asarray(state.key)}
+        self.manager.save(state.iteration, tree, extra={"prune_state": {
+            "iteration": state.iteration,
+            "history": state.history,
+            "rho_override": state.rho_override,
+            "lr_scale": state.lr_scale,
+            "recoveries": state.recoveries,
+            "fingerprint": self.fingerprint,
+        }})
+
+    def maybe_save(self, state: PruneRunState) -> bool:
+        if (self.save_every > 0 and state.iteration > 0
+                and state.iteration % self.save_every == 0):
+            self.save(state)
+            self.trace({"event": "checkpoint", "step": state.iteration})
+            return True
+        return False
+
+    # -- load ---------------------------------------------------------------
+
+    def steps(self) -> List[int]:
+        return self.manager.steps()
+
+    def load_latest(self, template: PruneRunState
+                    ) -> Optional[PruneRunState]:
+        """Newest loadable checkpoint as a ``PruneRunState``, or None.
+
+        None means "no usable checkpoint, start fresh": either nothing
+        was ever committed, or the directory's fingerprint belongs to a
+        different run (stale — resuming it would be silently wrong).
+        Corrupt checkpoints are skipped with a trace record; if all of
+        them are corrupt, the last ``ArtifactError`` is raised.
+        """
+        from repro.checkpoint import ArtifactError, restore_pytree
+
+        like = {"params": template.params, "av": template.av,
+                "key": jnp.asarray(template.key)}
+        last_err: Optional[ArtifactError] = None
+        for step in reversed(self.manager.steps()):
+            directory = self.manager._dir(step)
+            try:
+                extra = self.manager.extra(step).get("prune_state", {})
+                recorded = extra.get("fingerprint")
+                if (self.fingerprint is not None and recorded is not None
+                        and recorded != self.fingerprint):
+                    log.warning(
+                        "checkpoints under %s fingerprint %s; this run is "
+                        "%s — stale directory ignored, starting fresh",
+                        self.directory, recorded, self.fingerprint)
+                    self.trace({"event": "stale_checkpoint", "step": step,
+                                "recorded": recorded,
+                                "expected": self.fingerprint})
+                    return None
+                tree = restore_pytree(directory, like)
+                # restore_pytree hands back numpy arrays; the update fns
+                # (e.g. LMAdapter's .at[].set) need device arrays
+                tree = jax.tree.map(jnp.asarray, tree)
+                return PruneRunState(
+                    params=tree["params"], av=tree["av"],
+                    key=jnp.asarray(tree["key"]),
+                    iteration=int(extra.get("iteration", step)),
+                    history={k: list(v)
+                             for k, v in extra.get("history",
+                                                   _empty_history()).items()},
+                    rho_override=extra.get("rho_override"),
+                    lr_scale=float(extra.get("lr_scale", 1.0)),
+                    recoveries=int(extra.get("recoveries", 0)),
+                )
+            except ArtifactError as e:
+                last_err = e
+                log.warning("checkpoint step %d unreadable (%s); trying "
+                            "an older one", step, e)
+                self.trace({"event": "corrupt_checkpoint", "step": step,
+                            "error": str(e)})
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                last_err = ArtifactError(
+                    f"checkpoint step {step} unreadable "
+                    f"({type(e).__name__}: {e})", path=directory)
+                log.warning("%s; trying an older one", last_err)
+                self.trace({"event": "corrupt_checkpoint", "step": step,
+                            "error": str(last_err)})
+        if last_err is not None:
+            raise last_err
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the shared driver
+# ---------------------------------------------------------------------------
+
+# iter_fn(params, av, bkey, it, lr=..., rho=...) -> (params, av, metrics)
+# where metrics is {"loss": float, "residual": float} of PYTHON floats.
+IterFn = Callable[..., Tuple[Any, Any, Dict[str, float]]]
+
+
+def check_health(it: int, metrics: Dict[str, float],
+                 history: Dict[str, List[float]], policy: HealthPolicy,
+                 *, recoveries: int = 0) -> None:
+    """Raise ``PruneDivergence`` if this iteration's diagnostics are bad."""
+    for name in ("loss", "residual", "dual_residual"):
+        v = metrics.get(name)
+        if v is not None and not math.isfinite(v):
+            raise PruneDivergence(f"non-finite {name}", iteration=it,
+                                  metric=name, value=v,
+                                  recoveries=recoveries)
+    residual = metrics.get("residual")
+    if residual is not None and residual > policy.residual_cap:
+        raise PruneDivergence(
+            "primal residual exploded", iteration=it, metric="residual",
+            value=residual, recoveries=recoveries)
+    loss = metrics.get("loss")
+    past = history.get("loss", [])
+    if loss is not None and len(past) >= policy.warmup_iters:
+        ref = max(abs(v) for v in past[-policy.warmup_iters:])
+        if abs(loss) > policy.explode_factor * max(ref, 1e-12):
+            raise PruneDivergence(
+                "loss exploded vs the run's recent scale", iteration=it,
+                metric="loss", value=loss, recoveries=recoveries)
+
+
+def _recover(state: PruneRunState, err: PruneDivergence,
+             policy: HealthPolicy,
+             checkpointer: Optional[PruneCheckpointer],
+             anchor: PruneRunState, rho_at_failure: float,
+             rho_bounds: Tuple[float, float]) -> PruneRunState:
+    """Roll back to the last good state and adapt, or re-raise typed."""
+    attempt = state.recoveries + 1
+    if attempt > policy.max_recoveries:
+        if checkpointer is not None:
+            checkpointer.trace({"event": "gave_up",
+                                "iteration": err.iteration,
+                                "recoveries": state.recoveries,
+                                "error": str(err)})
+        raise PruneDivergence(
+            f"diverged and exhausted {policy.max_recoveries} recovery "
+            f"attempt(s): {err}", iteration=err.iteration,
+            metric=err.metric, value=err.value,
+            recoveries=state.recoveries) from err
+
+    rolled: Optional[PruneRunState] = None
+    if checkpointer is not None:
+        from repro.checkpoint import ArtifactError
+
+        try:
+            rolled = checkpointer.load_latest(anchor)
+        except ArtifactError:
+            rolled = None        # every checkpoint corrupt: use the anchor
+    if rolled is None:
+        rolled = anchor.snapshot()
+    rolled.recoveries = attempt
+    rolled.lr_scale = state.lr_scale * policy.lr_backoff
+    # restart rho below the failing value; residual balancing (applied
+    # each iteration while the override is active) takes it from there
+    rho_min, rho_max = rho_bounds
+    rolled.rho_override = float(min(max(rho_at_failure / policy.rho_tau,
+                                        rho_min), rho_max))
+    log.warning(
+        "prune diverged at iteration %d (%s); rolled back to iteration "
+        "%d, lr_scale=%.3g, rho=%.3g (recovery %d/%d)", err.iteration,
+        err, rolled.iteration, rolled.lr_scale, rolled.rho_override,
+        attempt, policy.max_recoveries)
+    if checkpointer is not None:
+        checkpointer.trace({"event": "rollback",
+                            "diverged_at": err.iteration,
+                            "metric": err.metric,
+                            "resumed_from": rolled.iteration,
+                            "lr_scale": rolled.lr_scale,
+                            "rho_override": rolled.rho_override,
+                            "recovery": attempt,
+                            "max_recoveries": policy.max_recoveries})
+    return rolled
+
+
+def run_admm_loop(
+    state: PruneRunState,
+    iter_fn: IterFn,
+    *,
+    iterations: int,
+    lr: float,
+    rho_fn: Callable[[int], float],
+    rho_bounds: Tuple[float, float],
+    policy: Optional[HealthPolicy] = None,
+    checkpointer: Optional[PruneCheckpointer] = None,
+    callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
+    fault_hook: Optional[Callable[[int, Any, Any], Any]] = None,
+) -> PruneRunState:
+    """Drive ``iter_fn`` from ``state.iteration`` to ``iterations``.
+
+    Per iteration: split the PRNG key, resolve rho (the recovery
+    override wins over ``rho_fn``), run ``iter_fn``, derive the dual
+    residual from the Z-trees, health-check, then commit the new state,
+    append history, trace, checkpoint at the cadence and finally invoke
+    ``callback`` — so a process killed inside the callback (the chaos
+    kill injector) has already committed the iteration it observed.
+
+    ``fault_hook(it, params, av)`` is the chaos seam: returning a
+    ``(params, av)`` pair replaces the iterates BEFORE the iteration runs
+    (NaN-gradient poison); returning None leaves them untouched.
+
+    On ``PruneDivergence`` the state is rolled back (last good checkpoint,
+    else the entry snapshot) and retried under ``HealthPolicy``; the
+    bounded-attempts exhaustion re-raises typed. Any other exception
+    (including an injected ``ChaosKill``) propagates immediately — crash
+    semantics, resumable from the last committed checkpoint.
+    """
+    policy = policy or HealthPolicy()
+    anchor = state.snapshot()
+    if checkpointer is not None:
+        checkpointer.trace({
+            "event": "resume" if state.iteration > 0 else "start",
+            "iteration": state.iteration, "iterations": iterations,
+            "fingerprint": checkpointer.fingerprint, "time": time.time()})
+    while state.iteration < iterations:
+        it = state.iteration
+        key, bkey = jax.random.split(jnp.asarray(state.key))
+        rho = (float(state.rho_override) if state.rho_override is not None
+               else float(rho_fn(it)))
+        params, av = state.params, state.av
+        if fault_hook is not None:
+            injected = fault_hook(it, params, av)
+            if injected is not None:
+                params, av = injected
+        params, av, metrics = iter_fn(params, av, bkey, it,
+                                      lr=lr * state.lr_scale, rho=rho)
+        metrics = dict(metrics)
+        metrics.setdefault("dual_residual",
+                           loop_dual_residual(av, state.av, rho))
+        metrics["rho"] = rho
+        try:
+            check_health(it, metrics, state.history, policy,
+                         recoveries=state.recoveries)
+        except PruneDivergence as e:
+            state = _recover(state, e, policy, checkpointer, anchor,
+                             rho, rho_bounds)
+            continue
+        state.params, state.av, state.key = params, av, key
+        state.iteration = it + 1
+        for k in HISTORY_KEYS:
+            state.history.setdefault(k, []).append(metrics[k])
+        if state.rho_override is not None:
+            state.rho_override = adaptive_rho(
+                state.rho_override, metrics["residual"],
+                metrics["dual_residual"], mu=policy.rho_mu,
+                tau=policy.rho_tau, rho_min=rho_bounds[0],
+                rho_max=rho_bounds[1])
+        if checkpointer is not None:
+            checkpointer.trace({"it": it, **{k: metrics[k]
+                                             for k in HISTORY_KEYS},
+                                "lr_scale": state.lr_scale,
+                                "recoveries": state.recoveries})
+            checkpointer.maybe_save(state)
+        if callback is not None:
+            callback(it, metrics)
+    if checkpointer is not None and checkpointer.save_every > 0:
+        checkpointer.save(state)       # final state: a retried wrapper
+        checkpointer.trace({"event": "done",      # resumes to a no-op
+                            "iteration": state.iteration})
+    return state

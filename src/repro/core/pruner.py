@@ -31,6 +31,13 @@ import jax.numpy as jnp
 
 from repro.core import admm, distill
 from repro.core.masks import mask_from_params
+from repro.core.prune_state import (
+    HealthPolicy,
+    PruneCheckpointer,
+    PruneRunState,
+    run_admm_loop,
+    run_fingerprint,
+)
 from repro.core.schemes import LayerSpec, PruneConfig, build_specs, project_tree
 
 
@@ -97,6 +104,9 @@ class PruneResult:
         info = {
             "seconds_per_iter": self.seconds_per_iter,
             "iterations": len(self.history.get("loss", [])),
+            # full per-iteration diagnostics ride in the manifest so
+            # post-hoc divergence diagnosis never needs a rerun
+            "history": {k: list(v) for k, v in self.history.items()},
             **meta,
         }
         if self.provenance:
@@ -162,6 +172,11 @@ class PrivacyPreservingPruner:
         *,
         iterations: Optional[int] = None,
         callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        checkpoint_dir: Optional[str] = None,
+        save_every: int = 0,
+        resume: bool = False,
+        health: Optional[HealthPolicy] = None,
+        fault_hook: Optional[Callable[[int, Any, Any], Any]] = None,
     ) -> PruneResult:
         cfg = self.config
         adapter = self.adapter
@@ -177,12 +192,8 @@ class PrivacyPreservingPruner:
             for n in range(adapter.num_layers)
         ]
 
-        history: Dict[str, List[float]] = {"loss": [], "residual": [], "rho": []}
-        t0 = time.perf_counter()
-        for it in range(iterations):
-            key, bkey = jax.random.split(key)
+        def iter_fn(params, layer_av, bkey, it, *, lr, rho):
             batch = adapter.synthetic_batch(bkey, cfg.batch_size)
-            rho = rho_schedule(cfg, it)
 
             # Teacher activations for every layer, one pass, frozen weights.
             x_t = adapter.embed(teacher_params, batch)
@@ -194,16 +205,19 @@ class PrivacyPreservingPruner:
                 teacher_acts.append(x_t)
 
             # Student pass, updating layer n before feeding layer n+1
-            # (Algorithm 1's inner loop: F_{:n-1} uses already-updated layers).
+            # (Algorithm 1's inner loop: F_{:n-1} uses already-updated
+            # layers). The av list is copied, never mutated: on a health
+            # rollback the driver's previous state must stay intact.
             x_s = adapter.embed(params, batch)
             it_loss = 0.0
+            new_av = list(layer_av)
             for n in range(adapter.num_layers):
                 lp = adapter.layer_params(params, n)
                 if n not in self._layer_update:
                     self._layer_update[n] = self._make_layer_update(n, layer_specs[n])
-                lp, layer_av[n], loss = self._layer_update[n](
-                    lp, layer_av[n], x_s, teacher_acts[n],
-                    jnp.float32(cfg.lr), jnp.float32(rho),
+                lp, new_av[n], loss = self._layer_update[n](
+                    lp, new_av[n], x_s, teacher_acts[n],
+                    jnp.float32(lr), jnp.float32(rho),
                 )
                 params = adapter.with_layer_params(params, n, lp)
                 x_s = adapter.apply_layer(n, lp, x_s)
@@ -211,23 +225,37 @@ class PrivacyPreservingPruner:
 
             res = float(
                 sum(
-                    admm.primal_residual(adapter.layer_params(params, n), layer_av[n])
+                    admm.primal_residual(adapter.layer_params(params, n), new_av[n])
                     for n in range(adapter.num_layers)
                 )
             ) / adapter.num_layers
-            history["loss"].append(it_loss)
-            history["residual"].append(res)
-            history["rho"].append(rho)
-            if callback:
-                callback(it, {"loss": it_loss, "residual": res, "rho": rho})
+            return params, new_av, {"loss": it_loss, "residual": res}
 
-        secs = (time.perf_counter() - t0) / max(iterations, 1)
+        state = PruneRunState(params=params, av=layer_av,
+                              key=jnp.asarray(key))
+        ckpt = self._checkpointer(checkpoint_dir, save_every,
+                                  teacher_params, iterations, "layerwise")
+        if resume and ckpt is not None:
+            loaded = ckpt.load_latest(state)
+            if loaded is not None:
+                state = loaded
+        start_it = state.iteration
+        t0 = time.perf_counter()
+        state = run_admm_loop(
+            state, iter_fn, iterations=iterations, lr=cfg.lr,
+            rho_fn=lambda it: rho_schedule(cfg, it),
+            rho_bounds=(cfg.rho_init, cfg.rho_max),
+            policy=health, checkpointer=ckpt, callback=callback,
+            fault_hook=fault_hook,
+        )
+        secs = ((time.perf_counter() - t0)
+                / max(state.iteration - start_it, 1))
 
         # Final hard projection → exactly-sparse weights + the mask function.
-        specs_full = build_specs(params, cfg)
-        pruned = project_tree(params, specs_full)
+        specs_full = build_specs(state.params, cfg)
+        pruned = project_tree(state.params, specs_full)
         masks = self._masks(pruned, specs_full)
-        return PruneResult(pruned, masks, specs_full, history, secs,
+        return PruneResult(pruned, masks, specs_full, state.history, secs,
                            provenance=self._provenance("layerwise"))
 
     # -- whole-model (problem 2) -------------------------------------------
@@ -239,6 +267,11 @@ class PrivacyPreservingPruner:
         *,
         iterations: Optional[int] = None,
         callback: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        checkpoint_dir: Optional[str] = None,
+        save_every: int = 0,
+        resume: bool = False,
+        health: Optional[HealthPolicy] = None,
+        fault_hook: Optional[Callable[[int, Any, Any], Any]] = None,
     ) -> PruneResult:
         cfg = self.config
         adapter = self.adapter
@@ -252,36 +285,53 @@ class PrivacyPreservingPruner:
             x, teacher_out = batch
             return distill.frobenius_distance(adapter.apply(p, x), teacher_out)
 
-        @jax.jit
-        def update(p, av_, batch, lr, rho):
-            return admm.admm_iteration(
-                loss_fn, lambda tree: project_tree(tree, specs),
-                p, av_, batch, lr=lr, rho=rho,
-                primal_steps=cfg.primal_steps, specs=specs,
-            )
+        # cached on the instance so a resumed run (same pruner object, as
+        # in the resilience bench) reuses the compiled executable
+        if "whole" not in self._layer_update:
+            def update(p, av_, batch, lr, rho):
+                return admm.admm_iteration(
+                    loss_fn, lambda tree: project_tree(tree, specs),
+                    p, av_, batch, lr=lr, rho=rho,
+                    primal_steps=cfg.primal_steps, specs=specs,
+                )
+
+            self._layer_update["whole"] = jax.jit(update)
+        update = self._layer_update["whole"]
 
         teacher_apply = jax.jit(adapter.apply)
-        history: Dict[str, List[float]] = {"loss": [], "residual": [], "rho": []}
-        t0 = time.perf_counter()
-        for it in range(iterations):
-            key, bkey = jax.random.split(key)
+
+        def iter_fn(p, av_, bkey, it, *, lr, rho):
             x = adapter.synthetic_batch(bkey, cfg.batch_size)
             teacher_out = teacher_apply(teacher_params, x)
-            rho = rho_schedule(cfg, it)
-            params, av, loss = update(
-                params, av, (x, teacher_out), jnp.float32(cfg.lr), jnp.float32(rho)
-            )
-            history["loss"].append(float(loss))
-            history["residual"].append(float(admm.primal_residual(params, av)))
-            history["rho"].append(rho)
-            if callback:
-                callback(it, {"loss": history["loss"][-1],
-                              "residual": history["residual"][-1], "rho": rho})
-        secs = (time.perf_counter() - t0) / max(iterations, 1)
+            p, av_, loss = update(p, av_, (x, teacher_out),
+                                  jnp.float32(lr), jnp.float32(rho))
+            return p, av_, {
+                "loss": float(loss),
+                "residual": float(admm.primal_residual(p, av_)),
+            }
 
-        pruned = project_tree(params, specs)
+        state = PruneRunState(params=params, av=av, key=jnp.asarray(key))
+        ckpt = self._checkpointer(checkpoint_dir, save_every,
+                                  teacher_params, iterations, "whole_model")
+        if resume and ckpt is not None:
+            loaded = ckpt.load_latest(state)
+            if loaded is not None:
+                state = loaded
+        start_it = state.iteration
+        t0 = time.perf_counter()
+        state = run_admm_loop(
+            state, iter_fn, iterations=iterations, lr=cfg.lr,
+            rho_fn=lambda it: rho_schedule(cfg, it),
+            rho_bounds=(cfg.rho_init, cfg.rho_max),
+            policy=health, checkpointer=ckpt, callback=callback,
+            fault_hook=fault_hook,
+        )
+        secs = ((time.perf_counter() - t0)
+                / max(state.iteration - start_it, 1))
+
+        pruned = project_tree(state.params, specs)
         masks = self._masks(pruned, specs)
-        return PruneResult(pruned, masks, specs, history, secs,
+        return PruneResult(pruned, masks, specs, state.history, secs,
                            provenance=self._provenance("whole_model"))
 
     def run(self, key: jax.Array, teacher_params: Any, **kw) -> PruneResult:
@@ -290,6 +340,15 @@ class PrivacyPreservingPruner:
         return self.run_whole_model(key, teacher_params, **kw)
 
     # -- helpers -------------------------------------------------------------
+
+    def _checkpointer(self, checkpoint_dir: Optional[str], save_every: int,
+                      teacher_params: Any, iterations: int,
+                      kind: str) -> Optional[PruneCheckpointer]:
+        if checkpoint_dir is None:
+            return None
+        fp = run_fingerprint(teacher_params, self.config, iterations, kind)
+        return PruneCheckpointer(checkpoint_dir, save_every=save_every,
+                                 fingerprint=fp)
 
     def _provenance(self, formulation: str) -> Dict[str, Any]:
         """Data-lineage stamp: this path only ever saw synthetic inputs."""

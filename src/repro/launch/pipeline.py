@@ -44,6 +44,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import ARCHS
 from repro.core import compression_rate, sparsity
@@ -51,6 +52,44 @@ from repro.privacy import report as privacy_report
 from repro.privacy.report import CNN_ARCHS, ReportConfig
 
 log = logging.getLogger(__name__)
+
+# stages whose outputs are persisted under <out>/<arch>/stage_<name> so a
+# restarted process can rebuild the carry and skip them (later stages —
+# pack/mia/save — are cheap relative to these and always re-run)
+RESUMABLE_STAGES = ("teacher", "prune", "retrain")
+
+
+def _persist_stage(base: str, name: str, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+    from repro.checkpoint import save_pytree
+
+    save_pytree(os.path.join(base, f"stage_{name}"), tree,
+                extra=extra or {})
+
+
+def _load_stage(base: str, name: str):
+    from repro.checkpoint import load_pytree
+
+    d = os.path.join(base, f"stage_{name}")
+    tree = load_pytree(d)
+    with open(os.path.join(d, "manifest.json")) as f:
+        extra = json.load(f).get("extra", {})
+    return jax.tree.map(jnp.asarray, tree), extra
+
+
+def _rebuild_prune_result(params: Any, extra: Dict[str, Any], prune_cfg):
+    """PruneResult from a persisted prune stage: masks/specs are pure
+    functions of the (exactly sparse) saved params + config."""
+    from repro.core.pruner import PruneResult, PrivacyPreservingPruner
+    from repro.core.schemes import build_specs
+
+    specs = build_specs(params, prune_cfg)
+    masks = PrivacyPreservingPruner._masks(params, specs)
+    return PruneResult(
+        params, masks, specs,
+        history=extra.get("history", {}),
+        seconds_per_iter=float(extra.get("seconds_per_iter", 0.0)),
+        provenance=extra.get("provenance", {}))
 
 
 def run_arch(
@@ -63,6 +102,9 @@ def run_arch(
     tune: bool = True,
     bench_path: Optional[str] = None,
     stage_retries: int = 1,
+    resume: bool = False,
+    restart_stage: Optional[str] = None,
+    save_every: Optional[int] = None,
 ) -> Dict[str, Any]:
     """The full service loop for one architecture; returns a summary.
 
@@ -72,12 +114,64 @@ def run_arch(
     stages before it, and every stage's status/attempts/seconds lands in
     ``<out>/<arch>/progress.json`` (atomically, after each stage) — the
     post-mortem for a killed run.
+
+    ``resume=True`` rebuilds the carry from the persisted outputs of the
+    stages the ledger marks complete and skips them; the prune stage
+    additionally checkpoints its OWN ADMM state every ``save_every``
+    iterations under ``<out>/<arch>/prune_ckpt``, so a kill mid-prune
+    resumes from the last committed iteration, not from iteration 0.
+    ``restart_stage`` invalidates that stage (and everything after it)
+    in the ledger first — the force-rerun seam for a
+    completed-but-wrong stage.
     """
     from repro.runtime.fault_tolerance import StagedRun
 
     t0 = time.perf_counter()
+    base = os.path.join(out_dir, arch)
+    progress_path = os.path.join(base, "progress.json")
+    if restart_stage:
+        kept = StagedRun.invalidate_stage(progress_path, restart_stage)
+        log.info("[%s] ledger entry for stage %r (and later stages) "
+                 "invalidated; still complete: %s", arch, restart_stage,
+                 kept or "none")
+        if restart_stage == "prune":
+            # the intra-stage ADMM checkpoints belong to the invalidated
+            # attempt — a forced rerun must not silently resume them
+            import shutil
+
+            shutil.rmtree(os.path.join(base, "prune_ckpt"),
+                          ignore_errors=True)
+        resume = True
+    if save_every is None or save_every <= 0:
+        save_every = max(1, cfg.prune_iters // 4)
+
     ops = privacy_report.make_ops(arch, cfg)
     ctx: Dict[str, Any] = {}
+
+    skip: List[str] = []
+    if resume:
+        done = set(StagedRun.completed_stages(progress_path))
+        for sname in RESUMABLE_STAGES:
+            if sname not in done:
+                break
+            try:
+                tree, extra = _load_stage(base, sname)
+            except Exception as e:  # noqa: BLE001 — degrade to re-run
+                log.warning("[%s] stage %r marked complete but its "
+                            "persisted output is unloadable (%s); "
+                            "re-running from it", arch, sname, e)
+                break
+            if sname == "teacher":
+                ctx["teacher"] = tree
+            elif sname == "prune":
+                ctx["result"] = _rebuild_prune_result(tree, extra,
+                                                      ops.prune_cfg)
+            else:
+                ctx["retrained"] = tree
+            skip.append(sname)
+        if skip:
+            log.info("[%s] resuming: stage(s) %s restored from disk",
+                     arch, ", ".join(skip))
 
     def stage_teacher(ctx):
         if teacher_ckpt:
@@ -92,16 +186,31 @@ def run_arch(
                      "the confidential pipeline (%d steps)", arch,
                      cfg.teacher_steps)
             ctx["teacher"] = ops.train(ops.member_steps, cfg.seed)
+        _persist_stage(base, "teacher", ctx["teacher"],
+                       extra={"arch": arch})
         return ctx
 
     def stage_prune(ctx):
         log.info("[%s] privacy-preserving ADMM prune (%s @ %.1fx, %d "
                  "iters, synthetic data only)", arch, ops.prune_cfg.scheme,
                  cfg.rate, cfg.prune_iters)
-        ctx["result"] = ops.prune_synthetic(ctx["teacher"])
+        # resume=True unconditionally: the run fingerprint (teacher
+        # weights + config) guards against resuming someone else's
+        # checkpoints, so a stage retry or process restart continues
+        # from the last committed ADMM iteration
+        ctx["result"] = ops.prune_synthetic(
+            ctx["teacher"],
+            checkpoint_dir=os.path.join(base, "prune_ckpt"),
+            save_every=save_every, resume=True)
         log.info("[%s] pruned %.2fx (sparsity %.1f%%) — client data never "
                  "touched", arch, compression_rate(ctx["result"].masks),
                  100 * sparsity(ctx["result"].masks))
+        _persist_stage(base, "prune", ctx["result"].params, extra={
+            "arch": arch,
+            "history": ctx["result"].history,
+            "seconds_per_iter": ctx["result"].seconds_per_iter,
+            "provenance": ctx["result"].provenance,
+        })
         return ctx
 
     def stage_retrain(ctx):
@@ -109,6 +218,8 @@ def run_arch(
                  "data (%d steps)", arch, cfg.retrain_steps)
         ctx["retrained"] = ops.retrain(ctx["result"].params,
                                        ctx["result"].masks)
+        _persist_stage(base, "retrain", ctx["retrained"],
+                       extra={"arch": arch})
         return ctx
 
     def stage_pack(ctx):
@@ -164,8 +275,7 @@ def run_arch(
         return ctx
 
     runner = StagedRun(
-        arch, max_retries=stage_retries,
-        progress_path=os.path.join(out_dir, arch, "progress.json"))
+        arch, max_retries=stage_retries, progress_path=progress_path)
     ctx = runner.run(ctx, [
         ("teacher", stage_teacher),
         ("prune", stage_prune),
@@ -173,7 +283,7 @@ def run_arch(
         ("pack", stage_pack),
         ("mia", stage_mia),
         ("save", stage_save),
-    ])
+    ], skip=skip)
 
     s = ctx["summary"]
     return {
@@ -217,6 +327,20 @@ def main(argv=None) -> int:
     ap.add_argument("--stage-retries", type=int, default=1,
                     help="extra attempts per pipeline stage before the "
                          "arch fails (stage-level fault tolerance)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed run: completed stages are "
+                         "restored from <out>/<arch>/stage_* and "
+                         "skipped; a kill mid-prune continues from the "
+                         "intra-stage ADMM checkpoint")
+    ap.add_argument("--restart-stage", default=None,
+                    choices=["teacher", "prune", "retrain", "pack",
+                             "mia", "save"],
+                    help="invalidate this stage (and everything after "
+                         "it) in the progress.json ledger and re-run "
+                         "from there (implies --resume)")
+    ap.add_argument("--save-every", type=int, default=None,
+                    help="intra-prune ADMM checkpoint cadence in "
+                         "iterations (default: prune_iters/4)")
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
@@ -241,6 +365,9 @@ def main(argv=None) -> int:
                 run_mia=not args.no_mia, tune=not args.no_tune,
                 bench_path=args.bench_path,
                 stage_retries=args.stage_retries,
+                resume=args.resume,
+                restart_stage=args.restart_stage,
+                save_every=args.save_every,
             ))
         except Exception as e:
             if args.arch != "all":

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 import time
 
 import jax
@@ -89,6 +90,22 @@ def main():
     ap.add_argument("--tile-block", type=int, default=128,
                     help="tile_pattern block_p; must divide every GEMM "
                          "output dim (reduced configs want 32)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the full ADMM run state every N "
+                         "iterations (0 = off); a killed run resumed "
+                         "with --resume is bit-identical to an "
+                         "uninterrupted one")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest run-state checkpoint "
+                         "under --ckpt-dir (fresh start if none/stale)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="run-state checkpoint directory "
+                         "(default <out>/prune_ckpt)")
+    ap.add_argument("--chaos-kill-at", type=int, default=None,
+                    help="TEST SEAM: SIGKILL this process once ADMM "
+                         "iteration N has committed — the deterministic "
+                         "mid-run death the CI kill-and-resume smoke "
+                         "drives")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -108,9 +125,19 @@ def main():
         layerwise=args.layerwise,
     )
     adapter = LMAdapter(model, seq_len=args.seq)
+    ckpt_dir = None
+    if args.save_every > 0 or args.resume:
+        ckpt_dir = args.ckpt_dir or os.path.join(args.out, "prune_ckpt")
+    callback = None
+    if args.chaos_kill_at is not None:
+        from repro.testing.chaos import kill_at_iteration
+
+        callback = kill_at_iteration(args.chaos_kill_at, hard=True)
     t0 = time.time()
     result = PrivacyPreservingPruner(adapter, config).run(
-        jax.random.PRNGKey(1), params)
+        jax.random.PRNGKey(1), params,
+        checkpoint_dir=ckpt_dir, save_every=args.save_every,
+        resume=args.resume, callback=callback)
     log.info("pruned %.2fx (sparsity %.1f%%) in %.1fs — client data never "
              "touched", compression_rate(result.masks),
              100 * sparsity(result.masks), time.time() - t0)

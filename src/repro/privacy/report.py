@@ -138,8 +138,8 @@ class BenchOps:
     nonmember_steps: Sequence[int]
     train: Callable[[Sequence[int], int], Any]         # (window, seed)
     retrain: Callable[[Any, Any], Any]                 # (params, masks)
-    prune_real: Callable[[Any], PruneResult]
-    prune_synthetic: Callable[[Any], PruneResult]
+    prune_real: Callable[..., PruneResult]         # (teacher, **resume kw)
+    prune_synthetic: Callable[..., PruneResult]    # (teacher, **resume kw)
     features: Callable[[Any, Sequence[int]], np.ndarray]
     mean_loss: Callable[[Any, Sequence[int]], float]
 
@@ -155,6 +155,14 @@ def _cycle(batch_at: Callable[[int], Any], window: Sequence[int]):
     while True:
         yield batch_at(window[i % len(window)])
         i += 1
+
+
+def _window_batch_fn(batch_at: Callable[[int], Any],
+                     window: Sequence[int]) -> Callable[[int], Any]:
+    """Step-indexed replay of the finite member window — the callable
+    form ``admm_task_prune`` needs for checkpoint/resume (an iterator
+    cannot be replayed bit-exactly across a process restart)."""
+    return lambda it: batch_at(window[it % len(window)])
 
 
 # -- CNN family --------------------------------------------------------------
@@ -228,11 +236,12 @@ def _make_cnn_ops(arch: str, cfg: ReportConfig) -> BenchOps:
                          for j in range(cfg.member_batches)],
         train=train,
         retrain=retrain_fn,
-        prune_real=lambda teacher: admm_task_prune(
+        prune_real=lambda teacher, **kw: admm_task_prune(
             jax.random.PRNGKey(cfg.seed + 1), teacher, model.apply,
-            _cycle(pipe.batch_at, member), prune_cfg),
-        prune_synthetic=lambda teacher: PrivacyPreservingPruner(
-            model, prune_cfg).run(jax.random.PRNGKey(cfg.seed + 1), teacher),
+            _window_batch_fn(pipe.batch_at, member), prune_cfg, **kw),
+        prune_synthetic=lambda teacher, **kw: PrivacyPreservingPruner(
+            model, prune_cfg).run(jax.random.PRNGKey(cfg.seed + 1), teacher,
+                                  **kw),
         features=features,
         mean_loss=mean_loss,
     )
@@ -285,9 +294,12 @@ def _make_lm_ops(arch: str, cfg: ReportConfig) -> BenchOps:
     def retrain_fn(params, masks):
         return _loop(params, masks, member, cfg.retrain_steps)
 
-    def _tuple_iter(window: Sequence[int]):
-        for b in _cycle(pipe.batch_at, window):
-            yield b["inputs"], b["labels"]
+    def _tuple_batch_fn(window: Sequence[int]) -> Callable[[int], Any]:
+        def fn(it: int):
+            b = pipe.batch_at(window[it % len(window)])
+            return b["inputs"], b["labels"]
+
+        return fn
 
     apply_jit = jax.jit(adapter.apply)
 
@@ -316,12 +328,12 @@ def _make_lm_ops(arch: str, cfg: ReportConfig) -> BenchOps:
                          for j in range(cfg.member_batches)],
         train=train,
         retrain=retrain_fn,
-        prune_real=lambda teacher: admm_task_prune(
+        prune_real=lambda teacher, **kw: admm_task_prune(
             jax.random.PRNGKey(cfg.seed + 1), teacher, adapter.apply,
-            _tuple_iter(member), prune_cfg),
-        prune_synthetic=lambda teacher: PrivacyPreservingPruner(
+            _tuple_batch_fn(member), prune_cfg, **kw),
+        prune_synthetic=lambda teacher, **kw: PrivacyPreservingPruner(
             adapter, prune_cfg).run(jax.random.PRNGKey(cfg.seed + 1),
-                                    teacher),
+                                    teacher, **kw),
         features=features,
         mean_loss=mean_loss,
     )

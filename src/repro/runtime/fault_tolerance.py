@@ -173,6 +173,34 @@ class StagedRun:
         except (OSError, ValueError, KeyError, TypeError):
             return []
 
+    @staticmethod
+    def invalidate_stage(progress_path: str, name: str) -> List[str]:
+        """Drop ``name`` AND every later record from the ledger.
+
+        The force-rerun seam: a completed-but-wrong stage (bad teacher
+        checkpoint, stale prune config) would otherwise be skipped by
+        resume forever. Later stages fall with it because they consumed
+        its output. Atomic rewrite, same as ``_write_progress``; returns
+        the stage names still marked ok (missing/corrupt ledger → []).
+        """
+        try:
+            with open(progress_path) as f:
+                doc = json.load(f)
+            stages = list(doc.get("stages", []))
+        except (OSError, ValueError, TypeError):
+            return []
+        keep = []
+        for rec in stages:
+            if rec.get("name") == name:
+                break
+            keep.append(rec)
+        doc["stages"] = keep
+        tmp = progress_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, progress_path)
+        return [r["name"] for r in keep if r.get("status") == "ok"]
+
     def _write_progress(self) -> None:
         if self.progress_path is None:
             return
@@ -194,6 +222,11 @@ class StagedRun:
             if sname in skip_set:
                 log.info("[%s] stage %s: resumed from previous run, "
                          "skipping", self.name, sname)
+                # re-record in THIS run's ledger (attempts 0 = inherited)
+                # so the rewritten progress file still marks it complete
+                # and a third resume skips it again
+                self.records.append(StageRecord(sname, "ok", 0, 0.0))
+                self._write_progress()
                 continue
             attempts = 0
             while True:

@@ -2,26 +2,35 @@
 
 Test-support code lives under the package (not ``tests/``) because the
 chaos injectors are part of the reliability CONTRACT: the benchmark suite
-(``benchmarks/fault_injection.py``) and any downstream consumer hardening
-a deployment drive the same seams ``tests/test_chaos.py`` does.
+(``benchmarks/fault_injection.py``, ``benchmarks/prune_resilience.py``)
+and any downstream consumer hardening a deployment drive the same seams
+``tests/test_chaos.py`` does.
 """
 
 from repro.testing.chaos import (
+    ChaosKill,
     ScriptedClock,
     chunk_action_hook,
+    corrupt_admm_checkpoint,
     corrupt_buffer,
     corrupt_manifest,
     corrupt_packed_index,
+    kill_at_iteration,
     kv_poison_hook,
+    nan_grad_poison,
     nan_poison_leaf,
 )
 
 __all__ = [
+    "ChaosKill",
     "ScriptedClock",
     "chunk_action_hook",
+    "corrupt_admm_checkpoint",
     "corrupt_buffer",
     "corrupt_manifest",
     "corrupt_packed_index",
+    "kill_at_iteration",
     "kv_poison_hook",
+    "nan_grad_poison",
     "nan_poison_leaf",
 ]

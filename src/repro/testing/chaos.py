@@ -23,6 +23,14 @@ they drive are the ones a real deployment exposes:
              deadline expiry and straggler detection without wall-clock
              flakiness; ``chunk_action_hook`` — host actions (e.g.
              ``request.cancel()``) at exact chunk indices.
+  in pruning ``kill_at_iteration`` — process death at an exact ADMM
+             iteration (soft ``ChaosKill`` for in-process tests, real
+             SIGKILL for the CI smoke); ``corrupt_admm_checkpoint`` —
+             bit-flip the latest committed prune-state checkpoint
+             (resume must fall back or raise ``ArtifactError``);
+             ``nan_grad_poison`` — one-shot NaN into the iterates before
+             an exact iteration (the health monitor must surface it as
+             ``PruneDivergence`` and recover).
 """
 
 from __future__ import annotations
@@ -220,6 +228,78 @@ def kv_poison_hook(slot: int, at_chunk: int = 0
             "k": cache["k"].at[:, slot].set(bad),
             "v": cache["v"].at[:, slot].set(bad),
         }
+
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# in pruning
+
+
+class ChaosKill(RuntimeError):
+    """Injected process death for in-process tests. Deliberately NOT a
+    ``PruneDivergence``: the recovery path must not catch it — it models
+    SIGKILL, which nothing catches. The resumable driver's contract is
+    that a run killed here resumes bit-exactly from its last committed
+    checkpoint."""
+
+
+def kill_at_iteration(at_iteration: int, *, hard: bool = False
+                      ) -> Callable[[int, Dict[str, float]], None]:
+    """A pruner ``callback`` that dies once iteration ``at_iteration``
+    has COMMITTED (the driver checkpoints before invoking callbacks, so
+    the kill timing is the worst honest case: state is durable, process
+    is gone). ``hard=True`` sends a real ``SIGKILL`` — the CI
+    kill-and-resume smoke; default raises ``ChaosKill`` so in-process
+    tests keep their stack."""
+
+    def cb(it: int, metrics: Dict[str, float]) -> None:
+        if it == at_iteration:
+            if hard:
+                import signal
+
+                os.kill(os.getpid(), signal.SIGKILL)
+            raise ChaosKill(f"injected kill at prune iteration {it}")
+
+    return cb
+
+
+def corrupt_admm_checkpoint(ckpt_root: str, *, seed: int,
+                            step: Optional[int] = None) -> Dict[str, Any]:
+    """Flip one bit of one buffer in the LATEST (or given) committed
+    prune-state checkpoint under ``ckpt_root``. The CRC32 manifest layer
+    guarantees the resume path sees ``ArtifactError`` for that step and
+    falls back to an older checkpoint (or raises typed if none is left).
+    Returns ``{"step", "file", "offset", "bit"}``."""
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(ckpt_root)
+    steps = mgr.steps()
+    if not steps:
+        raise ValueError(f"no committed checkpoints under {ckpt_root}")
+    target = steps[-1] if step is None else step
+    info = corrupt_buffer(mgr._dir(target), seed=seed)
+    return {"step": target, **info}
+
+
+def nan_grad_poison(at_iteration: int, *, seed: int = 0,
+                    path_contains: Optional[str] = None
+                    ) -> Callable[[int, Any, Any], Any]:
+    """A pruner ``fault_hook``: poison ONE element of one params leaf
+    right before iteration ``at_iteration`` runs, so the primal gradient
+    step propagates NaN into the iterates and the health monitor must
+    surface ``PruneDivergence``. One-shot — it fires the FIRST time the
+    iteration index is reached, so a rolled-back retry proceeds clean
+    (the recovery-success scenario); pin ``HealthPolicy(max_recoveries=0)``
+    to exercise the typed-failure path instead."""
+    state = {"fired": False}
+
+    def hook(it: int, params: Any, av: Any):
+        if state["fired"] or it != at_iteration:
+            return None
+        state["fired"] = True
+        return nan_poison_leaf(params, seed=seed,
+                               path_contains=path_contains), av
 
     return hook
 

@@ -1,0 +1,512 @@
+"""Resumable, self-healing ADMM pruning (core/prune_state + chaos seams).
+
+The contract under test: a prune run killed at any iteration and resumed
+from its checkpoint is BIT-IDENTICAL to an uninterrupted one; divergence
+is detected, recovered within bounds, and escapes typed; corrupt or
+stale checkpoints are never silently resumed.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HealthPolicy,
+    PruneConfig,
+    PruneDivergence,
+    PrivacyPreservingPruner,
+    adaptive_rho,
+    admm_task_prune,
+    cross_entropy,
+)
+from repro.core.admm import dual_residual
+from repro.core.prune_state import (
+    TRACE_FILE,
+    PruneCheckpointer,
+    check_health,
+)
+from repro.core.pruner import rho_schedule
+from repro.core.synthetic import synthetic_images
+from repro.testing import (
+    ChaosKill,
+    corrupt_admm_checkpoint,
+    kill_at_iteration,
+    nan_grad_poison,
+)
+
+
+class MLPAdapter:
+    """Minimal SequentialAdapter for a 2-layer MLP (same as test_admm)."""
+
+    num_layers = 2
+
+    def synthetic_batch(self, key, bs):
+        return synthetic_images(key, bs, (4, 4, 1)).reshape(bs, -1)
+
+    def embed(self, params, batch):
+        return batch
+
+    def layer_params(self, params, n):
+        return params["layers"][n]
+
+    def with_layer_params(self, params, n, lp):
+        layers = list(params["layers"])
+        layers[n] = lp
+        return {**params, "layers": layers}
+
+    def apply_layer(self, n, lp, x):
+        y = x @ lp["w"].T + lp["bias"]
+        return jax.nn.relu(y) if n == 0 else y
+
+    def apply(self, params, batch):
+        x = batch
+        for n in range(self.num_layers):
+            x = self.apply_layer(n, self.layer_params(params, n), x)
+        return x
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {
+        "layers": [
+            {"w": jax.random.normal(k1, (32, 16)) * 0.3,
+             "bias": jnp.zeros(32)},
+            {"w": jax.random.normal(k2, (10, 32)) * 0.3,
+             "bias": jnp.zeros(10)},
+        ]
+    }
+
+
+def _cfg(**kw):
+    base = dict(scheme="irregular", alpha=1 / 8, iterations=8, lr=1e-2,
+                rho_init=1e-3, rho_every_iters=3, batch_size=8)
+    base.update(kw)
+    return PruneConfig(**base)
+
+
+def _trees_equal(a, b):
+    eq = jax.tree.map(
+        lambda x, y: (x is None and y is None)
+        or bool((jnp.asarray(x) == jnp.asarray(y)).all()),
+        a, b, is_leaf=lambda x: x is None)
+    return all(jax.tree.leaves(eq))
+
+
+def _events(ckpt_dir):
+    with open(os.path.join(ckpt_dir, TRACE_FILE)) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+# ---------------------------------------------------------------------------
+# rho schedule + adaptive rho
+# ---------------------------------------------------------------------------
+
+
+class TestRhoSchedule:
+    def test_mult_one_is_constant(self):
+        cfg = _cfg(rho_mult=1.0)
+        for it in (0, 5, 100, 10**9):
+            assert rho_schedule(cfg, it) == pytest.approx(cfg.rho_init)
+
+    def test_cap_crossing_exactly_at_boundary(self):
+        # rho_init * mult^2 == rho_max exactly at the second step
+        cfg = _cfg(rho_init=1e-3, rho_mult=10.0, rho_max=1e-1,
+                   rho_every_iters=10)
+        assert rho_schedule(cfg, 19) == pytest.approx(1e-2)
+        assert rho_schedule(cfg, 20) == pytest.approx(1e-1)
+        assert rho_schedule(cfg, 30) == pytest.approx(1e-1)
+        assert rho_schedule(cfg, 10**12) == pytest.approx(1e-1)
+
+    def test_every_iters_zero_guard(self):
+        cfg = _cfg(rho_every_iters=0, rho_init=1e-3, rho_mult=10.0,
+                   rho_max=1e-1)
+        # guard clamps the divisor to 1: one multiplicative step per iter
+        assert rho_schedule(cfg, 0) == pytest.approx(1e-3)
+        assert rho_schedule(cfg, 1) == pytest.approx(1e-2)
+        assert rho_schedule(cfg, 5) == pytest.approx(1e-1)
+
+
+class TestAdaptiveRho:
+    def test_balancing_directions(self):
+        assert adaptive_rho(1.0, primal=100.0, dual=1.0) == 2.0
+        assert adaptive_rho(1.0, primal=1.0, dual=100.0) == 0.5
+        assert adaptive_rho(1.0, primal=1.0, dual=1.0) == 1.0
+
+    def test_clamped_to_bounds(self):
+        assert adaptive_rho(1.0, 100.0, 1.0, rho_max=1.5) == 1.5
+        assert adaptive_rho(1.0, 1.0, 100.0, rho_min=0.8) == 0.8
+
+    def test_moves_at_most_tau(self):
+        for primal, dual in ((1e9, 1.0), (1.0, 1e9), (3.0, 2.0)):
+            out = adaptive_rho(1.0, primal, dual, tau=2.0)
+            assert 0.5 <= out <= 2.0
+
+    def test_monotone_in_rho(self):
+        lo = adaptive_rho(1.0, 100.0, 1.0)
+        hi = adaptive_rho(2.0, 100.0, 1.0)
+        assert hi > lo
+
+    def test_invalid_knobs_raise(self):
+        with pytest.raises(ValueError):
+            adaptive_rho(1.0, 1.0, 1.0, tau=0.5)
+        with pytest.raises(ValueError):
+            adaptive_rho(1.0, 1.0, 1.0, mu=0.0)
+
+
+class TestDualResidual:
+    def test_matches_boyd_definition(self):
+        z_old = {"w": jnp.ones((4, 4))}
+        z_new = {"w": jnp.ones((4, 4)) * 2.0}
+        rho = 0.25
+        # rho * ||z_new - z_old||_F / ||z_new||_F = 0.25 * 4 / 8
+        assert float(dual_residual(z_new, z_old, rho)) == pytest.approx(
+            0.25 * 4.0 / 8.0)
+
+    def test_zero_tree_is_finite(self):
+        z = {"w": jnp.zeros((4, 4))}
+        assert np.isfinite(float(dual_residual(z, z, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# health monitor
+# ---------------------------------------------------------------------------
+
+
+class TestCheckHealth:
+    POLICY = HealthPolicy(explode_factor=50.0, warmup_iters=3)
+
+    def test_non_finite_raises(self):
+        for metric in ("loss", "residual", "dual_residual"):
+            with pytest.raises(PruneDivergence) as e:
+                check_health(4, {metric: float("nan")}, {"loss": []},
+                             self.POLICY)
+            assert e.value.metric == metric
+
+    def test_residual_cap(self):
+        with pytest.raises(PruneDivergence):
+            check_health(4, {"residual": 11.0}, {"loss": []}, self.POLICY)
+
+    def test_explosion_vs_trailing_window(self):
+        hist = {"loss": [1.0, 1.0, 1.0]}
+        check_health(3, {"loss": 49.0}, hist, self.POLICY)
+        with pytest.raises(PruneDivergence):
+            check_health(3, {"loss": 51.0}, hist, self.POLICY)
+
+    def test_gradual_growth_passes(self):
+        # rho-schedule driven growth: large vs warmup, small step-to-step
+        hist = {"loss": [1.0 * 3 ** i for i in range(8)]}
+        check_health(8, {"loss": 3.0 ** 8}, hist, self.POLICY)
+
+    def test_silent_during_warmup(self):
+        check_health(0, {"loss": 1e12}, {"loss": []}, self.POLICY)
+        check_health(1, {"loss": 1e12}, {"loss": [1.0]}, self.POLICY)
+
+
+# ---------------------------------------------------------------------------
+# kill + resume bit-identity
+# ---------------------------------------------------------------------------
+
+
+class TestKillResume:
+    @pytest.mark.parametrize("layerwise", [True, False])
+    def test_pruner_bit_identical(self, teacher, tmp_path, layerwise):
+        cfg = _cfg(layerwise=layerwise)
+        key = jax.random.PRNGKey(1)
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        ref = pruner.run(key, teacher)
+
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(ChaosKill):
+            pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                       callback=kill_at_iteration(4))
+        resumed = pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                             resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        assert _trees_equal(resumed.masks, ref.masks)
+        assert resumed.history == ref.history
+
+    def test_resume_without_checkpoints_starts_fresh(self, teacher,
+                                                     tmp_path):
+        cfg = _cfg()
+        key = jax.random.PRNGKey(1)
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        ref = pruner.run(key, teacher)
+        resumed = pruner.run(key, teacher,
+                             checkpoint_dir=str(tmp_path / "empty"),
+                             save_every=2, resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+
+    def test_stale_fingerprint_ignored(self, teacher, tmp_path):
+        cfg = _cfg()
+        key = jax.random.PRNGKey(1)
+        d = str(tmp_path / "ckpt")
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        pruner.run(key, teacher, checkpoint_dir=d, save_every=2)
+
+        other = jax.tree.map(lambda x: x + 1.0, teacher)
+        ref = pruner.run(key, other)
+        resumed = pruner.run(key, other, checkpoint_dir=d, save_every=2,
+                             resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        assert any(e.get("event") == "stale_checkpoint"
+                   for e in _events(d))
+
+    def test_task_prune_bit_identical(self, teacher, tmp_path):
+        cfg = _cfg()
+        adapter = MLPAdapter()
+
+        def batch_at(it):
+            k = jax.random.PRNGKey(1000 + it)
+            x = adapter.synthetic_batch(k, cfg.batch_size)
+            y = jax.random.randint(k, (cfg.batch_size,), 0, 10)
+            return x, y
+
+        key = jax.random.PRNGKey(2)
+        ref = admm_task_prune(key, teacher, adapter.apply, batch_at, cfg)
+
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(ChaosKill):
+            admm_task_prune(key, teacher, adapter.apply, batch_at, cfg,
+                            checkpoint_dir=d, save_every=2,
+                            callback=kill_at_iteration(4))
+        resumed = admm_task_prune(key, teacher, adapter.apply, batch_at,
+                                  cfg, checkpoint_dir=d, save_every=2,
+                                  resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        assert _trees_equal(resumed.masks, ref.masks)
+        assert resumed.history == ref.history
+
+    def test_task_prune_iterator_rejects_checkpointing(self, teacher,
+                                                       tmp_path):
+        cfg = _cfg()
+        adapter = MLPAdapter()
+
+        def gen():
+            it = 0
+            while True:
+                k = jax.random.PRNGKey(it)
+                yield (adapter.synthetic_batch(k, cfg.batch_size),
+                       jax.random.randint(k, (cfg.batch_size,), 0, 10))
+                it += 1
+
+        with pytest.raises(ValueError, match="step-indexed"):
+            admm_task_prune(jax.random.PRNGKey(2), teacher, adapter.apply,
+                            gen(), cfg,
+                            checkpoint_dir=str(tmp_path / "x"),
+                            save_every=2)
+
+
+class TestKillResumeRealModels:
+    def test_cnn_layerwise(self, tmp_path):
+        from repro.models.cnn import vgg16
+
+        model = vgg16(num_classes=4, width_mult=0.125, image_hwc=(8, 8, 3))
+        teacher = model.init(jax.random.PRNGKey(0))
+        cfg = _cfg(iterations=6, batch_size=4, layerwise=True)
+        key = jax.random.PRNGKey(1)
+        pruner = PrivacyPreservingPruner(model, cfg)
+        ref = pruner.run(key, teacher)
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(ChaosKill):
+            pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                       callback=kill_at_iteration(3))
+        resumed = pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                             resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        assert _trees_equal(resumed.masks, ref.masks)
+
+    def test_lm_adapter_layerwise(self, tmp_path):
+        from repro.configs.base import ModelConfig
+        from repro.core import LMAdapter
+        from repro.models import build_model
+
+        mc = ModelConfig(name="tiny", family="dense", num_layers=2,
+                         d_model=32, num_heads=2, num_kv_heads=2,
+                         head_dim=16, d_ff=64, vocab_size=128,
+                         param_dtype="float32")
+        model = build_model(mc)
+        teacher = model.init(jax.random.PRNGKey(0))
+        cfg = _cfg(iterations=6, batch_size=2, layerwise=True)
+        key = jax.random.PRNGKey(1)
+        pruner = PrivacyPreservingPruner(LMAdapter(model, seq_len=8), cfg)
+        ref = pruner.run(key, teacher)
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(ChaosKill):
+            pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                       callback=kill_at_iteration(3))
+        resumed = pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                             resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        assert _trees_equal(resumed.masks, ref.masks)
+
+
+# ---------------------------------------------------------------------------
+# divergence: typed failure + bounded recovery
+# ---------------------------------------------------------------------------
+
+
+class TestDivergence:
+    def test_typed_terminal_without_recovery(self, teacher):
+        cfg = _cfg()
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        with pytest.raises(PruneDivergence) as e:
+            pruner.run(jax.random.PRNGKey(1), teacher,
+                       health=HealthPolicy(max_recoveries=0),
+                       fault_hook=nan_grad_poison(3, seed=0))
+        assert e.value.iteration == 3
+        assert e.value.recoveries == 0
+
+    def test_recovery_rolls_back_and_completes(self, teacher, tmp_path):
+        cfg = _cfg()
+        d = str(tmp_path / "ckpt")
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        result = pruner.run(jax.random.PRNGKey(1), teacher,
+                            checkpoint_dir=d, save_every=2,
+                            fault_hook=nan_grad_poison(4, seed=0))
+        assert len(result.history["loss"]) == cfg.iterations
+        assert all(np.isfinite(v) for vs in result.history.values()
+                   for v in vs)
+        events = _events(d)
+        assert any(e.get("event") == "rollback" for e in events)
+
+    def test_exhausted_recoveries_escape_typed(self, teacher, tmp_path):
+        # a PERSISTENT fault (fires every retry) must exhaust the budget
+        cfg = _cfg()
+        poison = nan_grad_poison(4, seed=0)
+
+        def persistent(it, params, av):
+            if it == 4:
+                from repro.testing.chaos import nan_poison_leaf
+
+                return nan_poison_leaf(params, seed=0), av
+            return None
+
+        d = str(tmp_path / "ckpt")
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        with pytest.raises(PruneDivergence) as e:
+            pruner.run(jax.random.PRNGKey(1), teacher, checkpoint_dir=d,
+                       save_every=2,
+                       health=HealthPolicy(max_recoveries=2),
+                       fault_hook=persistent)
+        assert e.value.recoveries == 2
+        assert any(ev.get("event") == "gave_up" for ev in _events(d))
+        del poison
+
+
+# ---------------------------------------------------------------------------
+# corrupt checkpoints
+# ---------------------------------------------------------------------------
+
+
+class TestCorruptCheckpoint:
+    def _killed_run(self, teacher, d):
+        cfg = _cfg()
+        pruner = PrivacyPreservingPruner(MLPAdapter(), cfg)
+        key = jax.random.PRNGKey(1)
+        ref = pruner.run(key, teacher)
+        with pytest.raises(ChaosKill):
+            pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                       callback=kill_at_iteration(5))
+        return pruner, key, ref
+
+    def test_falls_back_to_older_step(self, teacher, tmp_path):
+        d = str(tmp_path / "ckpt")
+        pruner, key, ref = self._killed_run(teacher, d)
+        steps = PruneCheckpointer(d).steps()
+        assert len(steps) >= 2
+        info = corrupt_admm_checkpoint(d, seed=5)
+        assert info["step"] == steps[-1]
+        resumed = pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                             resume=True)
+        assert _trees_equal(resumed.params, ref.params)
+        events = _events(d)
+        assert any(e.get("event") == "corrupt_checkpoint"
+                   and e.get("step") == info["step"] for e in events)
+        resumed_from = next(e["iteration"] for e in events
+                            if e.get("event") == "resume")
+        assert resumed_from < info["step"]
+
+    def test_all_corrupt_raises_artifact_error(self, teacher, tmp_path):
+        from repro.checkpoint import ArtifactError
+
+        d = str(tmp_path / "ckpt")
+        pruner, key, _ = self._killed_run(teacher, d)
+        for step in PruneCheckpointer(d).steps():
+            corrupt_admm_checkpoint(d, seed=step, step=step)
+        with pytest.raises(ArtifactError):
+            pruner.run(key, teacher, checkpoint_dir=d, save_every=2,
+                       resume=True)
+
+
+# ---------------------------------------------------------------------------
+# satellites: history in the artifact, ledger invalidation
+# ---------------------------------------------------------------------------
+
+
+class TestHistoryPersistence:
+    def test_to_artifact_carries_history(self, teacher):
+        cfg = _cfg()
+        result = PrivacyPreservingPruner(MLPAdapter(), cfg).run(
+            jax.random.PRNGKey(1), teacher)
+        art = result.to_artifact(arch="mlp")
+        hist = art.meta.get("history")
+        assert hist is not None
+        assert len(hist["loss"]) == cfg.iterations
+        assert set(hist) >= {"loss", "residual", "dual_residual", "rho"}
+
+    def test_history_has_dual_residual_and_rho(self, teacher):
+        cfg = _cfg()
+        result = PrivacyPreservingPruner(MLPAdapter(), cfg).run(
+            jax.random.PRNGKey(1), teacher)
+        n = cfg.iterations
+        assert all(len(result.history[k]) == n
+                   for k in ("loss", "residual", "dual_residual", "rho"))
+        assert result.history["rho"][0] == pytest.approx(cfg.rho_init)
+
+
+class TestLedgerInvalidation:
+    def _write_ledger(self, path, names):
+        from repro.runtime.fault_tolerance import StagedRun, StageRecord
+        import dataclasses as dc
+
+        doc = {"name": "t", "stages": [
+            dc.asdict(StageRecord(n, "ok", 1, 0.1)) for n in names]}
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return StagedRun
+
+    def test_invalidate_drops_tail(self, tmp_path):
+        p = str(tmp_path / "progress.json")
+        StagedRun = self._write_ledger(
+            p, ["teacher", "prune", "retrain", "pack"])
+        kept = StagedRun.invalidate_stage(p, "prune")
+        assert kept == ["teacher"]
+        doc = json.load(open(p))
+        assert [r["name"] for r in doc["stages"]] == ["teacher"]
+
+    def test_invalidate_missing_ledger_is_noop(self, tmp_path):
+        from repro.runtime.fault_tolerance import StagedRun
+
+        assert StagedRun.invalidate_stage(
+            str(tmp_path / "nope.json"), "prune") == []
+
+    def test_skipped_stages_rerecorded(self, tmp_path):
+        from repro.runtime.fault_tolerance import StagedRun
+
+        p = str(tmp_path / "progress.json")
+        runner = StagedRun("t", progress_path=p)
+        runner.run({}, [("a", lambda c: c), ("b", lambda c: c)])
+        done = StagedRun.completed_stages(p)
+        assert done == ["a", "b"]
+
+        # a resuming run skips both; the REWRITTEN ledger must still
+        # mark them ok so a third resume skips them again
+        runner2 = StagedRun("t", progress_path=p)
+        runner2.run({}, [("a", lambda c: c), ("b", lambda c: c)],
+                    skip=done)
+        assert StagedRun.completed_stages(p) == ["a", "b"]
