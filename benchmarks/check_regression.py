@@ -54,6 +54,14 @@ be caught, rolled back and recovered (or escape typed with recovery
 disabled); a corrupt newest checkpoint must fall back to the previous
 step and still finish bit-identical.
 
+``BENCH_telemetry.json`` (``benchmarks/telemetry_overhead.py``) — the
+observability contract: full lifecycle recording (histograms + JSONL
+spans) costs at most ``REPRO_MAX_TELEMETRY_OVERHEAD`` of decode
+throughput with tokens bit-identical to telemetry-off, every request
+ends in exactly one ``retire`` trace event matching its typed status,
+and TTFT / queue-wait / occupancy recomputed offline from the trace
+equal the registry's histograms.
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
     PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
@@ -376,6 +384,40 @@ GATES: Tuple[GateSpec, ...] = (
             f"NaN recovered x{bk[('recovery',)].get('rollbacks')}, "
             f"corrupt ckpt fell back to step "
             f"{bk[('corrupt',)].get('resumed_from_step')}"),
+    ),
+    GateSpec(
+        name="telemetry",
+        path_flag="--telemetry-path",
+        key_fields=("mode",),
+        required=(("off",), ("on",)),
+        checks=(
+            Check(metric="tokens_identical", op="truthy", row=("on",),
+                  why="telemetry observes at existing host sync points — "
+                      "a token delta means it leaked into the decode "
+                      "math"),
+            Check(metric="spans_complete", op="truthy", row=("on",),
+                  why="every submitted request must emit exactly one "
+                      "terminal retire event whose status matches its "
+                      "Result — a gap means a lifecycle path records "
+                      "nothing and an incident there is invisible"),
+            Check(metric="latency_recomputable", op="truthy", row=("on",),
+                  why="TTFT/queue-wait/occupancy recomputed offline from "
+                      "the trace must equal the registry's histograms — "
+                      "otherwise the trace and the metrics tell "
+                      "different stories about the same run"),
+            Check(metric="overhead_ratio", op="<=", row=("on",),
+                  default=0.02, env="REPRO_MAX_TELEMETRY_OVERHEAD",
+                  flag="--max-telemetry-overhead",
+                  why="full lifecycle recording must stay within a few "
+                      "percent of decode throughput or nobody leaves "
+                      "it on in production"),
+        ),
+        summary=lambda bk: (
+            f"overhead {bk[('on',)].get('overhead_ratio', 0) * 100:+.2f}% "
+            f"({bk[('on',)].get('tokens_per_s')} vs "
+            f"{bk[('off',)].get('tokens_per_s')} tok/s), "
+            f"{bk[('on',)].get('trace_events')} trace events, spans "
+            f"complete, latencies recomputable"),
     ),
 )
 

@@ -224,16 +224,53 @@ OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "experiments", "bench")
 
 
+def git_sha() -> str | None:
+    """Current commit (with ``-dirty`` suffix when the tree has local
+    changes); None outside a git checkout — stamped onto every emitted
+    row so the perf trajectory is reconstructible across PRs."""
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        if not sha:
+            return None
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+_GIT_SHA_CACHE: List[Any] = []
+
+
+def _stamp() -> Dict[str, Any]:
+    if not _GIT_SHA_CACHE:
+        _GIT_SHA_CACHE.append(git_sha())
+    return {"timestamp": round(time.time(), 3),
+            "git_sha": _GIT_SHA_CACHE[0]}
+
+
 def emit(table: str, rows: List[Row] | List[Dict[str, Any]]) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     recs = [r.as_dict() if isinstance(r, Row) else r for r in rows]
+    stamp = _stamp()
+    for r in recs:
+        for k, v in stamp.items():
+            r.setdefault(k, v)
     path = os.path.join(OUT_DIR, f"{table}.json")
     with open(path, "w") as f:
         json.dump(recs, f, indent=1)
     if not recs:
         return
     cols = list(recs[0].keys())
-    cols = [c for c in cols if c != "extra"]
+    cols = [c for c in cols if c not in ("extra", "timestamp", "git_sha")]
     print("\n== " + table + " " + "=" * max(0, 66 - len(table)))
     print(" | ".join(f"{c:>18s}" for c in cols))
     for r in recs:

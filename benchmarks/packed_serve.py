@@ -59,7 +59,7 @@ from repro.serve.engine import Request, ServeEngine
 from repro.serve.sampler import greedy_sample
 from repro.sparse import tree_packed_bytes
 from repro.sparse import tune as tune_mod
-from repro.sparse.registry import dispatch_stats, reset_dispatch_stats
+from repro.sparse.registry import dispatch_stats, dispatch_stats_scope
 
 from benchmarks import common
 
@@ -70,6 +70,15 @@ def _median_ms(samples) -> float:
 
 def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32,
                  profile: bool = False) -> List[Dict]:
+    # scoped dispatch counting: this bench's --profile attribution sees
+    # only its own dispatches, and whatever the module counter held
+    # before (another suite in the same process) is restored on exit
+    with dispatch_stats_scope():
+        return _bench_decode(batch, seq, steps, profile)
+
+
+def _bench_decode(batch: int, seq: int, steps: int,
+                  profile: bool) -> List[Dict]:
     cfg = ModelConfig(name="bench", family="dense", num_layers=2,
                       d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
                       d_ff=256, vocab_size=512, param_dtype="float32")
@@ -101,7 +110,6 @@ def bench_decode(batch: int = 8, seq: int = 32, steps: int = 32,
     def fresh(cache):
         return jax.tree.map(jnp.copy, cache) if donating else cache
 
-    reset_dispatch_stats()
     state = {}
     token_runs = {}
     for mode, packed in (("dense", False), ("packed", True)):

@@ -34,8 +34,9 @@ import time
 
 SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
 # quick mode runs the gated suites: serving + privacy MIA + reliability
+# + telemetry (observability overhead and span completeness)
 GATED_SUITES = SERVE_SUITES + ("privacy_mia", "fault_injection",
-                               "prune_resilience")
+                               "prune_resilience", "telemetry")
 
 
 def main() -> None:
@@ -43,7 +44,8 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: table1,table2,table4,table5,fig3,"
                          "packed_serve,continuous_serve,speculative_serve,"
-                         "privacy_mia,fault_injection,prune_resilience")
+                         "privacy_mia,fault_injection,prune_resilience,"
+                         "telemetry")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: REPRO_BENCH_FAST=1 and only the "
                          "suites check_regression.py gates on")
@@ -67,6 +69,7 @@ def main() -> None:
         table2_pattern,
         table4_formulations,
         table5_greedy,
+        telemetry_overhead,
     )
 
     suites = {
@@ -81,19 +84,28 @@ def main() -> None:
         "privacy_mia": privacy_mia.run,
         "fault_injection": fault_injection.run,
         "prune_resilience": prune_resilience.run,
+        "telemetry": telemetry_overhead.run,
     }
 
+    # provenance stamp shared by every suite this invocation runs: the
+    # same wall-clock/git-SHA pair common.emit stamps onto BENCH rows,
+    # plus per-suite duration — summary.json alone reconstructs when and
+    # on what commit each point of the perf trajectory was measured
+    sha = common.git_sha()
     summary = {}
     for name, fn in suites.items():
         if want is not None and name not in want:
             continue
         print(f"\n### {name} " + "#" * (70 - len(name)))
+        wall = time.time()
         t0 = time.perf_counter()
         rows = fn()
         dt = time.perf_counter() - t0
         summary[name] = {
             "rows": len(rows),
             "seconds": round(dt, 1),
+            "timestamp": round(wall, 3),
+            "git_sha": sha,
         }
         print(f"### {name} done: {len(rows)} rows in {dt:.1f}s")
 

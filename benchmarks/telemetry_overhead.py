@@ -1,0 +1,218 @@
+"""BENCH_telemetry — observability overhead + trace completeness.
+
+The telemetry layer's contract has two halves, and this bench gates
+both:
+
+  * OVERHEAD — recording the full request lifecycle (histograms +
+    counters + JSONL spans) must cost ≤ ``REPRO_MAX_TELEMETRY_OVERHEAD``
+    (default 2%) of decode throughput. Telemetry-on and telemetry-off
+    ``ContinuousEngine`` runs are timed INTERLEAVED over the same
+    workload (arrival-free, so the measurement is the decode loop, not
+    sleeps) and the median-seconds ratio is reported. Tokens must be
+    bit-identical on vs off — telemetry observes at existing host sync
+    points and never touches token math.
+
+  * COMPLETENESS — one seeded Poisson-arrival run with tracing on must
+    yield a trace from which the registry's numbers are recomputable
+    offline: every submitted request has exactly one terminal ``retire``
+    event whose ``status`` matches its ``Result.status`` (plus an
+    ``enqueue``, and ``admit``/``first_token`` when served), TTFT and
+    queue-wait recomputed from the events sum EXACTLY to the registry
+    histograms (same engine clock, same floats through JSON), and
+    per-chunk ``decode_chunk`` spans reproduce the run's occupancy.
+
+The completeness trace is left at experiments/bench/trace_telemetry.jsonl
+(CI uploads it as a workflow artifact next to the BENCH JSONs).
+
+    PYTHONPATH=src:. python benchmarks/telemetry_overhead.py
+    (REPRO_BENCH_FAST=1 for the CI smoke variant)
+
+Writes experiments/bench/BENCH_telemetry.json via common.emit.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.runtime.telemetry import MetricsRegistry, Telemetry, read_trace
+from repro.serve import ContinuousEngine
+
+from benchmarks import common
+from benchmarks.continuous_serve import (
+    BATCH,
+    CHUNK_STEPS,
+    MAX_SEQ,
+    PROMPT_LENS,
+    build_workload,
+)
+
+TRACE_PATH = os.path.join(common.OUT_DIR, "trace_telemetry.jsonl")
+
+
+def _build_engine(telemetry) -> ContinuousEngine:
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pcfg = PruneConfig(
+        scheme="tile_pattern", exclude=tuple(DEFAULT_EXCLUDE),
+        overrides={".*": {"tile_block_p": 128, "tile_group_q": 8,
+                          "tile_keep": 4},
+                   r".*/(wk|wv)": {"tile_block_p": 64}},
+    )
+    artifact = greedy_prune(params, pcfg).to_artifact(arch="bench").pack(
+        tune_for=(1, BATCH, BATCH * max(PROMPT_LENS)),
+        tune_iters=2 if common.fast_mode() else 5)
+    return ContinuousEngine(model, artifact, batch_size=BATCH,
+                            max_seq_len=MAX_SEQ, chunk_steps=CHUNK_STEPS,
+                            packed=True, telemetry=telemetry)
+
+
+def _check_completeness(engine: ContinuousEngine, reqs, arrivals,
+                        reg: MetricsRegistry) -> Dict:
+    """One traced Poisson run; recompute the registry from the trace."""
+    if os.path.exists(TRACE_PATH):
+        os.remove(TRACE_PATH)
+    tel = Telemetry(metrics=reg, trace_path=TRACE_PATH)
+    prev = engine.telemetry
+    engine.telemetry = tel
+    try:
+        results = engine.generate(reqs, arrivals=arrivals)
+    finally:
+        engine.telemetry = prev
+        tel.close()
+    stats = engine.stats
+
+    events = read_trace(TRACE_PATH)
+    by_name: Dict[str, List[dict]] = {}
+    for e in events:
+        by_name.setdefault(e.get("name", "?"), []).append(e)
+    retires = by_name.get("retire", [])
+    enq = {e["uid"] for e in by_name.get("enqueue", [])}
+    admits = {e["uid"] for e in by_name.get("admit", [])}
+    firsts = by_name.get("first_token", [])
+    chunks = by_name.get("decode_chunk", [])
+
+    want_status = {r.uid: res.status for r, res in zip(reqs, results)}
+    served = {u for u, s in want_status.items() if s != "shed"}
+    got_status = {e["uid"]: e["status"] for e in retires}
+    spans_complete = (
+        len(retires) == len(reqs)                       # one terminal each
+        and got_status == want_status                   # matching statuses
+        and served <= enq                               # queued before served
+        and served <= admits                            # admit span present
+        and {e["uid"] for e in firsts} == served        # first-token event
+        and len(chunks) == stats["chunks"]              # every micro-chunk
+        and all(e.get("schema") == 1 for e in events)
+    )
+
+    # offline latency recompute: trace floats survive JSON exactly, so
+    # the sums must match the histograms to rounding noise, not "roughly"
+    def _close(a: float, b: float) -> bool:
+        return abs(a - b) <= 1e-9 * max(1.0, abs(a), abs(b))
+
+    h_ttft = reg.histogram("serve.ttft_seconds", engine="continuous")
+    h_qwait = reg.histogram("serve.queue_wait_seconds", engine="continuous")
+    off_ttft = sum(e["ts"] - e["arrival"] for e in firsts)
+    off_qwait = sum(e["ts"] - e["arrival"] for e in by_name.get("admit", []))
+    busy = sum(e["busy"] for e in chunks)
+    total = sum(e["batch"] * e["steps"] for e in chunks)
+    latency_recomputable = (
+        h_ttft.count == len(firsts) and _close(off_ttft, h_ttft.sum)
+        and h_qwait.count == len(admits) and _close(off_qwait, h_qwait.sum)
+        and total > 0 and _close(busy / total, stats["occupancy"])
+    )
+    return {
+        "spans_complete": bool(spans_complete),
+        "latency_recomputable": bool(latency_recomputable),
+        "trace_events": len(events),
+        "retired": len(retires),
+        "decode_chunks": len(chunks),
+        "offline_ttft_mean_ms": round(
+            off_ttft / max(len(firsts), 1) * 1e3, 3),
+        "trace_path": os.path.relpath(TRACE_PATH, common.OUT_DIR),
+    }
+
+
+def bench(n_requests: int = 32) -> List[Dict]:
+    if common.fast_mode():
+        n_requests = 12
+    reqs, arrivals = build_workload(n_requests, seed=3)
+    zero = [0.0] * len(reqs)
+
+    eng_off = _build_engine(None)
+    # the timed telemetry engine carries the FULL cost: registry + span
+    # tracer writing real JSONL (to a scratch file, not the kept trace)
+    fd, scratch = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    tel_on = Telemetry(metrics=MetricsRegistry(), tracer=None,
+                       trace_path=scratch)
+    eng_on = _build_engine(tel_on)
+
+    # warm every compiled shape on both engines (untimed)
+    for eng in (eng_off, eng_on):
+        eng.generate(reqs, arrivals=zero)
+
+    iters = 3 if common.fast_mode() else 7
+    secs = {"off": [], "on": []}
+    toks = {}
+    for _ in range(iters):
+        for mode, eng in (("off", eng_off), ("on", eng_on)):
+            t0 = time.perf_counter()
+            out = eng.generate(reqs, arrivals=zero)
+            secs[mode].append(time.perf_counter() - t0)
+            toks[mode] = [r.tokens for r in out]
+    tel_on.close()
+    os.remove(scratch)
+
+    emitted = sum(len(t) for t in toks["off"])
+    med = {m: float(np.median(s)) for m, s in secs.items()}
+    overhead = med["on"] / med["off"] - 1.0
+    tokens_identical = toks["off"] == toks["on"]
+
+    # completeness: a fresh registry + the kept trace, Poisson arrivals
+    reg = MetricsRegistry()
+    comp = _check_completeness(eng_on, reqs, arrivals, reg)
+
+    rows = [
+        {"bench": "telemetry", "mode": "off",
+         "num_requests": len(reqs), "tokens_emitted": emitted,
+         "seconds": round(med["off"], 4),
+         "tokens_per_s": round(emitted / med["off"], 1)},
+        {"bench": "telemetry", "mode": "on",
+         "num_requests": len(reqs), "tokens_emitted": emitted,
+         "seconds": round(med["on"], 4),
+         "tokens_per_s": round(emitted / med["on"], 1),
+         "overhead_ratio": round(overhead, 4),
+         "tokens_identical": tokens_identical,
+         **comp},
+    ]
+    return rows
+
+
+def run() -> List[Dict]:
+    rows = bench()
+    on = rows[1]
+    print(f"  telemetry off: {rows[0]['tokens_per_s']:8.1f} tok/s; "
+          f"on: {on['tokens_per_s']:8.1f} tok/s "
+          f"(overhead {on['overhead_ratio']*100:+.2f}%), "
+          f"tokens identical {on['tokens_identical']}, "
+          f"spans complete {on['spans_complete']}, "
+          f"latency recomputable {on['latency_recomputable']} "
+          f"({on['trace_events']} trace events)")
+    common.emit("BENCH_telemetry", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -429,6 +429,9 @@ def run_admm_loop(
     (including an injected ``ChaosKill``) propagates immediately — crash
     semantics, resumable from the last committed checkpoint.
     """
+    from repro.runtime.telemetry import get_registry
+
+    reg = get_registry()
     policy = policy or HealthPolicy()
     anchor = state.snapshot()
     if checkpointer is not None:
@@ -456,11 +459,20 @@ def run_admm_loop(
             check_health(it, metrics, state.history, policy,
                          recoveries=state.recoveries)
         except PruneDivergence as e:
+            reg.counter("prune.recoveries_total").inc()
             state = _recover(state, e, policy, checkpointer, anchor,
                              rho, rho_bounds)
             continue
         state.params, state.av, state.key = params, av, key
         state.iteration = it + 1
+        # iteration health into the shared registry: the same numbers
+        # the trace.jsonl rows carry, scrapeable next to serve latency
+        reg.counter("prune.iterations_total").inc()
+        reg.gauge("prune.loss").set(float(metrics["loss"]))
+        reg.gauge("prune.residual").set(float(metrics["residual"]))
+        reg.gauge("prune.dual_residual").set(
+            float(metrics["dual_residual"]))
+        reg.gauge("prune.rho").set(float(metrics["rho"]))
         for k in HISTORY_KEYS:
             state.history.setdefault(k, []).append(metrics[k])
         if state.rho_override is not None:

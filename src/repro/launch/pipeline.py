@@ -355,31 +355,45 @@ def main(argv=None) -> int:
     cfg = ReportConfig.for_mode(args.quick, **overrides)
 
     from repro.runtime.fault_tolerance import StageError
+    from repro.runtime import telemetry_export
+    from repro.runtime.telemetry import registry_scope
 
     summaries = []
     for arch in archs:
-        try:
-            summaries.append(run_arch(
-                arch, cfg=cfg, out_dir=args.out,
-                teacher_ckpt=args.teacher_ckpt,
-                run_mia=not args.no_mia, tune=not args.no_tune,
-                bench_path=args.bench_path,
-                stage_retries=args.stage_retries,
-                resume=args.resume,
-                restart_stage=args.restart_stage,
-                save_every=args.save_every,
-            ))
-        except Exception as e:
-            if args.arch != "all":
-                raise
-            # zoo batch mode: one arch failing must not strand the rest;
-            # a StageError names exactly which stage died after retries
-            log.exception("[%s] pipeline failed; continuing the batch", arch)
-            failed = {"arch": arch, "error": True}
-            if isinstance(e, StageError):
-                failed["failed_stage"] = e.stage
-                failed["attempts"] = e.attempts
-            summaries.append(failed)
+        # each arch runs under its own registry scope: StagedRun stage
+        # timings/retries, ADMM iteration health, kernel dispatch and
+        # autotune events all land in one per-arch snapshot written next
+        # to the arch's progress.json — even when a stage fails
+        with registry_scope() as reg:
+            try:
+                summaries.append(run_arch(
+                    arch, cfg=cfg, out_dir=args.out,
+                    teacher_ckpt=args.teacher_ckpt,
+                    run_mia=not args.no_mia, tune=not args.no_tune,
+                    bench_path=args.bench_path,
+                    stage_retries=args.stage_retries,
+                    resume=args.resume,
+                    restart_stage=args.restart_stage,
+                    save_every=args.save_every,
+                ))
+            except Exception as e:
+                if args.arch != "all":
+                    raise
+                # zoo batch mode: one arch failing must not strand the
+                # rest; a StageError names exactly which stage died
+                # after retries
+                log.exception("[%s] pipeline failed; continuing the batch",
+                              arch)
+                failed = {"arch": arch, "error": True}
+                if isinstance(e, StageError):
+                    failed["failed_stage"] = e.stage
+                    failed["attempts"] = e.attempts
+                summaries.append(failed)
+            finally:
+                base = os.path.join(args.out, arch)
+                os.makedirs(base, exist_ok=True)
+                telemetry_export.write_json(
+                    os.path.join(base, "telemetry.json"), reg, arch=arch)
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "pipeline_summary.json"), "w") as f:

@@ -60,6 +60,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics snapshot after the run: "
+                         "Prometheus text exposition if PATH ends in "
+                         ".prom/.txt, JSON otherwise. Includes kernel "
+                         "dispatch counts and autotune timings (the "
+                         "process-wide registry), not just serve latency")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="append request-lifecycle trace events (schema-"
+                         "versioned JSONL spans: prefill/decode chunks, "
+                         "per-request retire) to PATH")
     args = ap.parse_args()
 
     logging.basicConfig(level=logging.INFO)
@@ -92,9 +102,19 @@ def main():
         log.info("loaded draft artifact %s: %s", args.speculative,
                  draft.summary())
 
+    telemetry = None
+    if args.metrics_out or args.trace_out:
+        from repro.runtime.telemetry import Telemetry, get_registry
+
+        # record into the process-wide registry so kernel dispatch and
+        # autotune events land in the same snapshot as serve latency
+        telemetry = Telemetry(metrics=get_registry(),
+                              trace_path=args.trace_out)
+
     engine = ServeEngine(model, params, batch_size=args.batch,
                          max_seq_len=args.max_seq, packed=args.packed,
-                         speculative=draft, draft_k=args.draft_k)
+                         speculative=draft, draft_k=args.draft_k,
+                         telemetry=telemetry)
     key = jax.random.PRNGKey(7)
     reqs = [
         Request(uid=i,
@@ -120,6 +140,22 @@ def main():
               f"({st['accepted']}/{st['drafted']} drafts)")
     for r in results[:4]:
         print(f"  uid={r.uid}: {r.tokens[:12]}{'...' if len(r.tokens) > 12 else ''}")
+
+    if telemetry is not None:
+        telemetry.close()
+        if args.metrics_out:
+            from repro.runtime import telemetry_export
+
+            if args.metrics_out.endswith((".prom", ".txt")):
+                telemetry_export.write_prometheus(args.metrics_out,
+                                                  telemetry.metrics)
+            else:
+                telemetry_export.write_json(
+                    args.metrics_out, telemetry.metrics,
+                    arch=args.arch, mode=mode)
+            log.info("metrics snapshot -> %s", args.metrics_out)
+        if args.trace_out:
+            log.info("trace -> %s", args.trace_out)
 
 
 if __name__ == "__main__":

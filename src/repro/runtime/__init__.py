@@ -1,3 +1,11 @@
 from repro.runtime.fault_tolerance import FaultTolerantLoop, StepResult
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.elastic import ElasticPlan, replan_mesh
+from repro.runtime.telemetry import (
+    MetricsRegistry,
+    Telemetry,
+    Tracer,
+    get_registry,
+    registry_scope,
+)
+from repro.runtime import telemetry_export

@@ -217,6 +217,9 @@ class StagedRun:
     def run(self, carry: Any,
             stages: Sequence[Tuple[str, Callable[[Any], Any]]],
             *, skip: Sequence[str] = ()) -> Any:
+        from repro.runtime.telemetry import get_registry
+
+        reg = get_registry()
         skip_set = set(skip)
         for i, (sname, fn) in enumerate(stages):
             if sname in skip_set:
@@ -238,6 +241,10 @@ class StagedRun:
                     break
                 except Exception as e:  # noqa: BLE001 — fault boundary
                     dt = time.perf_counter() - t0
+                    reg.counter("pipeline.stage_retries_total",
+                                pipeline=self.name, stage=sname).inc()
+                    reg.histogram("pipeline.stage_seconds",
+                                  stage=sname, status="failed").observe(dt)
                     if attempts > self.max_retries:
                         self.records.append(StageRecord(
                             sname, "failed", attempts, round(dt, 3),
@@ -249,6 +256,8 @@ class StagedRun:
                                 self.max_retries)
             if self.straggler is not None:
                 self.straggler.record(i, dt)
+            reg.histogram("pipeline.stage_seconds", stage=sname,
+                          status="ok").observe(dt)
             self.records.append(StageRecord(sname, "ok", attempts,
                                             round(dt, 3)))
             self._write_progress()

@@ -7,13 +7,22 @@ MAD) of step time and flag steps exceeding ``threshold`` deviations.
 Mitigation on a real fleet: report the slow host to the scheduler and
 trigger the elastic replan (runtime/elastic.py) to swap in a hot spare —
 here the hook is a callback.
+
+Flagged samples are EXCLUDED from the median/MAD window.  Folding them
+in lets a sustained slowdown inflate the baseline: after ~window/2
+straggling steps the median has drifted up to the degraded speed and
+follow-on stragglers read as normal.  The window must model *healthy*
+step time, so outliers are observed (event, counter, histogram) but
+never absorbed.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional
+
+from .telemetry import get_registry
 
 
 @dataclasses.dataclass
@@ -31,6 +40,7 @@ class StragglerMonitor:
         self.threshold = threshold
         self.on_straggler = on_straggler
         self.events: List[StragglerEvent] = []
+        self.samples = 0
 
     @staticmethod
     def _median(xs: List[float]) -> float:
@@ -39,6 +49,9 @@ class StragglerMonitor:
         return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
 
     def record(self, step: int, seconds: float) -> Optional[StragglerEvent]:
+        self.samples += 1
+        reg = get_registry()
+        reg.histogram("straggler.step_seconds").observe(seconds)
         if len(self.window) >= 8:
             med = self._median(list(self.window))
             mad = self._median([abs(x - med) for x in self.window]) or 1e-9
@@ -46,9 +59,23 @@ class StragglerMonitor:
             if dev > self.threshold:
                 ev = StragglerEvent(step, seconds, med, dev)
                 self.events.append(ev)
+                reg.counter("straggler.events_total").inc()
                 if self.on_straggler:
                     self.on_straggler(ev)
-                self.window.append(seconds)
+                # flagged sample stays OUT of the window — see module doc
                 return ev
         self.window.append(seconds)
         return None
+
+    def snapshot(self) -> Dict[str, object]:
+        """Current state for the telemetry layer / engine stats."""
+        win = list(self.window)
+        return {
+            "samples": self.samples,
+            "events": len(self.events),
+            "window_len": len(win),
+            "median": self._median(win) if win else 0.0,
+            "threshold": self.threshold,
+            "last_event": dataclasses.asdict(self.events[-1])
+            if self.events else None,
+        }

@@ -1,0 +1,103 @@
+"""Exporters for :mod:`repro.runtime.telemetry` snapshots.
+
+Two formats:
+
+  * :func:`to_prometheus` — the text exposition format scrapers expect
+    (``# TYPE`` headers, ``_bucket{le=...}`` cumulative histogram
+    series, ``_sum``/``_count``).  Metric names are sanitised from the
+    registry's dotted taxonomy (``serve.ttft_seconds`` →
+    ``serve_ttft_seconds``).
+  * :func:`to_json` / :func:`write_json` — the registry's raw snapshot
+    plus a stamp (wall-clock time, schema version), which is what
+    ``launch/serve.py --metrics-out`` and the pipeline write.
+
+Both operate on a snapshot dict (``MetricsRegistry.snapshot()``) or a
+live registry, so offline tools can re-render persisted snapshots.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, Union
+
+from .telemetry import MetricsRegistry, TRACE_SCHEMA_VERSION
+
+__all__ = ["to_json", "to_prometheus", "write_json", "write_prometheus"]
+
+
+def _snap(reg: Union[MetricsRegistry, Dict[str, Any]]) -> Dict[str, Any]:
+    return reg.snapshot() if isinstance(reg, MetricsRegistry) else reg
+
+
+def _name(dotted: str) -> str:
+    out = []
+    for ch in dotted:
+        out.append(ch if ch.isalnum() or ch == "_" else "_")
+    name = "".join(out)
+    return name if not name[:1].isdigit() else "_" + name
+
+
+def _labels(labels: Dict[str, str], extra: str = "") -> str:
+    parts = [f'{_name(k)}="{v}"' for k, v in sorted(labels.items())]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def to_prometheus(reg: Union[MetricsRegistry, Dict[str, Any]]) -> str:
+    """Render a registry (or persisted snapshot) as Prometheus text."""
+    snap = _snap(reg)
+    lines = []
+    typed = set()
+
+    def header(name: str, kind: str) -> None:
+        if name not in typed:
+            typed.add(name)
+            lines.append(f"# TYPE {name} {kind}")
+
+    for c in snap.get("counters", ()):
+        name = _name(c["name"])
+        header(name, "counter")
+        lines.append(f"{name}{_labels(c['labels'])} {c['value']:g}")
+    for g in snap.get("gauges", ()):
+        name = _name(g["name"])
+        header(name, "gauge")
+        lines.append(f"{name}{_labels(g['labels'])} {g['value']:g}")
+    for h in snap.get("histograms", ()):
+        name = _name(h["name"])
+        header(name, "histogram")
+        cum = 0
+        for edge, n in zip(h["edges"], h["counts"]):
+            cum += n
+            le = 'le="%g"' % edge
+            lines.append(f"{name}_bucket{_labels(h['labels'], le)} {cum}")
+        cum += h["counts"][len(h["edges"])]
+        le = 'le="+Inf"'
+        lines.append(f"{name}_bucket{_labels(h['labels'], le)} {cum}")
+        lines.append(f"{name}_sum{_labels(h['labels'])} {h['sum']:g}")
+        lines.append(f"{name}_count{_labels(h['labels'])} {h['count']}")
+    return "\n".join(lines) + "\n"
+
+
+def to_json(reg: Union[MetricsRegistry, Dict[str, Any]],
+            **stamp: Any) -> Dict[str, Any]:
+    """Snapshot + stamp (wall-clock ``written_at`` is always added)."""
+    return {
+        "schema": TRACE_SCHEMA_VERSION,
+        "written_at": time.time(),
+        **stamp,
+        "metrics": _snap(reg),
+    }
+
+
+def write_json(path: str, reg: Union[MetricsRegistry, Dict[str, Any]],
+               **stamp: Any) -> None:
+    with open(path, "w") as f:
+        json.dump(to_json(reg, **stamp), f, indent=1)
+
+
+def write_prometheus(path: str,
+                     reg: Union[MetricsRegistry, Dict[str, Any]]) -> None:
+    with open(path, "w") as f:
+        f.write(to_prometheus(reg))

@@ -110,6 +110,32 @@ disk corruption surfaces as ``checkpoint.ArtifactError`` (with path +
 field) before weights ever reach an engine; ``repro.testing.chaos``
 injects all of the above deterministically and ``tests/test_chaos.py``
 holds the guarantees.
+
+Lifecycle-event contract (PR 9, ``runtime/telemetry.py``): an engine
+given a ``Telemetry`` with a tracer records the request lifecycle as
+schema-versioned JSONL, and the events are COMPLETE with respect to the
+status state machine above:
+
+  * every submitted request emits exactly ONE terminal event, named
+    ``retire``, carrying ``status=<ok|shed|timeout|cancelled|failed>`` —
+    the same string its ``Result.status`` reports. No request retires
+    twice, none vanishes untraced; a missing retire is a bug of the
+    same severity as an untyped Result.
+  * every request that reaches a slot additionally has ``enqueue``
+    (ts = arrival), an ``admit`` span (queue-dispatch → first-token
+    sync) and a ``first_token`` event before its retire; shed requests
+    have only the terminal event (they never cost a prefill, so there
+    is nothing else to record).
+  * ``decode_chunk`` spans carry ``busy``/``steps``/``batch`` per
+    micro-chunk, so run occupancy is recomputable from the trace alone.
+
+Trace timestamps are on the ENGINE clock — the one ``arrivals`` and
+``deadline`` use — so TTFT / TPOT / queue-wait recomputed offline from
+the trace equal the registry's histograms exactly (the acceptance test
+in ``tests/test_telemetry.py`` and the ``BENCH_telemetry`` gate hold
+this). Telemetry records only at existing host sync points: emitted
+tokens are bit-identical with it on or off, and the engines' legacy
+``.stats`` dicts are compat views over the same registry counters.
 """
 
 from repro.serve.engine import (

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.runtime.telemetry import MetricsRegistry, Telemetry
 from repro.serve.sampler import (
     fold_key_grid,
     greedy_sample,
@@ -237,6 +238,7 @@ class ServeEngine:
         speculative: Optional[Any] = None,
         draft_k: int = 4,
         draft_model: Optional[LM] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
@@ -273,13 +275,26 @@ class ServeEngine:
         ``draft_k`` tokens per round with it and verifies them against
         THIS engine's params in one chunked dispatch. Greedy output stays
         bit-identical to this engine's own; ``engine.speculative.stats``
-        has the acceptance numbers."""
+        has the acceptance numbers.
+
+        ``telemetry`` — optional ``runtime.telemetry.Telemetry``: the
+        engine records batch-level spans (``prefill``, ``decode_chunk``)
+        and per-request ``retire`` events into its tracer, and latency
+        histograms / status counters (labelled ``engine="chunked"``)
+        into its registry. None = metrics into a private throwaway
+        registry, no tracing — the hot path is unchanged either way
+        (telemetry observes at host sync points; tokens are
+        bit-identical with it on or off). Note the chunked engine has a
+        SINGLE host sync per batch (the one token-block transfer), so
+        its lifecycle timings are batch-granular: TTFT is measured from
+        batch start to that sync."""
         self.model = model
         self.params, self.bind_report = _resolve_params(model, params,
                                                         packed)
         self.batch_size = batch_size
         self.max_seq_len = max_seq_len
         self.sampler = sampler
+        self.telemetry = telemetry
         self._key = jax.random.PRNGKey(seed)
         self.speculative = None
         if speculative is not None:
@@ -289,6 +304,7 @@ class ServeEngine:
                 model, self.params, speculative, batch_size=batch_size,
                 max_seq_len=max_seq_len, draft_k=draft_k,
                 draft_model=draft_model, flash=flash, seed=seed,
+                telemetry=telemetry,
             )
         backend = jax.default_backend()
         bake = (backend == "cpu") if bake_weights is None else bool(
@@ -358,6 +374,9 @@ class ServeEngine:
                                   self._generate_batch)
 
     def _generate_batch(self, requests: List[Request]) -> List[Result]:
+        tel = self.telemetry
+        clock = tel.metrics.clock if tel is not None else time.perf_counter
+        t_b0 = clock() if tel is not None else 0.0
         B = self.batch_size
         n = len(requests)
         prompts, slot_mask = _pad_prompts(requests, B)
@@ -394,13 +413,41 @@ class ServeEngine:
         # ONE device→host transfer for the whole token block (a per-token
         # int() loop on a device array would issue B·T blocking syncs)
         toks_np = np.asarray(jax.device_get(toks))
-        return [
+        results = [
             Result(uid=r.uid,
                    tokens=trim_at_eos(
                        [int(t) for t in toks_np[j, : r.max_new_tokens]],
                        r.eos_id))
             for j, r in enumerate(requests)
         ]
+        if tel is not None:
+            # batch-granular lifecycle: the transfer above is the single
+            # sync, so first-token time == batch-done time for every
+            # request in the chunk (see __init__ docstring)
+            t_sync = clock()
+            dur = max(t_sync - t_b0, 0.0)
+            reg = tel.metrics
+            reg.histogram("serve.chunk_seconds", engine="chunked") \
+                .observe(dur)
+            reg.counter("serve.chunks_total", engine="chunked").inc()
+            h_ttft = reg.histogram("serve.ttft_seconds", engine="chunked")
+            h_tpot = reg.histogram("serve.tpot_seconds", engine="chunked")
+            c_ok = reg.counter("serve.requests_total", engine="chunked",
+                               status="ok")
+            tpot = dur / max_new
+            for res in results:
+                h_ttft.observe(dur)
+                h_tpot.observe(tpot)
+                c_ok.inc()
+            if tel.tracer is not None:
+                tel.tracer.span_record(
+                    "decode_chunk", ts=t_b0, dur=dur, engine="chunked",
+                    steps=max_new, active=n, batch=B)
+                for res in results:
+                    tel.tracer.event("retire", ts=t_sync, engine="chunked",
+                                     uid=res.uid, status=res.status,
+                                     tokens=len(res.tokens))
+        return results
 
 
 class ContinuousEngine:
@@ -445,6 +492,7 @@ class ContinuousEngine:
         strict: bool = True,
         straggler: Optional[Any] = None,
         fault_hook: Optional[Callable[..., Any]] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
         """Reliability knobs (see ``serve.__init__`` for the contract):
 
@@ -468,6 +516,20 @@ class ContinuousEngine:
         seam (``repro.testing.chaos``): token prompts are int32, so a
         NaN-poisoning fault can only enter through the cache, exactly
         like a real XLA/memory fault would. Production leaves it None.
+
+        ``telemetry`` — optional ``runtime.telemetry.Telemetry``. The run
+        loop records the full request lifecycle into its tracer (enqueue
+        → admit/prefill → first_token → per-chunk decode → one terminal
+        ``retire`` event per request carrying the ``Result.status``) and
+        TTFT / TPOT / queue-wait / chunk-time histograms plus status
+        counters (labelled ``engine="continuous"``) into its registry.
+        Trace timestamps are on the ENGINE clock (the same one
+        ``arrivals``/``deadline`` use — the tracer's clock is rebound
+        for the run), so every latency in the registry is recomputable
+        offline from the trace alone. None = metrics land in a private
+        per-run registry (they still back ``stats``) and nothing is
+        traced; all recording happens at existing host sync points, so
+        emitted tokens are bit-identical with telemetry on or off.
         """
         if model.config.family == "ssm":
             raise NotImplementedError(
@@ -487,6 +549,7 @@ class ContinuousEngine:
         self.strict = strict
         self.straggler = straggler
         self.fault_hook = fault_hook
+        self.telemetry = telemetry
         self._key = jax.random.PRNGKey(seed)
         # per-slot request key streams (seeded requests reproduce exactly:
         # slot logits are batch-independent, and token i always draws from
@@ -566,11 +629,47 @@ class ContinuousEngine:
         arr = [0.0] * n if arrivals is None else [float(a) for a in arrivals]
         if len(arr) != n:
             raise ValueError("arrivals must match requests")
-        counts = {"ok": 0, "shed": 0, "timeout": 0, "cancelled": 0,
-                  "failed": 0}
 
-        def finish(order: int, uid: int, tokens: List[int], status: str):
-            counts[status] += 1
+        ENG = "continuous"
+        tel = self.telemetry
+        tracer = tel.tracer if tel is not None else None
+        # metrics always flow through a registry — a private per-run one
+        # when no Telemetry is attached — so ``self.stats`` is a view
+        # over the registry in every mode (deltas from the run-start
+        # values, so a shared long-lived registry still yields per-run
+        # stats while its counters accumulate monotonically)
+        reg = tel.metrics if tel is not None else MetricsRegistry()
+        statuses = ("ok", "shed", "timeout", "cancelled", "failed")
+        c_status = {s: reg.counter("serve.requests_total", engine=ENG,
+                                   status=s) for s in statuses}
+        c_chunks = reg.counter("serve.chunks_total", engine=ENG)
+        c_busy = reg.counter("serve.busy_slot_steps_total", engine=ENG)
+        c_total = reg.counter("serve.total_slot_steps_total", engine=ENG)
+        c_quar = reg.counter("serve.quarantined_slots_total", engine=ENG)
+        h_ttft = reg.histogram("serve.ttft_seconds", engine=ENG)
+        h_tpot = reg.histogram("serve.tpot_seconds", engine=ENG)
+        h_qwait = reg.histogram("serve.queue_wait_seconds", engine=ENG)
+        h_chunk = reg.histogram("serve.chunk_seconds", engine=ENG)
+        base = {"chunks": c_chunks.value, "busy": c_busy.value,
+                "total": c_total.value,
+                **{s: c_status[s].value for s in statuses}}
+        # order → first-token time on the engine clock, for TPOT at retire
+        t_firsts: Dict[int, float] = {}
+
+        def finish(order: int, uid: int, tokens: List[int], status: str,
+                   t: Optional[float] = None):
+            c_status[status].inc()
+            t_first = t_firsts.get(order)
+            if t is not None and t_first is not None and len(tokens) > 1:
+                h_tpot.observe((t - t_first) / (len(tokens) - 1))
+            if tracer is not None:
+                # the ONE terminal event per request — name is always
+                # "retire", the disposition rides in ``status`` (the
+                # completeness invariant serve.__init__ documents)
+                tracer.event("retire", engine=ENG, uid=uid, order=order,
+                             status=status, tokens=len(tokens),
+                             ts=t if t is not None else arr[order],
+                             t_first=t_first, arrival=arr[order])
             return order, Result(uid=uid, tokens=tokens, status=status)
 
         oversized = set()
@@ -593,21 +692,32 @@ class ContinuousEngine:
                 # non-strict mode, an unservable request) rejects at the
                 # door instead of queueing work that cannot complete
                 yield finish(i, requests[i].uid, [], "shed")
+            elif tracer is not None:
+                tracer.event("enqueue", engine=ENG, uid=requests[i].uid,
+                             order=i, ts=arr[i])
 
         cache = self.model.init_cache(self.batch_size, self.max_seq_len)
         tok = jnp.zeros((self.batch_size, 1), jnp.int32)
         t0 = time.perf_counter()
         now = clock if clock is not None \
             else (lambda: time.perf_counter() - t0)
+        if tracer is not None:
+            # trace timestamps share the engine clock — the one arrivals
+            # and deadlines are on — so offline readers can reconstruct
+            # every latency the registry's histograms observed
+            tracer.clock = now
+        if tel is None:
+            reg.clock = now
 
         while not sched.done:
             t = now()
             # ---- reap dead requests before they cost anything -------------
             for order, r, status in sched.reap_queue(t):
-                yield finish(order, r.uid, [], status)
+                yield finish(order, r.uid, [], status, t=t)
             # ---- admit arrived requests into free slots -------------------
             for st in sched.ready_admissions(t):
                 r = st.request
+                t_adm = now()
                 prompt = r.prompt[None, ...]
                 if r.temperature is not None and r.temperature > 0:
                     row_key, self._key = request_key(r.seed, self._key)
@@ -623,24 +733,44 @@ class ContinuousEngine:
                     # poisoned from the first logits: the slot's KV rows
                     # already hold NaN — quarantine the lane immediately
                     sched.table.quarantine(st.slot)
-                    yield finish(st.order, r.uid, [], "failed")
+                    yield finish(st.order, r.uid, [], "failed", t=now())
                     continue
                 # the admission's one host sync: the first token (needed
                 # for the eos/max_new check before the next chunk)
-                if st.push([int(np.asarray(first)[0, 0])]):
+                first_tok = int(np.asarray(first)[0, 0])
+                t_first = now()
+                t_firsts[st.order] = t_first
+                # queue wait ends when the admit dispatch began; TTFT
+                # ends at the first-token host sync just above — both
+                # measured from the request's scripted/real arrival
+                h_qwait.observe(t_adm - arr[st.order])
+                h_ttft.observe(t_first - arr[st.order])
+                if tracer is not None:
+                    tracer.span_record(
+                        "admit", ts=t_adm, dur=t_first - t_adm, engine=ENG,
+                        uid=r.uid, order=st.order, slot=st.slot,
+                        arrival=arr[st.order])
+                    tracer.event("first_token", engine=ENG, uid=r.uid,
+                                 order=st.order, ts=t_first,
+                                 arrival=arr[st.order])
+                if st.push([first_tok]):
                     sched.table.retire(st.slot)
-                    yield finish(st.order, r.uid, st.emitted, "ok")
+                    yield finish(st.order, r.uid, st.emitted, "ok",
+                                 t=t_first)
             # ---- reap live slots whose deadline/cancel fired --------------
-            for st in sched.reap_active(now()):
-                yield finish(st.order, st.request.uid, st.emitted, st.status)
+            t_reap = now()
+            for st in sched.reap_active(t_reap):
+                yield finish(st.order, st.request.uid, st.emitted, st.status,
+                             t=t_reap)
 
             if not sched.table.active:
                 if sched.table.num_free == 0 and sched.pending:
                     # every lane is quarantined and requests still queue:
                     # nothing can ever admit — fail the backlog typed
                     # instead of spinning forever
+                    t_fail = now()
                     for order, r, status in sched.fail_pending():
-                        yield finish(order, r.uid, [], status)
+                        yield finish(order, r.uid, [], status, t=t_fail)
                     break
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -662,6 +792,7 @@ class ContinuousEngine:
             # ---- one decode micro-chunk -----------------------------------
             t_chunk = now()
             K = sched.chunk_len()
+            n_active = len(sched.table.active)
             mask = jnp.asarray(sched.table.active_mask())
             if sched.table.any_stochastic():
                 temps = jnp.asarray(sched.table.temperatures())
@@ -683,24 +814,51 @@ class ContinuousEngine:
             # ride the same sync)
             toks_np, flags_np = jax.device_get((toks, flags))
             toks_np = np.asarray(toks_np)
+            t_end = now()
+            dt_chunk = max(t_end - t_chunk, 0.0)
             if self.straggler is not None:
                 # per-chunk watchdog: the transfer above synced the chunk,
                 # so the delta is real device+host time for these K steps
-                self.straggler.record(sched.chunks, max(now() - t_chunk,
-                                                        0.0))
-            for st in sched.absorb_chunk(toks_np, K,
-                                         ok=np.asarray(flags_np)):
-                yield finish(st.order, st.request.uid, st.emitted, st.status)
+                self.straggler.record(sched.chunks, dt_chunk)
+            chunk_idx = sched.chunks
+            busy0 = sched.busy_slot_steps
+            finished = sched.absorb_chunk(toks_np, K,
+                                          ok=np.asarray(flags_np))
+            busy_d = sched.busy_slot_steps - busy0
+            c_chunks.inc()
+            c_busy.inc(busy_d)
+            c_total.inc(self.batch_size * K)
+            h_chunk.observe(dt_chunk)
+            if tracer is not None:
+                # busy/steps/batch make per-chunk (and run-aggregate)
+                # occupancy recomputable from the trace alone
+                tracer.span_record(
+                    "decode_chunk", ts=t_chunk, dur=dt_chunk, engine=ENG,
+                    chunk=chunk_idx, steps=K, active=n_active,
+                    busy=busy_d, batch=self.batch_size)
+            for st in finished:
+                yield finish(st.order, st.request.uid, st.emitted, st.status,
+                             t=t_end)
 
+        c_quar.inc(len(sched.table.quarantined))
+        busy = c_busy.value - base["busy"]
+        total = c_total.value - base["total"]
+        # ``stats`` is the legacy surface, now a compat VIEW over the
+        # registry: every numeric field below reads back out of the
+        # counters recorded above (per-run deltas against the run-start
+        # snapshot), so the dict and a registry export can never drift
         self.stats = {
-            "chunks": sched.chunks,
-            "occupancy": sched.occupancy(),
-            "busy_slot_steps": sched.busy_slot_steps,
-            "total_slot_steps": sched.total_slot_steps,
-            "statuses": counts,
+            "chunks": int(c_chunks.value - base["chunks"]),
+            "occupancy": (busy / total) if total else 0.0,
+            "busy_slot_steps": int(busy),
+            "total_slot_steps": int(total),
+            "statuses": {s: int(c_status[s].value - base[s])
+                         for s in statuses},
             "quarantined_slots": list(sched.table.quarantined),
             "straggler_events": (len(self.straggler.events)
                                  if self.straggler is not None else 0),
             "bind_fallbacks": (dict(self.bind_report["fallbacks"])
                                if self.bind_report else {}),
         }
+        if tracer is not None:
+            tracer.flush()

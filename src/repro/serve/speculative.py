@@ -75,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.runtime.telemetry import MetricsRegistry, Telemetry
 from repro.serve.sampler import (
     fold_key_grid,
     greedy_sample,
@@ -162,6 +163,7 @@ class SpeculativeEngine:
         demote_after: int = 64,
         demote_below: float = 0.15,
         straggler: Optional[Any] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
         """Degradation knobs: once ``demote_after`` tokens have been
         drafted, an acceptance rate below ``demote_below`` DEMOTES the
@@ -174,7 +176,13 @@ class SpeculativeEngine:
         bit-identical to ``ServeEngine``. Each demotion is recorded in
         ``stats["demotions"]``. ``straggler``: optional
         ``runtime.straggler.StragglerMonitor`` fed per-dispatch wall
-        time."""
+        time. ``telemetry``: optional ``runtime.telemetry.Telemetry`` —
+        per-dispatch ``spec_dispatch`` spans and per-request ``retire``
+        events into its tracer, round/draft/accept counters plus
+        TTFT/TPOT histograms (``engine="speculative"``) into its
+        registry; ``stats`` is then a compat view over those counters.
+        Recording happens only at existing host sync points — emitted
+        tokens are bit-identical with telemetry on or off."""
         from repro.serve.engine import _resolve_params
 
         if draft_k < 1:
@@ -192,6 +200,7 @@ class SpeculativeEngine:
         self.demote_after = demote_after
         self.demote_below = demote_below
         self.straggler = straggler
+        self.telemetry = telemetry
         self.demoted = demote_reason is not None
         self._demotions: List[Dict[str, Any]] = []
         if demote_reason is not None:
@@ -369,18 +378,47 @@ class SpeculativeEngine:
         t0 = _time.perf_counter()
         self._now = clock if clock is not None \
             else (lambda: _time.perf_counter() - t0)
+        tel = self.telemetry
+        if tel is not None and tel.tracer is not None:
+            tel.tracer.clock = self._now
+        reg = tel.metrics if tel is not None else MetricsRegistry()
+        ENG = "speculative"
+        ctrs = {k: reg.counter(f"spec.{k}_total", engine=ENG)
+                for k in ("rounds", "dispatches", "drafted", "accepted")}
+        base = {k: c.value for k, c in ctrs.items()}
+        demo0 = len(self._demotions)
         self.stats = {"rounds": 0, "dispatches": 0, "drafted": 0,
                       "accepted": 0, "demoted": self.demoted,
                       "demotions": list(self._demotions)}
         results = _bucketed_generate(requests, self.batch_size,
                                      self._generate_batch)
+        # mirror the run's tallies into the registry, then read the
+        # legacy stats back OUT of it — ``stats`` is a compat view over
+        # the registry's counters (per-run deltas; a shared registry
+        # keeps accumulating across runs as counters should)
+        for k, c in ctrs.items():
+            c.inc(self.stats[k])
+        reg.counter("spec.demotions_total", engine=ENG).inc(
+            len(self._demotions) - demo0)
+        for res in results:
+            reg.counter("serve.requests_total", engine=ENG,
+                        status=res.status).inc()
+        for k, c in ctrs.items():
+            self.stats[k] = int(c.value - base[k])
         drafted = self.stats["drafted"]
         self.stats["acceptance_rate"] = (
             self.stats["accepted"] / drafted if drafted else 0.0)
+        reg.gauge("spec.acceptance_rate", engine=ENG).set(
+            self.stats["acceptance_rate"])
         self.stats["demoted"] = self.demoted
         self.stats["demotions"] = list(self._demotions)
         if self.straggler is not None:
             self.stats["straggler_events"] = len(self.straggler.events)
+        if tel is not None and tel.tracer is not None:
+            for res in results:
+                tel.tracer.event("retire", engine=ENG, uid=res.uid,
+                                 status=res.status, tokens=len(res.tokens))
+            tel.tracer.flush()
         return results
 
     def _validate(self, requests) -> None:
@@ -410,6 +448,9 @@ class SpeculativeEngine:
         from repro.serve.engine import Result, _pad_prompts
 
         self._validate(requests)
+        tel = self.telemetry
+        tracer = tel.tracer if tel is not None else None
+        t_b0 = self._now()
         B, K, n = self.batch_size, self.draft_k, len(requests)
         prompts, slot_mask = _pad_prompts(requests, B)
         tcache, tlogits = self._prefill_t(self.params, prompts)
@@ -436,6 +477,18 @@ class SpeculativeEngine:
 
         emitted: List[List[int]] = [[int(t)] for t in
                                     np.asarray(jax.device_get(tok))[:n, 0]]
+        # the transfer above is the batch's first host sync — every row's
+        # first token exists on the host now (batch-granular TTFT, like
+        # the chunked engine's single-sync lifecycle)
+        t_first = self._now()
+        if tel is not None:
+            h_ttft = tel.metrics.histogram("serve.ttft_seconds",
+                                           engine="speculative")
+            for _ in range(n):
+                h_ttft.observe(t_first - t_b0)
+            if tracer is not None:
+                tracer.span_record("prefill", ts=t_b0, dur=t_first - t_b0,
+                                   engine="speculative", active=n, batch=B)
         while True:
             # deadline/cancel edge: an expired or cancelled row stops
             # consuming rounds NOW (its budget clamps to what it has);
@@ -474,9 +527,13 @@ class SpeculativeEngine:
                 tok = toks[:, -1:]
                 toks_np = np.asarray(jax.device_get(toks))
                 self.stats["dispatches"] += 1
+                dt_disp = max(self._now() - t_disp, 0.0)
                 if self.straggler is not None:
-                    self.straggler.record(self.stats["dispatches"],
-                                          max(self._now() - t_disp, 0.0))
+                    self.straggler.record(self.stats["dispatches"], dt_disp)
+                if tracer is not None:
+                    tracer.span_record(
+                        "spec_dispatch", ts=t_disp, dur=dt_disp,
+                        engine="speculative", demoted=True, steps=int(rem))
                 for b in range(n):
                     short = budgets[b] - len(emitted[b])
                     if short > 0:
@@ -507,9 +564,14 @@ class SpeculativeEngine:
             outs, keeps, accs = (np.asarray(outs), np.asarray(keeps),
                                  np.asarray(accs))
             self.stats["dispatches"] += 1
+            dt_disp = max(self._now() - t_disp, 0.0)
             if self.straggler is not None:
-                self.straggler.record(self.stats["dispatches"],
-                                      max(self._now() - t_disp, 0.0))
+                self.straggler.record(self.stats["dispatches"], dt_disp)
+            if tracer is not None:
+                tracer.span_record(
+                    "spec_dispatch", ts=t_disp, dur=dt_disp,
+                    engine="speculative", demoted=False,
+                    rounds=int(outs.shape[0]))
             for r in range(outs.shape[0]):
                 self.stats["rounds"] += 1
                 for b in range(n):
@@ -536,8 +598,17 @@ class SpeculativeEngine:
                         "threshold": self.demote_below,
                     })
 
-        return [Result(uid=r.uid,
-                       tokens=trim_at_eos(emitted[b][: r.max_new_tokens],
-                                          r.eos_id),
-                       status=statuses[b])
-                for b, r in enumerate(requests)]
+        results = [Result(uid=r.uid,
+                          tokens=trim_at_eos(emitted[b][: r.max_new_tokens],
+                                             r.eos_id),
+                          status=statuses[b])
+                   for b, r in enumerate(requests)]
+        if tel is not None:
+            t_done = self._now()
+            h_tpot = tel.metrics.histogram("serve.tpot_seconds",
+                                           engine="speculative")
+            for res in results:
+                if len(res.tokens) > 1:
+                    h_tpot.observe((t_done - t_first)
+                                   / (len(res.tokens) - 1))
+        return results

@@ -124,6 +124,7 @@ from repro.sparse.registry import (
     dispatch_conv,
     dispatch_matmul,
     dispatch_stats,
+    dispatch_stats_scope,
     handler_for,
     reset_dispatch_stats,
 )

@@ -67,6 +67,7 @@ per dispatch site per compiled graph), the per-scheme attribution that
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -89,6 +90,7 @@ from repro.kernels.pattern_gemm import (
     pack_tile_pattern_blocked as _pack_tile_blocked,
 )
 from repro.kernels.pattern_gemm import pattern_gemm as _pattern_gemm
+from repro.runtime import telemetry as _telemetry
 from repro.sparse import tune as _tune
 from repro.sparse.packed import PackedTensor
 from repro.utils.registry import Registry
@@ -176,13 +178,39 @@ def reset_dispatch_stats():
     DISPATCH_STATS.clear()
 
 
+@contextlib.contextmanager
+def dispatch_stats_scope():
+    """Measure dispatches in isolation: snapshot the module counter,
+    start the block from zero, and RESTORE the snapshot (plus whatever
+    the block added) on exit — concurrent benches and tests each read
+    only their own counts without clobbering each other's.
+
+    Yields the live ``Counter``; read it inside the block (or call
+    ``dispatch_stats()``)."""
+    snap = collections.Counter(DISPATCH_STATS)
+    DISPATCH_STATS.clear()
+    try:
+        yield DISPATCH_STATS
+    finally:
+        DISPATCH_STATS.update(snap)
+
+
 def _count_dispatch(kind: str, pt: PackedTensor, M: int):
     small = int(pt.meta_dict.get("small_m", SMALL_M))
-    DISPATCH_STATS[f"{kind}:{pt.scheme}:m{_tune.m_bucket(M, small)}"] += 1
+    bucket = _tune.m_bucket(M, small)
+    DISPATCH_STATS[f"{kind}:{pt.scheme}:m{bucket}"] += 1
+    # same event into the process-wide telemetry registry: one snapshot
+    # covers kernel dispatch next to serve latency and prune health
+    _telemetry.get_registry().counter(
+        "sparse.dispatch_total", kind=kind, scheme=pt.scheme,
+        bucket=bucket).inc()
 
 
 def _count_plan_build(kind: str, pt: PackedTensor, plan: "_tune.Plan"):
     DISPATCH_STATS[f"plan_build:{kind}:{pt.scheme}:{plan.to_str()}"] += 1
+    _telemetry.get_registry().counter(
+        "sparse.plan_build_total", kind=kind, scheme=pt.scheme,
+        plan=plan.to_str()).inc()
 
 
 def _plan_key(pt: PackedTensor, M: int, dtype, has_bias: bool,

@@ -376,7 +376,14 @@ def tune_plan(pt: PackedTensor, kind: str, M: int, *,
                 report[c.to_str()] = -1.0
                 continue
             fns[c.to_str()] = (lambda fn=fn: fn(x, pt, None))
-    for name, t in _time_candidates(fns, iters).items():
+    from repro.runtime.telemetry import get_registry
+
+    with get_registry().timer("tune.search_seconds", kind=kind,
+                              scheme=pt.scheme):
+        timed = _time_candidates(fns, iters)
+    get_registry().counter("tune.candidates_total", kind=kind,
+                           scheme=pt.scheme).inc(len(fns))
+    for name, t in timed.items():
         report[name] = round(t * 1e3, 4)
         if t < best_t:
             best, best_t = Plan.from_str(name), t
