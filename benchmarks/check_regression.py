@@ -62,6 +62,24 @@ ends in exactly one ``retire`` trace event matching its typed status,
 and TTFT / queue-wait / occupancy recomputed offline from the trace
 equal the registry's histograms.
 
+``BENCH_profiler.json`` (``benchmarks/profiler_overhead.py``) — the
+profiler contract from ``runtime/__init__.py``: the profiler-off serve
+path issues an IDENTICAL traced dispatch count and BIT-IDENTICAL tokens
+to a profiler-on run, full-rate sampling costs at most
+``REPRO_MAX_PROFILER_OVERHEAD`` of end-to-end serving, and the roofline
+attribution report covers every scheme the bench dispatched with
+measured, modeled, and achieved-fraction columns.
+
+``--against-history`` additionally gates every numeric-threshold metric
+above against a ROLLING BASELINE from the perf-history ledger
+(``experiments/bench/history.jsonl``, written by ``benchmarks/common.emit``
+/ ``benchmarks/history.py``): the current value must stay within
+``REPRO_HISTORY_MARGIN`` (default 0.2) of the median of the last
+``--history-window`` runs — a slow drift that never trips a fixed
+threshold still fails the trend gate.  Tables with fewer than two
+recorded runs, and metrics with fewer than two prior points, are
+skipped (the ledger has to warm up before it can gate).
+
 Exit code 0 = pass, 1 = regression, 2 = missing/invalid benchmark file.
 
     PYTHONPATH=src:. python benchmarks/packed_serve.py        # regenerate
@@ -419,7 +437,107 @@ GATES: Tuple[GateSpec, ...] = (
             f"{bk[('on',)].get('trace_events')} trace events, spans "
             f"complete, latencies recomputable"),
     ),
+    GateSpec(
+        name="profiler",
+        path_flag="--profiler-path",
+        key_fields=("mode",),
+        required=(("off",), ("on",)),
+        checks=(
+            Check(metric="tokens_identical", op="truthy", row=("on",),
+                  why="the profiler walls at existing host sync points "
+                      "and never touches traced values — a token delta "
+                      "means it leaked into the decode math"),
+            Check(metric="dispatch_count_identical", op="truthy",
+                  row=("on",),
+                  why="a profiler-off serve path must issue the exact "
+                      "traced dispatch counts of a profiler-on run — "
+                      "the hooks add syncs, never dispatches"),
+            Check(metric="attribution_complete", op="truthy", row=("on",),
+                  why="the roofline attribution report must cover every "
+                      "scheme the bench dispatched with measured, "
+                      "modeled and achieved-fraction columns — a "
+                      "regression in an uncovered kernel is "
+                      "unattributable"),
+            Check(metric="overhead_ratio", op="<=", row=("on",),
+                  default=0.02, env="REPRO_MAX_PROFILER_OVERHEAD",
+                  flag="--max-profiler-overhead",
+                  why="full-rate sampling must stay within a few percent "
+                      "of end-to-end serving or nobody profiles "
+                      "production"),
+        ),
+        summary=lambda bk: (
+            f"overhead {bk[('on',)].get('overhead_ratio', 0) * 100:+.2f}% "
+            f"({bk[('on',)].get('tokens_per_s')} vs "
+            f"{bk[('off',)].get('tokens_per_s')} tok/s), dispatch counts "
+            f"+ tokens identical, attribution complete over "
+            f"{bk[('on',)].get('schemes_dispatched')}"),
+    ),
 )
+
+
+def _load_history():
+    """Import benchmarks/history.py whether this script runs as
+    ``python benchmarks/check_regression.py`` or under ``-m``."""
+    try:
+        from benchmarks import history
+    except ImportError:
+        import history  # type: ignore[no-redef]
+    return history
+
+
+def history_failures(spec: GateSpec, by_key: Dict[RowKey, dict],
+                     args: argparse.Namespace) -> Tuple[list, str]:
+    """Trend-gate every numeric-threshold check against the rolling
+    baseline from the perf-history ledger.  Returns (failures, note)."""
+    history = _load_history()
+    entries = history.load(args.history_path)
+    table = f"BENCH_{spec.name}"
+    margin = (float(args.history_margin) if args.history_margin is not None
+              else float(os.environ.get("REPRO_HISTORY_MARGIN", "0.2")))
+    window = int(args.history_window)
+    runs = history.distinct_runs(entries, table)
+    if runs < 2:
+        return [], f"history: {runs} run(s) recorded — trend gate warming up"
+
+    failures, checked = [], 0
+    for check in spec.checks:
+        if check.op not in (">=", "<="):
+            continue
+        targets = ([check.row] if check.row is not None
+                   else list(by_key.keys()))
+        for key in targets:
+            row = by_key.get(key)
+            if row is None:
+                continue
+            value = row.get(check.metric)
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                continue
+            pts = history.series(entries, table, history.row_key(row),
+                                 check.metric)
+            now = row.get("timestamp")
+            pts = [p for p in pts if p[0] != now]   # this run is not its
+            if len(pts) < 2:                        # own baseline
+                continue
+            base = history.rolling_baseline(pts, window)
+            checked += 1
+            # relative margin with an absolute floor at the fixed gate's
+            # scale — near-zero baselines (overhead ratios, AUC deltas)
+            # must not turn jitter into a trend failure
+            slack = margin * max(abs(base), abs(check.default or 0.0))
+            label = "/".join(str(p) for p in key)
+            n = min(len(pts), window)
+            if check.op == ">=" and value < base - slack:
+                failures.append(
+                    f"{label}: {check.metric} {value:.4g} fell below its "
+                    f"rolling baseline {base:.4g} (median of last {n} "
+                    f"runs) by more than {margin:.0%} — {check.why}")
+            elif check.op == "<=" and value > base + slack:
+                failures.append(
+                    f"{label}: {check.metric} {value:.4g} rose above its "
+                    f"rolling baseline {base:.4g} (median of last {n} "
+                    f"runs) by more than {margin:.0%} — {check.why}")
+    return failures, (f"history: {checked} metric(s) vs median of last "
+                      f"{window} of {runs} runs (margin {margin:.0%})")
 
 
 def _threshold(check: Check, args: argparse.Namespace) -> Optional[float]:
@@ -476,12 +594,20 @@ def run_gate(spec: GateSpec, path: str, args: argparse.Namespace) -> int:
                     f"{label}: {check.metric} {value:.3f} > {thr} — "
                     f"{check.why}")
 
+    notes = []
+    if getattr(args, "against_history", False):
+        h_failures, note = history_failures(spec, by_key, args)
+        failures.extend(h_failures)
+        notes.append(note)
+
     if failures:
         print(f"check_regression: FAIL ({spec.name})")
         for f_ in failures:
             print(f"  - {f_}")
         return 1
     extra = f" — {spec.summary(by_key)}" if spec.summary else ""
+    for note in notes:
+        extra += f" [{note}]"
     print(f"check_regression: OK ({spec.name}){extra}")
     return 0
 
@@ -499,6 +625,16 @@ def main() -> int:
                                 help=f"threshold for {check.metric} "
                                      f"(env {check.env}, "
                                      f"default {check.default})")
+    ap.add_argument("--against-history", action="store_true",
+                    help="also trend-gate numeric metrics against the "
+                         "rolling baseline in the perf-history ledger")
+    ap.add_argument("--history-path",
+                    default=os.path.join(_BENCH_DIR, "history.jsonl"))
+    ap.add_argument("--history-window", type=int, default=5,
+                    help="runs in the rolling-baseline median")
+    ap.add_argument("--history-margin", type=float, default=None,
+                    help="allowed fraction vs baseline (env "
+                         "REPRO_HISTORY_MARGIN, default 0.2)")
     args = ap.parse_args()
     rc = 0
     for spec in GATES:

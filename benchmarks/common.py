@@ -267,6 +267,13 @@ def emit(table: str, rows: List[Row] | List[Dict[str, Any]]) -> None:
     path = os.path.join(OUT_DIR, f"{table}.json")
     with open(path, "w") as f:
         json.dump(recs, f, indent=1)
+    # every emitted row also lands in the append-only perf-history
+    # ledger (trend gating) — lazy import: history.py has no deps on
+    # this module's heavy model/pruning imports, but keep it decoupled
+    from benchmarks import history
+
+    if history.enabled():
+        history.append(table, recs)
     if not recs:
         return
     cols = list(recs[0].keys())

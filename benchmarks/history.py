@@ -1,0 +1,160 @@
+"""Perf-history ledger: every bench row, appended forever.
+
+``common.emit`` overwrites ``experiments/bench/BENCH_*.json`` with the
+latest run — a snapshot, not a trajectory.  This module appends each
+emitted row (already git-SHA- and timestamp-stamped) as one JSON line to
+``experiments/bench/history.jsonl``:
+
+    {"bench_table": "BENCH_packed_serve", "timestamp": ..., "git_sha":
+     ..., <the row>}
+
+so regressions can be judged against a ROLLING BASELINE of recent runs
+(``check_regression.py --against-history``) instead of only fixed
+thresholds: a slow drift that never trips a fixed gate still shows up
+as a trend failure, and a noisy box's outlier run is absorbed by the
+window median.
+
+Appending is automatic from ``common.emit`` (disable with
+``REPRO_HISTORY=0`` — unit tests and ad-hoc local runs that should not
+pollute the ledger).  The CLI seeds or inspects a ledger:
+
+    python benchmarks/history.py --append experiments/bench/BENCH_*.json
+    python benchmarks/history.py --show [--table BENCH_packed_serve]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob as _glob
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+_OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+HISTORY_PATH = os.path.join(_OUT_DIR, "history.jsonl")
+
+# fields that identify "the same row" across runs, per bench family —
+# everything else on the row is a measurement
+KEY_FIELDS = ("bench", "mode", "method", "scheme", "network", "stage",
+              "engine", "case", "kind")
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_HISTORY", "1") != "0"
+
+
+def append(table: str, rows: Sequence[Dict[str, Any]],
+           path: Optional[str] = None) -> int:
+    """Append ``rows`` (as emitted, stamps included) under ``table``.
+    Returns the number of lines written."""
+    path = path or HISTORY_PATH
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    n = 0
+    with open(path, "a") as f:
+        for r in rows:
+            rec = {"bench_table": table, **r}
+            f.write(json.dumps(rec, sort_keys=True) + "\n")
+            n += 1
+    return n
+
+
+def load(path: Optional[str] = None) -> List[Dict[str, Any]]:
+    """All ledger entries, oldest first (tolerant of truncated tails —
+    an interrupted append must not poison later gating)."""
+    path = path or HISTORY_PATH
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict):
+                out.append(rec)
+    out.sort(key=lambda r: r.get("timestamp") or 0.0)
+    return out
+
+
+def row_key(rec: Dict[str, Any]) -> tuple:
+    """Identity of a row within its table (which run it came from is
+    carried by timestamp/git_sha, not the key)."""
+    return tuple((f, rec.get(f)) for f in KEY_FIELDS if f in rec)
+
+
+def series(entries: Iterable[Dict[str, Any]], table: str, key: tuple,
+           metric: str) -> List[tuple]:
+    """(timestamp, value) points for one metric of one row identity,
+    oldest first, numeric values only."""
+    pts = []
+    for rec in entries:
+        if rec.get("bench_table") != table or row_key(rec) != key:
+            continue
+        v = rec.get(metric)
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            continue
+        pts.append((rec.get("timestamp") or 0.0, float(v)))
+    pts.sort(key=lambda p: p[0])
+    return pts
+
+
+def rolling_baseline(points: Sequence[tuple], window: int) -> float:
+    """Median of the last ``window`` values — robust to one noisy run."""
+    vals = sorted(v for _, v in points[-window:])
+    n = len(vals)
+    return vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
+
+
+def distinct_runs(entries: Iterable[Dict[str, Any]],
+                  table: Optional[str] = None) -> int:
+    """Number of distinct runs (timestamps) recorded for a table."""
+    stamps = {rec.get("timestamp") for rec in entries
+              if table is None or rec.get("bench_table") == table}
+    return len(stamps - {None})
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--append", nargs="+", default=None, metavar="JSON",
+                    help="BENCH_*.json files (globs ok) to append")
+    ap.add_argument("--show", action="store_true",
+                    help="print a per-table run-count summary")
+    ap.add_argument("--table", default=None,
+                    help="restrict --show to one table")
+    ap.add_argument("--path", default=HISTORY_PATH)
+    args = ap.parse_args(argv)
+
+    if args.append:
+        total = 0
+        for pat in args.append:
+            for fp in sorted(_glob.glob(pat)) or [pat]:
+                if not os.path.exists(fp):
+                    print(f"history: missing {fp}, skipped")
+                    continue
+                with open(fp) as f:
+                    rows = json.load(f)
+                table = os.path.splitext(os.path.basename(fp))[0]
+                total += append(table, rows, path=args.path)
+        print(f"history: appended {total} rows -> {args.path}")
+    if args.show or not args.append:
+        entries = load(args.path)
+        tables = sorted({e.get("bench_table", "?") for e in entries})
+        print(f"history: {len(entries)} entries, "
+              f"{distinct_runs(entries)} runs, {len(tables)} tables "
+              f"({args.path})")
+        for t in tables:
+            if args.table and t != args.table:
+                continue
+            sub = [e for e in entries if e.get("bench_table") == t]
+            print(f"  {t:<28s} rows={len(sub):4d} "
+                  f"runs={distinct_runs(sub, t)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,8 +35,11 @@ ratio.
 
 ``--profile`` prints a per-stage breakdown (prefill vs decode-device vs
 host-conversion medians per mode), the registry's per-scheme dispatch
-counts, and the tuned plan table — so a ratio regression is attributable
-to a stage and a scheme without rerunning under a profiler.
+counts, the tuned plan table, and the measured-vs-modeled roofline
+attribution table (``roofline/attribution.py`` over an eager
+micro-profile of every packed leaf) — so a ratio regression is
+attributable to a stage, a scheme, and a kernel's achieved roofline
+fraction without rerunning under an external profiler.
 
 Writes experiments/bench/BENCH_packed_serve.json via benchmarks/common.emit.
 """
@@ -219,6 +222,14 @@ def _bench_decode(batch: int, seq: int, steps: int,
                 tune_mod.describe_plans(artifact.packed).items()):
             for key, plan in sorted(plans.items()):
                 print(f"  {path:40s} {key:20s} -> {plan}")
+        print("--- profile: roofline attribution (measured vs modeled) ---")
+        from repro.roofline import attribution as attr_mod
+
+        prof_rows = attr_mod.profile_packed_tree(
+            artifact.packed, ms=(batch, batch * seq),
+            samples=3 if common.fast_mode() else 8, warmup=2)
+        print(attr_mod.render_report(
+            attr_mod.attribute(prof_rows, artifact.packed)))
     return rows
 
 

@@ -28,7 +28,18 @@ from repro.privacy.report import (
 def run():
     cfg = ReportConfig.for_mode(quick=common.fast_mode())
     rows = run_report(cfg)
+    # write_bench merge-writes its own JSON (so pipeline runs accumulate)
+    # instead of going through common.emit — stamp the rows and feed the
+    # perf-history ledger here so this table trend-gates like the rest
+    stamp = common._stamp()
+    for r in rows:
+        for k, v in stamp.items():
+            r.setdefault(k, v)
     path = write_bench(rows)
+    from benchmarks import history
+
+    if history.enabled():
+        history.append("BENCH_privacy_mia", rows)
     print_rows(rows)
     print(f"wrote {path}")
     return rows

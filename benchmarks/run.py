@@ -34,9 +34,10 @@ import time
 
 SERVE_SUITES = ("packed_serve", "continuous_serve", "speculative_serve")
 # quick mode runs the gated suites: serving + privacy MIA + reliability
-# + telemetry (observability overhead and span completeness)
+# + telemetry (observability overhead and span completeness) + profiler
+# (sampling overhead, dispatch identity, roofline attribution)
 GATED_SUITES = SERVE_SUITES + ("privacy_mia", "fault_injection",
-                               "prune_resilience", "telemetry")
+                               "prune_resilience", "telemetry", "profiler")
 
 
 def main() -> None:
@@ -45,7 +46,7 @@ def main() -> None:
                     help="comma list: table1,table2,table4,table5,fig3,"
                          "packed_serve,continuous_serve,speculative_serve,"
                          "privacy_mia,fault_injection,prune_resilience,"
-                         "telemetry")
+                         "telemetry,profiler")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: REPRO_BENCH_FAST=1 and only the "
                          "suites check_regression.py gates on")
@@ -63,6 +64,7 @@ def main() -> None:
         fig3_kernels,
         packed_serve,
         privacy_mia,
+        profiler_overhead,
         prune_resilience,
         speculative_serve,
         table1_schemes,
@@ -85,6 +87,7 @@ def main() -> None:
         "fault_injection": fault_injection.run,
         "prune_resilience": prune_resilience.run,
         "telemetry": telemetry_overhead.run,
+        "profiler": profiler_overhead.run,
     }
 
     # provenance stamp shared by every suite this invocation runs: the

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python experiments/perf/diagnose.py \
         --arch phi4-mini-3.8b --shape prefill_32k [--masked] [--dump hlo.txt]
+
+The trip-count walk and per-instruction byte attribution live in
+``repro.roofline`` (``rank_hlo_hotspots`` / ``trip_multipliers``) — this
+script only lowers the cell and prints the rankings.
 """
 
 import os
@@ -9,21 +13,12 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
-import collections  # noqa: E402
-import re  # noqa: E402
 
-from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.configs import get_config  # noqa: E402
 from repro.configs.base import SHAPES  # noqa: E402
 from repro.launch.dryrun import lower_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.roofline.hlo_costs import (  # noqa: E402
-    COLLECTIVES,
-    _BODY,
-    _COND,
-    _shape_bytes,
-    _trip_count,
-    parse_hlo,
-)
+from repro.roofline import rank_hlo_hotspots  # noqa: E402
 
 
 def main():
@@ -41,11 +36,9 @@ def main():
     mesh = make_production_mesh(multi_pod=args.mesh == "multi")
     cfg = get_config(args.arch)
     import repro.launch.dryrun as dr
-    import jax
 
     # reproduce lower_cell but keep the compiled text
     shape = SHAPES[args.shape]
-    rec = {}
     # monkey-patch analyze to capture text
     texts = {}
     orig = dr.analyze_hlo
@@ -63,84 +56,27 @@ def main():
         with open(args.dump, "w") as f:
             f.write(text)
 
-    comps = parse_hlo(text)
+    spots = rank_hlo_hotspots(text, top=args.top)
 
-    # map computation -> trip multiplier by walking while ops from entry
-    mult = collections.defaultdict(lambda: 0.0)
-    entry = [n for n in comps if "main" in n or n.endswith(".0")]
-    from repro.roofline.hlo_costs import _entry_name
-
-    ename = _entry_name(text) or list(comps)[-1]
-
-    def walk(name, m):
-        comp = comps.get(name)
-        if comp is None or mult[name] >= m:
-            if comp is None:
-                return
-        mult[name] = max(mult[name], m)
-        for ins in comp.instrs:
-            if ins.opcode == "while":
-                b = _BODY.search(ins.rest)
-                c = _COND.search(ins.rest)
-                trips = _trip_count(comps, c.group(1).lstrip("%")) if c else 1
-                if b:
-                    walk(b.group(1).lstrip("%"), m * trips)
-            elif ins.opcode in ("call", "conditional"):
-                # fusions are costed at their boundary (Costs convention) —
-                # do NOT walk into fusion bodies for byte attribution
-                for mm in re.finditer(r"(?:calls|to_apply)=(%[\w\.\-]+)",
-                                      ins.rest):
-                    walk(mm.group(1).lstrip("%"), m)
-
-    walk(ename, 1.0)
-
-    rows = []
-    for cname, comp in comps.items():
-        m = mult.get(cname, 0.0)
-        if m <= 0:
-            continue
-        for ins in comp.instrs:
-            base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
-            if base in COLLECTIVES:
-                b = _shape_bytes(ins.type_str)
-                rows.append((b * m, base, ins.type_str[:60], m, cname[:40]))
-    rows.sort(reverse=True)
     print(f"\ntop collectives ({args.arch} {args.shape} mesh={args.mesh} "
           f"masked={args.masked}):")
-    print(f"{'bytes*trips':>12s}  {'type':<18s} {'shape':<60s} {'trips':>7s}  comp")
-    for b, t, s, m, c in rows[: args.top]:
-        print(f"{b:12.3e}  {t:<18s} {s:<60s} {m:7.0f}  {c}")
+    print(f"{'bytes*trips':>12s}  {'type':<18s} {'shape':<60s} "
+          f"{'trips':>7s}  comp")
+    for r in spots["collectives"]:
+        print(f"{r['bytes_x_trips']:12.3e}  {r['op']:<18s} "
+              f"{r['type']:<60s} {r['trips']:7.0f}  {r['computation']}")
 
-    # top memory ops (per-instruction bytes × trip multiplier)
-    from repro.roofline.hlo_costs import _instr_bytes
-
-    mrows = []
-    for cname, comp in comps.items():
-        m = mult.get(cname, 0.0)
-        if m <= 0:
-            continue
-        for ins in comp.instrs:
-            base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
-            if base in COLLECTIVES or ins.opcode in (
-                    "parameter", "constant", "tuple", "get-tuple-element",
-                    "bitcast", "while", "iota", "reshape", "broadcast"):
-                continue
-            b = _instr_bytes(comp, ins, comps)
-            if b:
-                mrows.append((b * m, ins.opcode, ins.type_str[:52], m,
-                              (ins.rest.split("op_name=")[-1][:70]
-                               if "op_name=" in ins.rest else cname[:40])))
-    mrows.sort(reverse=True)
-    print(f"\ntop memory ops:")
-    for b, t, s, m, c in mrows[: args.top]:
-        print(f"{b:12.3e}  {t:<14s} {s:<52s} {m:7.0f}  {c}")
+    print("\ntop memory ops:")
+    for r in spots["memory_ops"]:
+        print(f"{r['bytes_x_trips']:12.3e}  {r['op']:<14s} "
+              f"{r['type']:<52s} {r['trips']:7.0f}  {r['where']}")
 
     # bytes attributed to attention internals (op_name metadata) — the part
     # a Pallas flash kernel keeps in VMEM
-    attn = sum(b for b, t, s, m, c in mrows if "blockwise_attention" in c)
-    tot = sum(b for b, t, s, m, c in mrows)
+    attn = spots["attention_internal_bytes"]
+    tot = spots["instruction_bytes_total"]
     print(f"\nattention-internal bytes: {attn:.3e} of instruction total "
-          f"{tot:.3e} ({attn/max(tot,1):.1%})")
+          f"{tot:.3e} ({attn/max(tot, 1):.1%})")
 
     print("\ntotals: flops %.3e bytes %.3e coll %.3e temp %.2f GiB" % (
         rec["flops"], rec["bytes_accessed"], rec["collectives"]["total"],

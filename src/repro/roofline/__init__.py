@@ -1,4 +1,21 @@
-from repro.roofline.hlo_costs import Costs, analyze_hlo, parse_hlo
+from repro.roofline.attribution import (
+    attribute,
+    model_packed_costs,
+    profile_packed_tree,
+    rank_hlo_hotspots,
+    render_report,
+)
+from repro.roofline.hlo_costs import (
+    Costs,
+    analyze_hlo,
+    entry_name,
+    instr_bytes,
+    parse_hlo,
+    shape_bytes,
+    trip_count,
+    trip_multipliers,
+    while_parts,
+)
 from repro.roofline.hw import (
     HBM_BW,
     ICI_BW,

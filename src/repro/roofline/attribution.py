@@ -1,0 +1,301 @@
+"""Roofline attribution: measured dispatch time vs modeled kernel cost.
+
+The static cost model (``hlo_costs.py`` + ``hw.py``) predicts what a
+kernel SHOULD cost; the sampling profiler (``runtime/profiler.py``)
+measures what it DOES cost.  This module joins the two into an
+achieved-fraction-of-roofline report per (kind, scheme, M-bucket, plan):
+
+    achieved_fraction = modeled_ns / measured_ns
+
+where ``modeled_ns`` is the dominant roofline term (hw.py constants —
+TPU v5e by default, overridable for other targets; on a CPU CI box the
+fractions are tiny and only the RELATIVE ordering is meaningful).  Each
+row is labeled memory- vs compute-bound from the model and flagged when
+it achieves less than ``threshold`` of its roofline — the
+profiling-guided tuning loop the paper's compiler-level acceleration
+claims rest on (PatDNN's per-layer tuning, arXiv:2001.00138).
+
+Analytic per-dispatch model (exact for every packed GEMM scheme): each
+STORED weight element multiplies once per output row, so
+
+    flops = 2 · M · nnz(w_packed per layer)
+    bytes = packed buffers (weights + indices) + M·I activations
+            + M·O outputs
+
+which reduces to 2·M·Kp·O for tile_pattern, 2·M·K_kept·O for column and
+2·M·I·O for dense — the same numbers ``hlo_costs.analyze_hlo`` recovers
+from the lowered HLO (see tests/test_hlo_kernel_costs.py).
+
+``profile_packed_tree`` is the eager micro-profiler: it dispatches each
+packed leaf through the REAL registry seam (``dispatch_matmul`` /
+``dispatch_conv``) under a ``profiler_scope``, so the measured half of
+the join uses the exact kernels, plans and dispatch bookkeeping the
+serve path uses.
+
+``rank_hlo_hotspots`` is the offline half for whole-program HLO dumps
+(experiments/perf/diagnose.py): trip-count-aware collective and
+memory-op rankings built from the public ``hlo_costs`` helpers.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.roofline import hw
+from repro.roofline.hlo_costs import (
+    COLLECTIVES,
+    Costs,
+    entry_name,
+    instr_bytes,
+    parse_hlo,
+    shape_bytes,
+    trip_multipliers,
+)
+
+# fraction below which a kernel is flagged as leaving roofline on the
+# table; deliberately low — CPU interpret-mode CI measures host time
+# against TPU constants, so the flag only means "look here first"
+DEFAULT_THRESHOLD = 0.05
+
+# ops that are bookkeeping, not HBM traffic, in the hotspot ranking
+_SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "iota", "reshape", "broadcast")
+
+
+# ---------------------------------------------------------------------------
+# analytic per-dispatch cost model
+# ---------------------------------------------------------------------------
+
+def model_packed_costs(pt: Any, m: int) -> Costs:
+    """Modeled flops/bytes for ONE dispatch of ``pt`` at ``m`` rows.
+
+    Stacked leaves are modeled per layer (the serve scan dispatches the
+    canonical slice per step, never the stacked buffer).
+    """
+    from repro.sparse.tune import canonical_slice
+
+    canon = canonical_slice(pt)
+    itemsize = 4          # kernels accumulate f32; activations are f32 here
+    wp = canon.buf("w_packed")
+    flops = 2.0 * m * float(wp.size)
+    cols_in = int(canon.shape[-2])
+    cols_out = int(canon.shape[-1])
+    nbytes = (float(canon.packed_bytes())
+              + m * cols_in * itemsize        # activations streamed in
+              + m * cols_out * itemsize)      # outputs streamed back
+    return Costs(flops=flops, bytes=nbytes)
+
+
+# ---------------------------------------------------------------------------
+# eager micro-profiler over a packed tree
+# ---------------------------------------------------------------------------
+
+def profile_packed_tree(packed_tree: Any, ms: Sequence[int] = (8, 256), *,
+                        samples: int = 8, warmup: int = 2,
+                        sample_rate: float = 1.0,
+                        interpret: Optional[bool] = None,
+                        seed: int = 0) -> List[Dict[str, Any]]:
+    """Measure every packed leaf through the real dispatch seam.
+
+    For each leaf (canonical slice of stacked leaves) and each M in
+    ``ms``: ``warmup + samples`` eager dispatches under a
+    ``profiler_scope``, so the walls land in per-(kind, scheme, bucket,
+    plan) reservoirs.  Returns the profiler's ``report()`` rows — the
+    measured input to ``attribute``.
+    """
+    import jax
+    import numpy as np
+
+    from repro.runtime.profiler import profiler_scope
+    from repro.sparse.packed import PackedTensor
+    from repro.sparse.registry import (
+        SPARSE_SCHEMES,
+        dispatch_conv,
+        dispatch_matmul,
+    )
+    from repro.sparse.tune import canonical_slice
+
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        packed_tree, is_leaf=lambda x: isinstance(x, PackedTensor))
+        if isinstance(l, PackedTensor)]
+    rng = np.random.RandomState(seed)
+    with profiler_scope(sample_rate=sample_rate, warmup=warmup) as prof:
+        for leaf in leaves:
+            pt = canonical_slice(leaf)
+            handler = SPARSE_SCHEMES.get(pt.scheme)
+            for m in ms:
+                if handler.plan is not None:
+                    x = jax.numpy.asarray(
+                        rng.randn(int(m), int(pt.shape[-2])), "float32")
+                    for _ in range(warmup + samples):
+                        dispatch_matmul(x, pt, interpret=interpret)
+                elif handler.conv is not None:
+                    # conv wants NHWC; pick H=W covering >= m positions
+                    side = max(1, int(np.ceil(np.sqrt(m))))
+                    x = jax.numpy.asarray(
+                        rng.randn(1, side, side, int(pt.shape[-2])),
+                        "float32")
+                    for _ in range(warmup + samples):
+                        dispatch_conv(x, pt, interpret=interpret)
+    return prof.report()
+
+
+# ---------------------------------------------------------------------------
+# the measured-vs-modeled join
+# ---------------------------------------------------------------------------
+
+def attribute(profile_rows: Sequence[Dict[str, Any]], packed_tree: Any, *,
+              threshold: float = DEFAULT_THRESHOLD,
+              peak_flops: float = hw.PEAK_FLOPS_BF16,
+              hbm_bw: float = hw.HBM_BW) -> List[Dict[str, Any]]:
+    """Join profiler report rows with the analytic cost model.
+
+    One output row per measured (kind, scheme, bucket, plan): carries
+    ``measured_ns``, ``modeled_ns``, ``achieved_fraction``, the
+    memory/compute ``bound`` label, and ``flagged`` when the fraction is
+    below ``threshold``.  Engine-level walls (scheme ``engine:*``) pass
+    through with measured time only — there is no single-kernel model
+    for a whole jitted scan.
+    """
+    import jax
+
+    from repro.sparse.packed import PackedTensor
+
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        packed_tree, is_leaf=lambda x: isinstance(x, PackedTensor))
+        if isinstance(l, PackedTensor)] if packed_tree is not None else []
+    by_scheme: Dict[str, List[Any]] = {}
+    for l in leaves:
+        by_scheme.setdefault(l.scheme, []).append(l)
+
+    out: List[Dict[str, Any]] = []
+    for row in profile_rows:
+        scheme = row["scheme"]
+        rec = {
+            "kind": row["kind"], "scheme": scheme,
+            "bucket": int(row["bucket"]), "plan": row["plan"],
+            "samples": int(row.get("samples", 0)),
+            "measured_ns": float(row["measured_ns"]),
+            "bytes_per_call": float(row.get("bytes_per_call", 0.0)),
+            "modeled_ns": None, "achieved_fraction": None,
+            "bound": None, "flagged": False,
+        }
+        group = by_scheme.get(scheme)
+        if group:
+            # mean model over the scheme's distinct leaf geometries —
+            # the profiler key blends those same geometries
+            m = max(int(row["bucket"]), 1)
+            costs = [model_packed_costs(l, m) for l in group]
+            flops = sum(c.flops for c in costs) / len(costs)
+            nbytes = sum(c.bytes for c in costs) / len(costs)
+            terms = hw.RooflineTerms(
+                compute_s=flops / peak_flops,
+                memory_s=nbytes / hbm_bw,
+                collective_s=0.0)
+            modeled_ns = terms.step_s * 1e9
+            measured = max(rec["measured_ns"], 1e-9)
+            rec.update(
+                modeled_ns=modeled_ns,
+                achieved_fraction=modeled_ns / measured,
+                bound=terms.dominant,
+                model_flops=flops, model_bytes=nbytes,
+                arithmetic_intensity=flops / max(nbytes, 1.0),
+                flagged=bool(modeled_ns / measured < threshold),
+            )
+        out.append(rec)
+    out.sort(key=lambda r: (r["scheme"], r["kind"], r["bucket"], r["plan"]))
+    return out
+
+
+def render_report(rows: Sequence[Dict[str, Any]]) -> str:
+    """ASCII attribution table (benchmarks/packed_serve.py --profile and
+    launch/analyze.py print this)."""
+    lines = [
+        f"{'kind':<12s} {'scheme':<18s} {'m':>6s} {'plan':<22s} "
+        f"{'measured':>11s} {'modeled':>11s} {'roofline':>9s} "
+        f"{'bound':<8s} flag",
+    ]
+    lines.append("-" * len(lines[0]))
+    for r in rows:
+        meas = f"{r['measured_ns'] / 1e3:10.1f}u"
+        if r["modeled_ns"] is None:
+            lines.append(
+                f"{r['kind']:<12s} {r['scheme']:<18s} {r['bucket']:>6d} "
+                f"{r['plan']:<22.22s} {meas:>11s} {'-':>11s} {'-':>9s} "
+                f"{'-':<8s}")
+            continue
+        frac = r["achieved_fraction"]
+        lines.append(
+            f"{r['kind']:<12s} {r['scheme']:<18s} {r['bucket']:>6d} "
+            f"{r['plan']:<22.22s} {meas:>11s} "
+            f"{r['modeled_ns'] / 1e3:10.1f}u {frac:8.4f} "
+            f"{r['bound']:<8s} {'<-- LOW' if r['flagged'] else ''}")
+    return "\n".join(lines)
+
+
+def write_report(path: str, rows: Sequence[Dict[str, Any]],
+                 **extra: Any) -> None:
+    """Persist the attribution report (CI uploads it as an artifact)."""
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "rows": list(rows), **extra}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def read_report(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# whole-program HLO hotspots (experiments/perf/diagnose.py)
+# ---------------------------------------------------------------------------
+
+def rank_hlo_hotspots(text: str, top: int = 12) -> Dict[str, Any]:
+    """Trip-count-aware collective / memory-op rankings of an HLO dump.
+
+    Returns ``collectives`` and ``memory_ops`` rows sorted by
+    bytes × trip-multiplier, plus the bytes attributable to attention
+    internals (op_name metadata) — the part a fused Pallas flash kernel
+    would keep in VMEM.
+    """
+    comps = parse_hlo(text)
+    ename = entry_name(text) or (list(comps)[-1] if comps else "")
+    mult = trip_multipliers(comps, ename)
+
+    coll_rows, mem_rows = [], []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            base = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                    else ins.opcode)
+            if base in COLLECTIVES:
+                b = shape_bytes(ins.type_str)
+                coll_rows.append({
+                    "bytes_x_trips": b * m, "op": base,
+                    "type": ins.type_str[:60], "trips": m,
+                    "computation": cname[:40]})
+                continue
+            if ins.opcode in _SKIP_OPS:
+                continue
+            b = instr_bytes(comp, ins, comps)
+            if b:
+                where = (ins.rest.split("op_name=")[-1][:70]
+                         if "op_name=" in ins.rest else cname[:40])
+                mem_rows.append({
+                    "bytes_x_trips": b * m, "op": ins.opcode,
+                    "type": ins.type_str[:52], "trips": m, "where": where})
+    coll_rows.sort(key=lambda r: r["bytes_x_trips"], reverse=True)
+    mem_rows.sort(key=lambda r: r["bytes_x_trips"], reverse=True)
+    attn = sum(r["bytes_x_trips"] for r in mem_rows
+               if "blockwise_attention" in r["where"])
+    total = sum(r["bytes_x_trips"] for r in mem_rows)
+    return {
+        "collectives": coll_rows[:top],
+        "memory_ops": mem_rows[:top],
+        "attention_internal_bytes": attn,
+        "instruction_bytes_total": total,
+    }

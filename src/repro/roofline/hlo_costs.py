@@ -401,3 +401,74 @@ def analyze_hlo(text: str) -> Costs:
         entry = list(comps)[-1] if comps else ""
     memo: Dict[str, Costs] = {}
     return _comp_costs(comps, entry, memo)
+
+
+# ---------------------------------------------------------------------------
+# public helper API
+#
+# Promoted for external analysis tools (roofline/attribution.py,
+# experiments/perf/diagnose.py): the primitives the cost walk itself is
+# built from, so scripts can rank instructions without re-implementing
+# HLO bookkeeping or reaching for underscore names.
+# ---------------------------------------------------------------------------
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    return _shape_bytes(type_str)
+
+
+def entry_name(text: str) -> Optional[str]:
+    """Name of the module's ENTRY computation, if declared."""
+    return _entry_name(text)
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop bound of a while: largest integer constant in its condition."""
+    return _trip_count(comps, cond_name)
+
+
+def instr_bytes(comp: Computation, ins: Instr,
+                comps: Dict[str, Computation]) -> float:
+    """HBM bytes accessed by one top-level instruction (XLA-like rules)."""
+    return _instr_bytes(comp, ins, comps)
+
+
+def while_parts(ins: Instr) -> Tuple[Optional[str], Optional[str]]:
+    """(body, condition) computation names of a ``while`` instruction."""
+    b = _BODY.search(ins.rest)
+    c = _COND.search(ins.rest)
+    return (b.group(1).lstrip("%") if b else None,
+            c.group(1).lstrip("%") if c else None)
+
+
+def trip_multipliers(comps: Dict[str, Computation],
+                     entry: Optional[str] = None) -> Dict[str, float]:
+    """Execution multiplier per computation, walking ``while`` trip
+    counts and call/conditional edges from ``entry``.
+
+    Fusion bodies are deliberately NOT walked: the ``Costs`` convention
+    prices a fusion at its boundary, so attributing its internal
+    instructions as well would double-count.  Computations never reached
+    from the entry are absent (multiplier 0)."""
+    if entry is None:
+        entry = list(comps)[-1] if comps else ""
+    mult: Dict[str, float] = {}
+
+    def walk(name: str, m: float) -> None:
+        comp = comps.get(name)
+        if comp is None or mult.get(name, 0.0) >= m:
+            return
+        mult[name] = m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                body, cond = while_parts(ins)
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    walk(body, m * trips)
+            elif ins.opcode in ("call", "conditional"):
+                for mm in re.finditer(r"(?:calls|to_apply)=(%[\w\.\-]+)",
+                                      ins.rest):
+                    walk(mm.group(1).lstrip("%"), m)
+
+    walk(entry.lstrip("%"), 1.0)
+    return mult

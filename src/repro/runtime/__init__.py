@@ -1,3 +1,24 @@
+"""Runtime reliability + observability layer.
+
+PROFILER OVERHEAD CONTRACT (gated by BENCH_profiler via
+``check_regression.py``):
+
+  * DISABLED (the default — no ``profiler_scope`` active): the hooks in
+    ``sparse/registry.py`` and ``serve/engine.py`` are a single
+    attribute check.  They add ZERO dispatches, never call
+    ``block_until_ready``, and never touch traced values — the serve
+    path's dispatch counts and token streams are bit-identical to a
+    build without the profiler.
+  * SAMPLING: with a ``profiler_scope`` active, end-to-end serve
+    overhead must stay ≤ ``REPRO_MAX_PROFILER_OVERHEAD`` (default 2%).
+    Walls are taken at a deterministic stride of the configured
+    ``sample_rate``; the first ``warmup`` walls per key pay the
+    compile/transfer cost and are discarded from the reservoirs.
+
+The telemetry layer carries the same shape of contract at ≤
+``REPRO_MAX_TELEMETRY_OVERHEAD`` (see ``telemetry.py``).
+"""
+
 from repro.runtime.fault_tolerance import FaultTolerantLoop, StepResult
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.elastic import ElasticPlan, replan_mesh
@@ -8,4 +29,11 @@ from repro.runtime.telemetry import (
     get_registry,
     registry_scope,
 )
+from repro.runtime.profiler import (
+    KernelProfiler,
+    get_profiler,
+    profiler_scope,
+    set_profiler,
+)
 from repro.runtime import telemetry_export
+from repro.runtime import trace_analysis

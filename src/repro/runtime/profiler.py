@@ -1,0 +1,260 @@
+"""Sampling device-time profiler for the dispatch seam and engine calls.
+
+The serve path is jitted end to end, so per-kernel time is invisible to
+the telemetry layer: a ``decode_many`` wall blends every dispatch in the
+step.  This module measures *eager* dispatches (the unit tests, the
+``roofline/attribution.py`` micro-profiler, and any un-jitted caller of
+``dispatch_matmul``/``dispatch_conv``) plus the engine-level
+``prefill``/``decode_many`` walls, with three properties the acceptance
+gate (BENCH_profiler) enforces:
+
+  * DISABLED IS FREE — the default profiler is inert: the hooks in
+    ``sparse/registry.py`` and ``serve/engine.py`` reduce to one
+    attribute check, add ZERO dispatches, and never touch traced values
+    (token streams are bit-identical on vs off).
+  * SAMPLING IS CHEAP — when active, a deterministic stride derived from
+    ``sample_rate`` decides which calls are walled with
+    ``jax.block_until_ready``; un-sampled calls pass straight through.
+    End-to-end overhead at full sampling is gated at
+    ``REPRO_MAX_PROFILER_OVERHEAD`` (default 2%).
+  * WARMUP IS DISCARDED — the first ``warmup`` walls per key pay the
+    compile/transfer cost and are excluded from the reservoirs, so the
+    recorded distribution is steady-state device time.
+
+Samples land in per-(kind, scheme, M-bucket, plan) latency reservoirs
+(bounded rings — the profiler's memory is O(keys), not O(calls)) and are
+mirrored into the active ``MetricsRegistry``:
+
+  profiler.dispatch_seconds{kind,scheme,bucket,plan}  histogram
+  profiler.events_total{kind,scheme,bucket}           counter (eligible)
+  profiler.samples_total{kind,scheme,bucket}          counter (walled)
+  profiler.bytes_streamed_total{kind,scheme}          counter
+
+Bytes-streamed accounting: packed leaves report packed weight + index
+buffer bytes plus activation/output traffic; engine decode walls report
+the KV-cache bytes touched per chunk.  ``report()`` returns rows ready
+for ``roofline/attribution.py`` to join against the HLO cost model.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+from .telemetry import MetricsRegistry, get_registry
+
+Key = Tuple[str, str, int, str]   # (kind, scheme, m_bucket, plan)
+
+
+@dataclasses.dataclass
+class _Reservoir:
+    """Bounded ring of wall-clock samples for one profile key."""
+
+    cap: int
+    events: int = 0           # eligible calls seen (walled or not)
+    walls: int = 0            # block_until_ready walls taken (incl. warmup)
+    samples: int = 0          # walls kept after warmup discard
+    bytes_per_call: float = 0.0
+    values: List[float] = dataclasses.field(default_factory=list)
+    _next: int = 0
+
+    def add(self, seconds: float) -> None:
+        self.samples += 1
+        if len(self.values) < self.cap:
+            self.values.append(seconds)
+        else:                 # overwrite oldest — ring, not reservoir decay
+            self.values[self._next] = seconds
+            self._next = (self._next + 1) % self.cap
+
+    def quantile(self, q: float) -> float:
+        if not self.values:
+            return 0.0
+        s = sorted(self.values)
+        i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+        return s[i]
+
+
+class KernelProfiler:
+    """Sampling ``block_until_ready`` wall profiler.
+
+    ``sample_rate`` in (0, 1] maps to a deterministic stride
+    (``round(1/rate)``): no RNG, so two runs over the same call sequence
+    wall the same calls.  ``warmup`` walls per key are timed but
+    discarded.  A disabled profiler (``enabled=False``, the module
+    default) does nothing and holds no state.
+    """
+
+    def __init__(self, *, enabled: bool = True, sample_rate: float = 1.0,
+                 warmup: int = 1, reservoir: int = 256,
+                 registry: Optional[MetricsRegistry] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        if not 0.0 < sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in (0, 1]: {sample_rate}")
+        self.enabled = bool(enabled)
+        self.sample_rate = float(sample_rate)
+        self.stride = max(1, int(round(1.0 / sample_rate)))
+        self.warmup = int(warmup)
+        self.reservoir_cap = int(reservoir)
+        self._registry = registry
+        self._clock = clock
+        self._res: Dict[Key, _Reservoir] = {}
+
+    # -- state ---------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.enabled
+
+    @property
+    def registry(self) -> MetricsRegistry:
+        return self._registry if self._registry is not None else get_registry()
+
+    def reset(self) -> None:
+        self._res.clear()
+
+    def _reservoir(self, key: Key) -> _Reservoir:
+        res = self._res.get(key)
+        if res is None:
+            res = self._res[key] = _Reservoir(cap=self.reservoir_cap)
+        return res
+
+    # -- core wall -----------------------------------------------------
+    def wall(self, kind: str, fn: Callable, args: tuple, *,
+             scheme: str = "engine", bucket: int = 0, plan: str = "-",
+             nbytes: float = 0.0) -> Any:
+        """Call ``fn(*args)``; wall it with ``block_until_ready`` when the
+        per-key stride samples this event.  Returns ``fn``'s result
+        unchanged either way — the profiler never alters values."""
+        if not self.enabled:
+            return fn(*args)
+        import jax  # deferred: keep module importable without a device
+
+        key = (kind, scheme, int(bucket), plan)
+        res = self._reservoir(key)
+        res.events += 1
+        reg = self.registry
+        reg.counter("profiler.events_total", kind=kind, scheme=scheme,
+                    bucket=bucket).inc()
+        if (res.events - 1) % self.stride != 0:
+            return fn(*args)
+
+        t0 = self._clock()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        dt = self._clock() - t0
+        res.walls += 1
+        if res.walls <= self.warmup:      # compile/transfer wall — discard
+            return out
+        res.add(dt)
+        res.bytes_per_call = float(nbytes)
+        reg.histogram("profiler.dispatch_seconds", kind=kind, scheme=scheme,
+                      bucket=bucket, plan=plan).observe(dt)
+        reg.counter("profiler.samples_total", kind=kind, scheme=scheme,
+                    bucket=bucket).inc()
+        if nbytes:
+            reg.counter("profiler.bytes_streamed_total", kind=kind,
+                        scheme=scheme).inc(float(nbytes))
+        return out
+
+    def observe(self, kind: str, seconds: float, *, scheme: str = "engine",
+                bucket: int = 0, plan: str = "-",
+                nbytes: float = 0.0) -> None:
+        """Record an externally-measured wall (the caller already holds a
+        host-synced duration — e.g. the continuous engine's per-chunk
+        transfer delta).  Warmup discard still applies; sampling does not
+        (the measurement is free)."""
+        if not self.enabled:
+            return
+        key = (kind, scheme, int(bucket), plan)
+        res = self._reservoir(key)
+        res.events += 1
+        res.walls += 1
+        reg = self.registry
+        reg.counter("profiler.events_total", kind=kind, scheme=scheme,
+                    bucket=bucket).inc()
+        if res.walls <= self.warmup:
+            return
+        res.add(float(seconds))
+        res.bytes_per_call = float(nbytes)
+        reg.histogram("profiler.dispatch_seconds", kind=kind, scheme=scheme,
+                      bucket=bucket, plan=plan).observe(float(seconds))
+        reg.counter("profiler.samples_total", kind=kind, scheme=scheme,
+                    bucket=bucket).inc()
+        if nbytes:
+            reg.counter("profiler.bytes_streamed_total", kind=kind,
+                        scheme=scheme).inc(float(nbytes))
+
+    # -- dispatch-seam hook (sparse/registry.py) -----------------------
+    def wall_dispatch(self, kind: str, pt, m: int, plan: str,
+                      fn: Callable, args: tuple) -> Any:
+        """Wall one eager packed dispatch.  ``pt`` is the PackedTensor;
+        bytes streamed = packed weight + index buffers + activation in +
+        output out (the memory-roofline denominator)."""
+        from repro.sparse.tune import m_bucket  # deferred: import cycle
+
+        x = args[0]
+        itemsize = getattr(getattr(x, "dtype", None), "itemsize", 4)
+        out_cols = int(pt.shape[-1])
+        nbytes = (pt.packed_bytes()
+                  + getattr(x, "nbytes", 0)
+                  + m * out_cols * itemsize)
+        small = int(pt.meta_dict.get("small_m", 32))
+        return self.wall(kind, fn, args, scheme=pt.scheme,
+                         bucket=m_bucket(m, small), plan=plan, nbytes=nbytes)
+
+    # -- reporting -----------------------------------------------------
+    def report(self) -> List[Dict[str, Any]]:
+        """One row per (kind, scheme, bucket, plan), median-based —
+        the measured half of the roofline-attribution join."""
+        rows = []
+        for (kind, scheme, bucket, plan), res in sorted(self._res.items()):
+            if not res.values:
+                continue
+            med = res.quantile(0.5)
+            rows.append({
+                "kind": kind, "scheme": scheme, "bucket": int(bucket),
+                "plan": plan, "events": res.events, "samples": res.samples,
+                "measured_ns": med * 1e9,
+                "p10_ns": res.quantile(0.10) * 1e9,
+                "p90_ns": res.quantile(0.90) * 1e9,
+                "bytes_per_call": res.bytes_per_call,
+            })
+        return rows
+
+
+# -- module-global profiler (mirrors telemetry.get_registry) -----------
+_DISABLED = KernelProfiler(enabled=False)
+_current: KernelProfiler = _DISABLED
+
+
+def get_profiler() -> KernelProfiler:
+    """The active profiler.  Disabled (inert) unless inside
+    ``profiler_scope`` or after ``set_profiler``."""
+    return _current
+
+
+def set_profiler(prof: Optional[KernelProfiler]) -> KernelProfiler:
+    """Install ``prof`` (None restores the inert default); returns the
+    previous profiler so callers can restore it."""
+    global _current
+    prev = _current
+    _current = prof if prof is not None else _DISABLED
+    return prev
+
+
+@contextlib.contextmanager
+def profiler_scope(prof: Optional[KernelProfiler] = None,
+                   **kwargs) -> Iterator[KernelProfiler]:
+    """Activate a profiler for the dynamic extent of the block.
+
+        with profiler_scope(sample_rate=0.5, warmup=2) as prof:
+            engine.generate(reqs)
+        rows = prof.report()
+    """
+    prof = prof if prof is not None else KernelProfiler(**kwargs)
+    prev = set_profiler(prof)
+    try:
+        yield prof
+    finally:
+        set_profiler(prev)

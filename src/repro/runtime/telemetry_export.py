@@ -3,8 +3,9 @@
 Two formats:
 
   * :func:`to_prometheus` — the text exposition format scrapers expect
-    (``# TYPE`` headers, ``_bucket{le=...}`` cumulative histogram
-    series, ``_sum``/``_count``).  Metric names are sanitised from the
+    (``# HELP``/``# TYPE`` headers from :data:`METRIC_HELP`,
+    ``_bucket{le=...}`` cumulative histogram series,
+    ``_sum``/``_count``).  Metric names are sanitised from the
     registry's dotted taxonomy (``serve.ttft_seconds`` →
     ``serve_ttft_seconds``).
   * :func:`to_json` / :func:`write_json` — the registry's raw snapshot
@@ -23,7 +24,72 @@ from typing import Any, Dict, Union
 
 from .telemetry import MetricsRegistry, TRACE_SCHEMA_VERSION
 
-__all__ = ["to_json", "to_prometheus", "write_json", "write_prometheus"]
+__all__ = ["METRIC_HELP", "to_json", "to_prometheus", "write_json",
+           "write_prometheus"]
+
+# ``# HELP`` text per dotted metric name — the scraper-facing doc line.
+# Keyed by the registry taxonomy (see runtime/telemetry.py); metrics
+# without an entry get a generic pointer rather than silence, so every
+# exported family carries BOTH header lines.
+METRIC_HELP: Dict[str, str] = {
+    "serve.requests_total":
+        "Terminal request dispositions by engine and status.",
+    "serve.ttft_seconds":
+        "Time to first token: request arrival to first emitted token.",
+    "serve.tpot_seconds":
+        "Per-output-token decode time of retired requests.",
+    "serve.queue_wait_seconds":
+        "Request arrival to slot admission (scheduler queue time).",
+    "serve.chunk_seconds":
+        "Wall time of one decode micro-chunk (device + host sync).",
+    "serve.chunks_total":
+        "Decode micro-chunks dispatched.",
+    "serve.busy_slot_steps_total":
+        "Slot-steps that emitted tokens (occupancy numerator).",
+    "serve.total_slot_steps_total":
+        "Slot-steps of capacity offered (occupancy denominator).",
+    "serve.quarantined_slots_total":
+        "Batch slots quarantined after non-finite decode output.",
+    "serve.bind_fallbacks_total":
+        "Packed leaves served dense after a bind integrity fallback.",
+    "spec.rounds_total":
+        "Speculative draft-verify rounds executed.",
+    "spec.drafted_total":
+        "Tokens proposed by the drafter.",
+    "spec.accepted_total":
+        "Drafted tokens accepted by target verification.",
+    "spec.dispatches_total":
+        "Device dispatches issued by the speculative engine.",
+    "sparse.dispatch_total":
+        "Packed-kernel dispatches by kind, scheme and M-bucket "
+        "(trace-time: per compiled graph, not per step).",
+    "sparse.plan_build_total":
+        "Kernel execution plans built (jit closures), by resolved plan.",
+    "prune.iterations_total":
+        "ADMM pruning iterations completed.",
+    "prune.divergence_recoveries_total":
+        "Bounded-divergence recoveries taken by the pruning loop.",
+    "straggler.step_seconds":
+        "Observed step walls feeding the straggler median/MAD window.",
+    "straggler.events_total":
+        "Steps flagged as stragglers (deviation above threshold).",
+    "profiler.dispatch_seconds":
+        "Sampled block_until_ready walls by kind, scheme, M-bucket "
+        "and plan (warmup-discarded).",
+    "profiler.events_total":
+        "Profiler-eligible calls seen (sampled or not).",
+    "profiler.samples_total":
+        "Calls actually walled and recorded after warmup discard.",
+    "profiler.bytes_streamed_total":
+        "Bytes streamed by sampled calls: packed weights + indices, "
+        "activations, outputs, KV bytes per chunk.",
+}
+
+
+def _help_text(dotted: str) -> str:
+    return METRIC_HELP.get(
+        dotted, "No description registered; see the metric taxonomy in "
+                "repro/runtime/telemetry.py.")
 
 
 def _snap(reg: Union[MetricsRegistry, Dict[str, Any]]) -> Dict[str, Any]:
@@ -51,22 +117,24 @@ def to_prometheus(reg: Union[MetricsRegistry, Dict[str, Any]]) -> str:
     lines = []
     typed = set()
 
-    def header(name: str, kind: str) -> None:
+    def header(name: str, kind: str, dotted: str) -> None:
         if name not in typed:
             typed.add(name)
+            # HELP precedes TYPE, once per family (exposition format)
+            lines.append(f"# HELP {name} {_help_text(dotted)}")
             lines.append(f"# TYPE {name} {kind}")
 
     for c in snap.get("counters", ()):
         name = _name(c["name"])
-        header(name, "counter")
+        header(name, "counter", c["name"])
         lines.append(f"{name}{_labels(c['labels'])} {c['value']:g}")
     for g in snap.get("gauges", ()):
         name = _name(g["name"])
-        header(name, "gauge")
+        header(name, "gauge", g["name"])
         lines.append(f"{name}{_labels(g['labels'])} {g['value']:g}")
     for h in snap.get("histograms", ()):
         name = _name(h["name"])
-        header(name, "histogram")
+        header(name, "histogram", h["name"])
         cum = 0
         for edge, n in zip(h["edges"], h["counts"]):
             cum += n

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.runtime.profiler import get_profiler
 from repro.runtime.telemetry import MetricsRegistry, Telemetry
 from repro.serve.sampler import (
     fold_key_grid,
@@ -158,6 +159,13 @@ def _pad_prompts(requests: List[Request], batch_size: int):
     return prompts, slot_mask
 
 
+def _tree_nbytes(tree: Any) -> int:
+    """Total device bytes of a pytree's array leaves (profiler
+    bytes-streamed accounting: KV caches, weight trees)."""
+    return sum(int(getattr(l, "nbytes", 0))
+               for l in jax.tree_util.tree_leaves(tree))
+
+
 def _stochastic_rows(requests: List[Request], batch_size: int,
                      engine_key: jax.Array):
     """Per-slot temperatures and per-REQUEST base keys for a chunk:
@@ -239,6 +247,7 @@ class ServeEngine:
         draft_k: int = 4,
         draft_model: Optional[LM] = None,
         telemetry: Optional[Telemetry] = None,
+        straggler: Optional[Any] = None,
     ):
         """``params`` may be a raw params tree, a ``PruneResult``, or a
         ``sparse.PrunedArtifact``. With ``packed=True`` (artifact/result
@@ -287,7 +296,13 @@ class ServeEngine:
         bit-identical with it on or off). Note the chunked engine has a
         SINGLE host sync per batch (the one token-block transfer), so
         its lifecycle timings are batch-granular: TTFT is measured from
-        batch start to that sync."""
+        batch start to that sync.
+
+        ``straggler`` — optional ``runtime.StragglerMonitor``: the engine
+        records each batch's decode wall into it and, when a batch is
+        flagged, emits a ``straggler`` tracer event (when tracing).
+        Forwarded to the ``SpeculativeEngine`` when ``speculative`` is
+        set, so speculative dispatch walls are monitored too."""
         self.model = model
         self.params, self.bind_report = _resolve_params(model, params,
                                                         packed)
@@ -295,6 +310,9 @@ class ServeEngine:
         self.max_seq_len = max_seq_len
         self.sampler = sampler
         self.telemetry = telemetry
+        self.straggler = straggler
+        self._batches = 0
+        self._nbytes: Dict[Any, int] = {}   # profiler bytes, keyed by shape
         self._key = jax.random.PRNGKey(seed)
         self.speculative = None
         if speculative is not None:
@@ -304,7 +322,7 @@ class ServeEngine:
                 model, self.params, speculative, batch_size=batch_size,
                 max_seq_len=max_seq_len, draft_k=draft_k,
                 draft_model=draft_model, flash=flash, seed=seed,
-                telemetry=telemetry,
+                telemetry=telemetry, straggler=straggler,
             )
         backend = jax.default_backend()
         bake = (backend == "cpu") if bake_weights is None else bool(
@@ -375,12 +393,28 @@ class ServeEngine:
 
     def _generate_batch(self, requests: List[Request]) -> List[Result]:
         tel = self.telemetry
+        straggler = self.straggler
         clock = tel.metrics.clock if tel is not None else time.perf_counter
-        t_b0 = clock() if tel is not None else 0.0
+        timed = tel is not None or straggler is not None
+        t_b0 = clock() if timed else 0.0
         B = self.batch_size
         n = len(requests)
         prompts, slot_mask = _pad_prompts(requests, B)
-        cache, logits = self._prefill(self.params, prompts)
+        prof = get_profiler()
+        if prof.active:
+            from repro.sparse.tune import m_bucket
+
+            if "params" not in self._nbytes:   # shape-fixed per engine
+                self._nbytes["params"] = _tree_nbytes(self.params)
+            # engine-level wall: the whole jitted prefill, keyed by its
+            # GEMM row-count bucket B·S (the profiler never alters values)
+            cache, logits = prof.wall(
+                "prefill", self._prefill, (self.params, prompts),
+                scheme="engine:chunked",
+                bucket=m_bucket(B * int(prompts.shape[1])),
+                nbytes=self._nbytes["params"])
+        else:
+            cache, logits = self._prefill(self.params, prompts)
         # scan length is trimmed per chunk: this chunk's longest request,
         # not a global engine-wide maximum
         max_new = max(r.max_new_tokens for r in requests)
@@ -396,17 +430,37 @@ class ServeEngine:
             tok0 = temperature_sample(logits, step_keys[0], temps) \
                 * slot_mask[:, None]
             if max_new > 1:
-                _, rest = self._decode_many_temp(
-                    self.params, cache, tok0, slot_mask, temps,
-                    step_keys[1:], max_new - 1)
+                dargs = (self.params, cache, tok0, slot_mask, temps,
+                         step_keys[1:], max_new - 1)
+                if prof.active:
+                    ck = ("cache", B, int(prompts.shape[1]))
+                    if ck not in self._nbytes:
+                        self._nbytes[ck] = _tree_nbytes(cache)
+                    _, rest = prof.wall(
+                        "decode_many", self._decode_many_temp, dargs,
+                        scheme="engine:chunked", bucket=m_bucket(B),
+                        nbytes=self._nbytes[ck] * (max_new - 1))
+                else:
+                    _, rest = self._decode_many_temp(*dargs)
                 toks = jnp.concatenate([tok0, rest], axis=1)
             else:
                 toks = tok0
         else:
             tok0 = self.sampler(logits) * slot_mask[:, None]
             if max_new > 1:
-                _, rest = self._decode_many(self.params, cache, tok0,
-                                            slot_mask, max_new - 1)
+                dargs = (self.params, cache, tok0, slot_mask, max_new - 1)
+                if prof.active:
+                    # KV bytes touched per chunk: the scan streams the
+                    # whole cache every step
+                    ck = ("cache", B, int(prompts.shape[1]))
+                    if ck not in self._nbytes:
+                        self._nbytes[ck] = _tree_nbytes(cache)
+                    _, rest = prof.wall(
+                        "decode_many", self._decode_many, dargs,
+                        scheme="engine:chunked", bucket=m_bucket(B),
+                        nbytes=self._nbytes[ck] * (max_new - 1))
+                else:
+                    _, rest = self._decode_many(*dargs)
                 toks = jnp.concatenate([tok0, rest], axis=1)  # (B, max_new)
             else:
                 toks = tok0
@@ -420,6 +474,16 @@ class ServeEngine:
                        r.eos_id))
             for j, r in enumerate(requests)
         ]
+        if straggler is not None:
+            # batch decode wall into the straggler window; a flagged
+            # batch becomes a tracer event, not just a counter
+            self._batches += 1
+            ev = straggler.record(self._batches, max(clock() - t_b0, 0.0))
+            if ev is not None and tel is not None and tel.tracer is not None:
+                tel.tracer.event(
+                    "straggler", ts=clock(), engine="chunked", step=ev.step,
+                    seconds=ev.seconds, median=ev.median,
+                    deviation=ev.deviation)
         if tel is not None:
             # batch-granular lifecycle: the transfer above is the single
             # sync, so first-token time == batch-done time for every
@@ -819,7 +883,14 @@ class ContinuousEngine:
             if self.straggler is not None:
                 # per-chunk watchdog: the transfer above synced the chunk,
                 # so the delta is real device+host time for these K steps
-                self.straggler.record(sched.chunks, dt_chunk)
+                ev = self.straggler.record(sched.chunks, dt_chunk)
+                if ev is not None and tracer is not None:
+                    # flagged chunks land in the trace too — the analyzer
+                    # correlates them with the stalls they explain
+                    tracer.event(
+                        "straggler", ts=t_end, engine=ENG, step=ev.step,
+                        seconds=ev.seconds, median=ev.median,
+                        deviation=ev.deviation)
             chunk_idx = sched.chunks
             busy0 = sched.busy_slot_steps
             finished = sched.absorb_chunk(toks_np, K,
@@ -829,6 +900,18 @@ class ContinuousEngine:
             c_busy.inc(busy_d)
             c_total.inc(self.batch_size * K)
             h_chunk.observe(dt_chunk)
+            prof = get_profiler()
+            if prof.active:
+                # the transfer already synced this chunk: record the
+                # measured wall passively (no extra block, no dispatch)
+                from repro.sparse.tune import m_bucket
+
+                if not hasattr(self, "_cache_nbytes"):  # shape-fixed
+                    self._cache_nbytes = _tree_nbytes(cache)
+                prof.observe("decode_many", dt_chunk,
+                             scheme="engine:continuous",
+                             bucket=m_bucket(self.batch_size),
+                             nbytes=self._cache_nbytes * K)
             if tracer is not None:
                 # busy/steps/batch make per-chunk (and run-aggregate)
                 # occupancy recomputable from the trace alone

@@ -529,7 +529,14 @@ class SpeculativeEngine:
                 self.stats["dispatches"] += 1
                 dt_disp = max(self._now() - t_disp, 0.0)
                 if self.straggler is not None:
-                    self.straggler.record(self.stats["dispatches"], dt_disp)
+                    ev = self.straggler.record(self.stats["dispatches"],
+                                               dt_disp)
+                    if ev is not None and tracer is not None:
+                        tracer.event(
+                            "straggler", ts=self._now(),
+                            engine="speculative", step=ev.step,
+                            seconds=ev.seconds, median=ev.median,
+                            deviation=ev.deviation)
                 if tracer is not None:
                     tracer.span_record(
                         "spec_dispatch", ts=t_disp, dur=dt_disp,
@@ -566,7 +573,14 @@ class SpeculativeEngine:
             self.stats["dispatches"] += 1
             dt_disp = max(self._now() - t_disp, 0.0)
             if self.straggler is not None:
-                self.straggler.record(self.stats["dispatches"], dt_disp)
+                ev = self.straggler.record(self.stats["dispatches"], dt_disp)
+                if ev is not None and tracer is not None:
+                    # straggling dispatches become trace events (not just
+                    # stats counters) so offline analysis sees them
+                    tracer.event(
+                        "straggler", ts=self._now(), engine="speculative",
+                        step=ev.step, seconds=ev.seconds, median=ev.median,
+                        deviation=ev.deviation)
             if tracer is not None:
                 tracer.span_record(
                     "spec_dispatch", ts=t_disp, dur=dt_disp,

@@ -90,6 +90,7 @@ from repro.kernels.pattern_gemm import (
     pack_tile_pattern_blocked as _pack_tile_blocked,
 )
 from repro.kernels.pattern_gemm import pattern_gemm as _pattern_gemm
+from repro.runtime import profiler as _profiler
 from repro.runtime import telemetry as _telemetry
 from repro.sparse import tune as _tune
 from repro.sparse.packed import PackedTensor
@@ -213,6 +214,13 @@ def _count_plan_build(kind: str, pt: PackedTensor, plan: "_tune.Plan"):
         plan=plan.to_str()).inc()
 
 
+def _plan_label(pt: PackedTensor, kind: str, M: int) -> str:
+    """Plan tag for profiler keys — meta lookup only (never triggers an
+    autotune search from inside the profiling hook)."""
+    plan = _tune.plan_from_meta(pt, kind, M)
+    return plan.to_str() if plan is not None else "heuristic"
+
+
 def _plan_key(pt: PackedTensor, M: int, dtype, has_bias: bool,
               activation: Optional[str], interpret: bool, kind: str) -> Tuple:
     bufs = tuple((n, tuple(b.shape), str(b.dtype))
@@ -246,6 +254,14 @@ def dispatch_matmul(x: jnp.ndarray, pt: PackedTensor, *,
         if not _tune.resolution_deferred(pt, "matmul", x.shape[0],
                                          interpret):
             _PLAN_CACHE[key] = fn
+    prof = _profiler.get_profiler()
+    if prof.active and not isinstance(x, jax.core.Tracer):
+        # eager dispatch only: under a jit trace this runs at TRACE time
+        # (walling a tracer is meaningless and block_until_ready would
+        # fail).  The wall adds a host sync, never a dispatch.
+        return prof.wall_dispatch("matmul", pt, int(x.shape[0]),
+                                  _plan_label(pt, "matmul", x.shape[0]),
+                                  fn, (x, pt, bias))
     return fn(x, pt, bias)
 
 
@@ -261,6 +277,14 @@ def dispatch_conv(x: jnp.ndarray, pt: PackedTensor, *,
     handler = SPARSE_SCHEMES.get(pt.scheme)
     if handler.conv is None:
         raise TypeError(f"scheme {pt.scheme!r} has no conv dispatch")
+    prof = _profiler.get_profiler()
+    if prof.active and not isinstance(x, jax.core.Tracer):
+        fn = lambda x_, pt_, bias_: handler.conv(
+            x_, pt_, bias=bias_, activation=activation, interpret=interpret)
+        m = int(np.prod(x.shape[:-1]))
+        return prof.wall_dispatch("conv", pt, m,
+                                  _plan_label(pt, "conv", m), fn,
+                                  (x, pt, bias))
     return handler.conv(x, pt, bias=bias, activation=activation,
                         interpret=interpret)
 

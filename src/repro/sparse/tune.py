@@ -317,9 +317,15 @@ def _time_candidates(fns: Dict[str, Any], iters: int) -> Dict[str, float]:
     return {n: float(np.median(ts)) for n, ts in samples.items()}
 
 
-def _canonical_slice(pt: PackedTensor) -> PackedTensor:
+def canonical_slice(pt: PackedTensor) -> PackedTensor:
     """Layer-0 slice of a scan-stacked leaf (plans apply to every layer —
-    all layers of a stacked leaf share one geometry)."""
+    all layers of a stacked leaf share one geometry). Public: the
+    profiler/attribution layer dispatches per-layer views of stacked
+    leaves exactly as the serve scan does."""
+    return _canonical_slice(pt)
+
+
+def _canonical_slice(pt: PackedTensor) -> PackedTensor:
     n = pt.stacked
     if not n:
         return pt

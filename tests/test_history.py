@@ -1,0 +1,213 @@
+"""Perf-history ledger (benchmarks/history.py) and the trend gate
+(``check_regression.py --against-history``).
+
+The ledger is append-only JSONL keyed by (bench_table, row identity);
+the trend gate compares each numeric-threshold metric against the
+median of its last N recorded runs, with a relative margin floored at
+the fixed gate's own scale.  These tests pin the tolerant-reader edges
+(truncated tails, garbage lines), the baseline arithmetic, and the
+warming-up / drift / within-margin behaviors of the gate itself.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import pytest
+
+_BENCH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks")
+if _BENCH not in sys.path:
+    sys.path.insert(0, _BENCH)
+
+import check_regression as cr  # noqa: E402
+import history  # noqa: E402
+
+
+def _rows(ts, value, *, n=1):
+    return [{"bench": "b", "mode": "on", "timestamp": ts + i,
+             "git_sha": "abc", "metric": value} for i in range(n)]
+
+
+class TestLedger:
+    def test_append_load_roundtrip(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        n = history.append("BENCH_x", _rows(100.0, 1.5), path=path)
+        n += history.append("BENCH_x", _rows(200.0, 2.5), path=path)
+        assert n == 2
+        entries = history.load(path)
+        assert [e["timestamp"] for e in entries] == [100.0, 200.0]
+        assert all(e["bench_table"] == "BENCH_x" for e in entries)
+
+    def test_load_tolerates_garbage_and_truncation(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        history.append("BENCH_x", _rows(1.0, 1.0), path=path)
+        with open(path, "a") as f:
+            f.write("not json at all\n")
+            f.write('{"bench_table": "BENCH_x", "timestamp": 2.0}\n')
+            f.write('{"bench_table": "BENCH_x", "timest')   # torn write
+        entries = history.load(path)
+        assert len(entries) == 2        # garbage + torn tail dropped
+        assert entries[-1]["timestamp"] == 2.0
+
+    def test_load_missing_path_is_empty(self, tmp_path):
+        assert history.load(str(tmp_path / "absent.jsonl")) == []
+
+    def test_row_key_uses_identity_fields_only(self):
+        a = {"bench": "b", "mode": "on", "timestamp": 1.0, "seconds": 9}
+        b = {"bench": "b", "mode": "on", "timestamp": 2.0, "seconds": 3}
+        c = {"bench": "b", "mode": "off", "timestamp": 1.0}
+        assert history.row_key(a) == history.row_key(b)
+        assert history.row_key(a) != history.row_key(c)
+
+    def test_series_filters_non_numeric(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        history.append("BENCH_x", [
+            {"bench": "b", "timestamp": 3.0, "m": 3.0},
+            {"bench": "b", "timestamp": 1.0, "m": 1.0},
+            {"bench": "b", "timestamp": 2.0, "m": True},     # bool is
+            {"bench": "b", "timestamp": 4.0, "m": "nope"},   # not a value
+        ], path=path)
+        entries = history.load(path)
+        key = history.row_key({"bench": "b"})
+        pts = history.series(entries, "BENCH_x", key, "m")
+        assert pts == [(1.0, 1.0), (3.0, 3.0)]
+
+    def test_rolling_baseline_median(self):
+        pts = [(float(i), v) for i, v in enumerate([1.0, 9.0, 2.0, 3.0])]
+        assert history.rolling_baseline(pts, window=3) == 3.0
+        assert history.rolling_baseline(pts, window=2) == 2.5
+        # window larger than the series uses everything
+        assert history.rolling_baseline(pts, window=99) == 2.5
+
+    def test_distinct_runs_per_table(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        history.append("BENCH_x", _rows(1.0, 1.0, n=3), path=path)
+        history.append("BENCH_y", _rows(1.0, 1.0), path=path)
+        entries = history.load(path)
+        assert history.distinct_runs(entries, "BENCH_x") == 3
+        assert history.distinct_runs(entries, "BENCH_y") == 1
+        assert history.distinct_runs(entries) == 3   # stamps overlap
+
+    def test_enabled_env_toggle(self, monkeypatch):
+        monkeypatch.delenv("REPRO_HISTORY", raising=False)
+        assert history.enabled()
+        monkeypatch.setenv("REPRO_HISTORY", "0")
+        assert not history.enabled()
+
+    def test_cli_append_and_show(self, tmp_path, capsys):
+        bench = tmp_path / "BENCH_demo.json"
+        bench.write_text(json.dumps(_rows(5.0, 1.0, n=2)))
+        path = str(tmp_path / "h.jsonl")
+        assert history.main(["--append", str(bench), "--path", path]) == 0
+        assert history.main(["--show", "--path", path]) == 0
+        out = capsys.readouterr().out
+        assert "appended 2 rows" in out
+        assert "BENCH_demo" in out
+
+
+# ---------------------------------------------------------------------------
+# the trend gate
+# ---------------------------------------------------------------------------
+
+_SPEC = cr.GateSpec(
+    name="demo", path_flag="--demo-path", key_fields=("mode",),
+    required=(("on",),),
+    checks=(cr.Check(metric="tokens_per_s", op=">=", row=("on",),
+                     default=100.0, why="throughput floor"),
+            cr.Check(metric="overhead_ratio", op="<=", row=("on",),
+                     default=0.02, why="overhead ceiling"),
+            cr.Check(metric="ok", op="truthy", row=("on",),
+                     why="ignored by the trend gate")),
+)
+
+
+def _args(path, window=5, margin=None):
+    return argparse.Namespace(history_path=path, history_window=window,
+                              history_margin=margin, against_history=True)
+
+
+def _seed(path, runs):
+    """One BENCH_demo row per (timestamp, tokens_per_s, overhead) run."""
+    for ts, tps, ov in runs:
+        history.append("BENCH_demo", [{
+            "bench": "demo", "mode": "on", "timestamp": ts,
+            "tokens_per_s": tps, "overhead_ratio": ov, "ok": True,
+        }], path=path)
+
+
+class TestTrendGate:
+    def test_warming_up_below_two_runs(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.01)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 2.0,
+                            "tokens_per_s": 10.0}}
+        failures, note = cr.history_failures(_SPEC, by_key, _args(path))
+        assert failures == []
+        assert "warming up" in note
+
+    def test_within_margin_passes(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.010), (2.0, 520.0, 0.012)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 480.0, "overhead_ratio": 0.013}}
+        failures, note = cr.history_failures(_SPEC, by_key, _args(path))
+        assert failures == []
+        assert "2 metric(s)" in note
+
+    def test_throughput_drift_fails(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.01), (2.0, 510.0, 0.01)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 300.0,       # −41% vs median
+                            "overhead_ratio": 0.01}}
+        failures, _ = cr.history_failures(_SPEC, by_key, _args(path))
+        assert len(failures) == 1
+        assert "tokens_per_s" in failures[0]
+        assert "fell below" in failures[0]
+
+    def test_overhead_rise_fails(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.010), (2.0, 500.0, 0.012)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 500.0,
+                            "overhead_ratio": 0.5}}      # way up
+        failures, _ = cr.history_failures(_SPEC, by_key, _args(path))
+        assert len(failures) == 1
+        assert "overhead_ratio" in failures[0]
+        assert "rose above" in failures[0]
+
+    def test_slack_floored_at_fixed_gate_scale(self, tmp_path):
+        # near-zero baseline: jitter below the fixed threshold's scale
+        # (default 0.02 → slack ≥ 0.2·0.02 = 0.004) must NOT fail
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.0001), (2.0, 500.0, 0.0002)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 500.0,
+                            "overhead_ratio": 0.003}}    # 20x baseline
+        failures, _ = cr.history_failures(_SPEC, by_key, _args(path))
+        assert failures == []
+
+    def test_current_run_excluded_from_baseline(self, tmp_path):
+        # the current row's own ledger entry (same timestamp) must not
+        # dilute the baseline it is judged against
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.01), (2.0, 500.0, 0.01),
+                     (3.0, 100.0, 0.01)])                # this run, slow
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 100.0, "overhead_ratio": 0.01}}
+        failures, _ = cr.history_failures(_SPEC, by_key, _args(path))
+        assert any("tokens_per_s" in f for f in failures)
+
+    def test_margin_override(self, tmp_path):
+        path = str(tmp_path / "h.jsonl")
+        _seed(path, [(1.0, 500.0, 0.01), (2.0, 500.0, 0.01)])
+        by_key = {("on",): {"bench": "demo", "mode": "on", "timestamp": 3.0,
+                            "tokens_per_s": 430.0, "overhead_ratio": 0.01}}
+        # −14%: fails at 10% margin, passes at the 20% default
+        failures, _ = cr.history_failures(_SPEC, by_key,
+                                          _args(path, margin=0.1))
+        assert failures
+        failures, _ = cr.history_failures(_SPEC, by_key, _args(path))
+        assert failures == []

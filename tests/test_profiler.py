@@ -1,0 +1,259 @@
+"""Kernel profiler + roofline attribution (ISSUE-10), in test form.
+
+The contract from ``runtime/__init__.py``:
+
+  * DISABLED IS FREE — the default profiler is inert: dispatch hooks
+    pass straight through, record nothing, add nothing to the registry,
+    and traced (jitted) dispatches are never walled even when a scope
+    is active;
+  * SAMPLING IS DETERMINISTIC — a fixed stride from ``sample_rate``
+    (no RNG), warmup walls timed but discarded from the reservoirs;
+  * VALUES ARE UNTOUCHED — eager dispatch results and engine token
+    streams are bit-identical profiled vs not;
+  * ATTRIBUTION JOINS — ``roofline/attribution.py`` turns profiler rows
+    plus the analytic packed-GEMM cost model into achieved-roofline
+    fractions, memory/compute-bound labels, and below-threshold flags.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import DEFAULT_EXCLUDE, PruneConfig, greedy_prune
+from repro.models import build_model
+from repro.roofline import attribution as attr
+from repro.runtime.profiler import (
+    KernelProfiler,
+    get_profiler,
+    profiler_scope,
+    set_profiler,
+)
+from repro.runtime.telemetry import MetricsRegistry
+from repro.core.schemes import LayerSpec
+from repro.serve import Request, ServeEngine
+from repro.sparse.registry import (
+    dispatch_matmul,
+    dispatch_stats,
+    dispatch_stats_scope,
+    handler_for,
+)
+
+
+def _rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@pytest.fixture()
+def tile_leaf():
+    spec = LayerSpec(scheme="tile_pattern", tile_block_p=64,
+                     tile_group_q=8, tile_keep=4)
+    w = spec.project(_rand(3, (64, 128)))
+    return handler_for("tile_pattern").pack(w, spec), w
+
+
+# ---------------------------------------------------------------------------
+# core sampling mechanics
+# ---------------------------------------------------------------------------
+
+class TestProfilerCore:
+    def test_default_is_inert(self):
+        prof = get_profiler()
+        assert not prof.active
+        out = prof.wall("matmul", lambda a: a + 1, (1,))
+        assert out == 2
+        assert prof.report() == []
+
+    def test_sample_rate_validated(self):
+        with pytest.raises(ValueError):
+            KernelProfiler(sample_rate=0.0)
+        with pytest.raises(ValueError):
+            KernelProfiler(sample_rate=1.5)
+
+    def test_deterministic_stride_and_warmup(self):
+        reg = MetricsRegistry()
+        prof = KernelProfiler(sample_rate=0.5, warmup=1, registry=reg)
+        assert prof.stride == 2
+        for _ in range(8):
+            prof.wall("matmul", lambda: jnp.zeros(4), (),
+                      scheme="s", bucket=32, plan="p", nbytes=100.0)
+        rows = prof.report()
+        assert len(rows) == 1
+        row = rows[0]
+        # 8 eligible events; stride 2 walls events 1,3,5,7; warmup
+        # discards the first wall -> 3 recorded samples
+        assert row["events"] == 8
+        assert row["samples"] == 3
+        assert row["measured_ns"] > 0
+        labels = {"kind": "matmul", "scheme": "s", "bucket": "32"}
+        assert reg.value("profiler.events_total", **labels) == 8
+        assert reg.value("profiler.samples_total", **labels) == 3
+        # bytes accounted only for recorded samples
+        assert reg.value("profiler.bytes_streamed_total",
+                         kind="matmul", scheme="s") == 300.0
+
+    def test_observe_skips_warmup_not_stride(self):
+        prof = KernelProfiler(sample_rate=0.25, warmup=2,
+                              registry=MetricsRegistry())
+        for _ in range(5):
+            prof.observe("decode_many", 0.01, scheme="engine:chunked",
+                         bucket=8, plan="-", nbytes=10.0)
+        (row,) = prof.report()
+        assert row["events"] == 5
+        assert row["samples"] == 3        # 5 observed - 2 warmup
+
+    def test_scope_restores_previous(self):
+        before = get_profiler()
+        with profiler_scope(sample_rate=1.0) as prof:
+            assert get_profiler() is prof
+            with profiler_scope(KernelProfiler(enabled=False)):
+                assert not get_profiler().active
+            assert get_profiler() is prof
+        assert get_profiler() is before
+
+    def test_set_profiler_returns_previous(self):
+        before = get_profiler()
+        prof = KernelProfiler()
+        assert set_profiler(prof) is before
+        assert set_profiler(before) is prof
+
+
+# ---------------------------------------------------------------------------
+# the dispatch-seam hook
+# ---------------------------------------------------------------------------
+
+class TestDispatchHook:
+    def test_eager_dispatch_recorded_and_values_untouched(self, tile_leaf):
+        pt, w = tile_leaf
+        x = _rand(5, (16, 64))
+        y_plain = dispatch_matmul(x, pt, interpret=True)
+        with profiler_scope(sample_rate=1.0, warmup=0) as prof:
+            y_prof = dispatch_matmul(x, pt, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y_plain),
+                                      np.asarray(y_prof))
+        (row,) = [r for r in prof.report() if r["kind"] == "matmul"]
+        assert row["scheme"] == "tile_pattern"
+        assert row["events"] == 1 and row["samples"] == 1
+        assert row["bytes_per_call"] > pt.packed_bytes()
+
+    def test_traced_dispatch_never_walled(self, tile_leaf):
+        pt, _ = tile_leaf
+        x = _rand(6, (8, 64))
+
+        with profiler_scope(sample_rate=1.0, warmup=0) as prof:
+            y = jax.jit(
+                lambda x, pt: dispatch_matmul(x, pt, interpret=True)
+            )(x, pt)
+            jax.block_until_ready(y)
+        assert prof.report() == []        # hook skipped at trace time
+
+    def test_dispatch_counts_identical_on_vs_off(self, tile_leaf):
+        pt, _ = tile_leaf
+        x = _rand(7, (8, 64))
+
+        def traced():
+            jax.block_until_ready(jax.jit(
+                lambda x, pt: dispatch_matmul(x, pt, interpret=True)
+            )(x, pt))
+
+        with dispatch_stats_scope():
+            traced()
+            off = dict(dispatch_stats())
+        with dispatch_stats_scope():
+            with profiler_scope(sample_rate=1.0):
+                traced()
+            on = dict(dispatch_stats())
+        assert off == on
+
+
+# ---------------------------------------------------------------------------
+# engine-level walls
+# ---------------------------------------------------------------------------
+
+class TestEngineWalls:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = ModelConfig(name="tiny", family="dense", num_layers=2,
+                          d_model=32, num_heads=4, num_kv_heads=2,
+                          d_ff=64, vocab_size=64, param_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        reqs = [Request(uid=i, prompt=jnp.arange(8 + i) % cfg.vocab_size,
+                        max_new_tokens=5) for i in range(3)]
+        return model, params, reqs
+
+    def test_walls_recorded_tokens_identical(self, setup):
+        model, params, reqs = setup
+        eng = ServeEngine(model, params, batch_size=4, max_seq_len=64)
+        plain = [r.tokens for r in eng.generate(reqs)]
+        with profiler_scope(sample_rate=1.0, warmup=0) as prof:
+            profiled = [r.tokens for r in eng.generate(reqs)]
+        assert plain == profiled
+        kinds = {r["kind"]: r for r in prof.report()}
+        assert set(kinds) == {"prefill", "decode_many"}
+        for row in kinds.values():
+            assert row["scheme"] == "engine:chunked"
+            assert row["samples"] == 1
+            assert row["bytes_per_call"] > 0
+        # prefill streams the params; decode streams KV bytes per chunk
+        assert kinds["prefill"]["bucket"] >= kinds["decode_many"]["bucket"]
+
+
+# ---------------------------------------------------------------------------
+# roofline attribution
+# ---------------------------------------------------------------------------
+
+class TestAttribution:
+    def _artifact(self):
+        cfg = ModelConfig(name="t", family="dense", num_layers=2,
+                          d_model=128, num_heads=4, num_kv_heads=2,
+                          head_dim=32, d_ff=256, vocab_size=512,
+                          param_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        pcfg = PruneConfig(scheme="tile_pattern",
+                           exclude=tuple(DEFAULT_EXCLUDE),
+                           overrides={".*": {"tile_block_p": 64,
+                                             "tile_group_q": 8,
+                                             "tile_keep": 4}})
+        return greedy_prune(params, pcfg).to_artifact(arch="t").pack()
+
+    def test_model_packed_costs_exact(self, tile_leaf):
+        pt, w = tile_leaf
+        m = 32
+        costs = attr.model_packed_costs(pt, m)
+        # 4-of-8 lanes on a (64, 128) leaf: nnz = 64/8*4 * 128
+        assert costs.flops == 2.0 * m * (64 // 8 * 4) * 128
+        assert costs.bytes > pt.packed_bytes()
+
+    def test_profile_and_attribute_cover_schemes(self):
+        artifact = self._artifact()
+        rows = attr.profile_packed_tree(artifact.packed, ms=(8,),
+                                        samples=2, warmup=1,
+                                        interpret=True)
+        report = attr.attribute(rows, artifact.packed, threshold=0.05)
+        assert report, "no attribution rows"
+        schemes = {r["scheme"] for r in report}
+        assert "tile_pattern" in schemes
+        for r in report:
+            assert r["measured_ns"] > 0
+            assert r["modeled_ns"] is not None
+            assert 0 < r["achieved_fraction"]
+            assert r["bound"] in ("memory", "compute", "collective")
+            assert isinstance(r["flagged"], bool)
+        text = attr.render_report(report)
+        assert "roofline" in text and "tile_pattern" in text
+
+    def test_report_roundtrip(self, tmp_path):
+        artifact = self._artifact()
+        rows = attr.profile_packed_tree(artifact.packed, ms=(8,),
+                                        samples=2, warmup=1,
+                                        interpret=True)
+        report = attr.attribute(rows, artifact.packed)
+        path = str(tmp_path / "attribution.json")
+        attr.write_report(path, report, extra_field=7)
+        doc = attr.read_report(path)
+        assert doc["schema"] == 1
+        assert doc["extra_field"] == 7
+        assert doc["rows"] == report

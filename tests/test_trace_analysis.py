@@ -1,0 +1,174 @@
+"""Offline trace analysis (runtime/trace_analysis.py): the operator view.
+
+A traced ``ContinuousEngine`` run is the ground truth: the analyzer's
+per-request critical paths (queue-wait → prefill → decode → stall), SLO
+percentiles and occupancy must be derivable from the trace alone and —
+the acceptance bar — CROSS-CHECK EXACTLY against the registry's
+histograms for the same run (same engine clock, floats preserved
+through JSON).  Synthetic traces pin the breakdown arithmetic, the
+timeline rendering, and the tolerant-reader edges.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime import trace_analysis as ta
+from repro.runtime.telemetry import MetricsRegistry, Telemetry, Tracer
+from repro.serve import ContinuousEngine, Request
+
+
+@pytest.fixture(scope="module")
+def lm():
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2,
+                      d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=256, vocab_size=512, param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def traced_run(lm, tmp_path_factory):
+    cfg, model, params = lm
+    path = str(tmp_path_factory.mktemp("trace") / "trace.jsonl")
+    reg = MetricsRegistry()
+    tel = Telemetry(metrics=reg, trace_path=path)
+    eng = ContinuousEngine(model, params, batch_size=2, max_seq_len=64,
+                           chunk_steps=3, telemetry=tel)
+    reqs = [Request(uid=i, prompt=(jnp.arange(4 + 2 * i) + i)
+                    % cfg.vocab_size, max_new_tokens=3 + i)
+            for i in range(5)]
+    results = eng.generate(reqs)
+    tel.close()
+    return path, reg, eng, results
+
+
+class TestRealTrace:
+    def test_every_request_has_a_path(self, traced_run):
+        path, _reg, _eng, results = traced_run
+        analysis = ta.analyze(path)
+        assert (sorted(p.uid for p in analysis.requests)
+                == sorted(r.uid for r in results))
+        for rp in analysis.requests:
+            assert rp.status == "ok"
+            assert rp.queue_wait_s >= 0
+            assert rp.prefill_s >= 0
+            assert rp.decode_s >= 0
+            assert 0 <= rp.stall_s <= rp.decode_s + 1e-9
+            # queue → prefill → decode must tile the end-to-end wall
+            # (stall is an attribution WITHIN decode, not a 4th segment)
+            parts = rp.breakdown()
+            assert (parts["queue_wait_s"] + parts["prefill_s"]
+                    + parts["decode_s"]) == pytest.approx(rp.e2e_s,
+                                                          abs=1e-9)
+
+    def test_crosscheck_matches_registry(self, traced_run):
+        """ACCEPTANCE: the analyzer and the registry tell ONE story."""
+        path, reg, _eng, _results = traced_run
+        analysis = ta.analyze(path)
+        cross = analysis.crosscheck(reg, engine="continuous")
+        assert cross["matches"], cross
+
+    def test_occupancy_matches_engine_stats(self, traced_run):
+        path, _reg, eng, _results = traced_run
+        analysis = ta.analyze(path)
+        assert analysis.occupancy == pytest.approx(
+            eng.stats["occupancy"], rel=1e-9)
+
+    def test_slo_table_quantiles_ordered(self, traced_run):
+        path, _reg, _eng, _results = traced_run
+        table = ta.analyze(path).slo_table()
+        for metric, row in table.items():
+            assert row["count"] > 0, metric
+            assert row["p50"] <= row["p90"] <= row["p99"]
+
+    def test_render_is_complete(self, traced_run):
+        path, _reg, _eng, _results = traced_run
+        analysis = ta.analyze(path)
+        text = ta.render(analysis)
+        for needle in ("timeline", "SLO", "ttft_s", "critical path",
+                       "occupancy"):
+            assert needle in text, f"render lacks {needle}"
+
+    def test_to_dict_schema(self, traced_run):
+        path, _reg, _eng, _results = traced_run
+        doc = ta.analyze(path).to_dict()
+        assert doc["schema"] == 1
+        assert doc["summary"]["requests"] == 5
+        assert len(doc["requests"]) == 5
+
+
+class TestSyntheticTrace:
+    def _events(self):
+        # two requests through one engine: uid 0 waits 1s, prefills 0.5s,
+        # decodes 2s of which chunks cover 1.5s (stall 0.5s)
+        return [
+            {"name": "enqueue", "uid": 0, "order": 0, "ts": 0.0},
+            {"name": "admit", "uid": 0, "order": 0, "ts": 1.0, "dur": 0.5,
+             "slot": 0, "arrival": 0.0},
+            {"name": "first_token", "uid": 0, "order": 0, "ts": 1.5,
+             "arrival": 0.0},
+            {"name": "decode_chunk", "ts": 1.5, "dur": 1.0, "chunk": 0,
+             "steps": 3, "active": 1, "busy": 3, "batch": 2},
+            {"name": "decode_chunk", "ts": 3.0, "dur": 0.5, "chunk": 1,
+             "steps": 3, "active": 1, "busy": 3, "batch": 2},
+            {"name": "retire", "uid": 0, "order": 0, "status": "completed",
+             "tokens": 6, "ts": 3.5, "t_first": 1.5, "arrival": 0.0},
+        ]
+
+    def test_breakdown_arithmetic(self):
+        analysis = ta.analyze(self._events())
+        (rp,) = analysis.requests
+        assert rp.queue_wait_s == pytest.approx(1.0)
+        assert rp.prefill_s == pytest.approx(0.5)
+        assert rp.decode_s == pytest.approx(2.0)
+        assert rp.stall_s == pytest.approx(0.5)   # gap between the chunks
+        assert rp.e2e_s == pytest.approx(3.5)
+
+    def test_chunked_engine_retires_skipped(self):
+        # chunked-engine retires carry no arrival — no per-request path
+        events = [{"name": "retire", "uid": 9, "order": 0,
+                   "status": "completed", "tokens": 4, "ts": 1.0}]
+        analysis = ta.analyze(events)
+        assert analysis.requests == []
+
+    def test_occupancy_from_chunks(self):
+        analysis = ta.analyze(self._events())
+        # busy 6 of batch·steps 12 slot-steps
+        assert analysis.occupancy == pytest.approx(0.5)
+
+    def test_timeline_marks_events(self):
+        text = ta.analyze(self._events()).timeline(width=40)
+        assert "A" in text and "R" in text
+
+    def test_straggler_rows_collected(self):
+        events = self._events() + [
+            {"name": "straggler", "step": 1, "seconds": 0.9, "median": 0.1,
+             "deviation": 9.0, "ts": 3.0, "engine": "continuous"}]
+        analysis = ta.analyze(events)
+        assert len(analysis.stragglers) == 1
+        assert "!" in analysis.timeline(width=40)
+
+    def test_empty_trace(self):
+        analysis = ta.analyze([])
+        assert analysis.requests == []
+        assert analysis.occupancy == 0.0
+        assert ta.render(analysis)   # renders without raising
+
+
+class TestTracerRoundTrip:
+    def test_straggler_event_survives_jsonl(self, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        tracer = Tracer(path)
+        tracer.event("straggler", ts=1.0, engine="speculative", step=3,
+                     seconds=0.5, median=0.05, deviation=10.0)
+        tracer.close()
+        analysis = ta.analyze(path)
+        (s,) = analysis.stragglers
+        assert s["engine"] == "speculative"
+        assert s["deviation"] == 10.0
